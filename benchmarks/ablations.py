@@ -1,0 +1,179 @@
+"""Paper-appendix ablations, one function per table/figure:
+
+* Table 11 — output-quantization cost (O8 vs no O8): small drop only.
+* Fig. 5 / Table 12 — noise-injection magnitude/type trade-off.
+* Table 13 — clipping vs noise: clipping contributes more robustness.
+* Table 10 — distillation vs CE re-training: KD wins.
+* Table 7  — token-count scaling trend (more KD steps → better).
+* App. B.1 — data-generation strategies SSS/RGS/SGS parity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.analog import AnalogConfig
+from repro.data.synthetic import GenConfig, generate_synthetic
+from repro.eval.harness import NoiseSpec, evaluate
+from repro.train.recipes import distill_recipe
+from repro.train.train_step import TrainConfig
+
+from benchmarks import common
+
+
+def _distill(suite, acfg, steps=150, tokens=None, tcfg=None, seed=0):
+    tcfg = tcfg or TrainConfig(peak_lr=5e-4, total_steps=steps,
+                               kd_temperature=2.0)
+    toks = tokens if tokens is not None else suite["tokens"]
+    out, _ = distill_recipe(suite["teacher"], suite["labels"], suite["cfg"],
+                            toks, acfg=acfg, tcfg=tcfg, batch_size=32,
+                            num_steps=steps, seed=seed)
+    return out
+
+
+def _avg(suite, params, acfg, noise=None, seeds=5):
+    tasks = common.eval_tasks(suite["corpus"])
+    spec = NoiseSpec("hw") if noise else NoiseSpec()
+    return evaluate(params, suite["labels"], suite["cfg"], acfg, tasks,
+                    spec, seeds=seeds)["avg"]["mean"]
+
+
+def table11_output_quant():
+    suite = common.get_suite()
+    rows = {}
+    for label, oq in (("O8", True), ("noO", False)):
+        acfg = dataclasses.replace(common.ANALOG, output_quant=oq)
+        m = _distill(suite, acfg)
+        rows[label] = (_avg(suite, m, acfg), _avg(suite, m, acfg, "hw"))
+    drop_clean = rows["noO"][0] - rows["O8"][0]
+    drop_noisy = rows["noO"][1] - rows["O8"][1]
+    common.bench_row("table11.output_quant", 0.0,
+                     f"clean_O8={rows['O8'][0]:.4f} "
+                     f"clean_noO={rows['noO'][0]:.4f} "
+                     f"o8_cost_clean={drop_clean:.4f} "
+                     f"o8_cost_noisy={drop_noisy:.4f} "
+                     f"o8_cheap={abs(drop_clean) < 0.05}")
+    return rows
+
+
+def fig5_noise_magnitude():
+    suite = common.get_suite()
+    curve = {}
+    for gamma in (0.0, 0.02, 0.08):
+        acfg = dataclasses.replace(common.ANALOG, gamma_weight=gamma,
+                                   train_noise=gamma > 0)
+        m = _distill(suite, acfg)
+        curve[gamma] = (_avg(suite, m, acfg), _avg(suite, m, acfg, "hw"))
+        common.bench_row(f"fig5.gamma{gamma:g}", 0.0,
+                         f"clean={curve[gamma][0]:.4f} "
+                         f"noisy={curve[gamma][1]:.4f} "
+                         f"gap={curve[gamma][0] - curve[gamma][1]:.4f}")
+    # claim: training noise shrinks the clean→noisy gap
+    gap0 = curve[0.0][0] - curve[0.0][1]
+    gap2 = curve[0.02][0] - curve[0.02][1]
+    common.bench_row("fig5.claims", 0.0,
+                     f"gap_no_noise={gap0:.4f} gap_gamma02={gap2:.4f} "
+                     f"noise_helps_robustness={gap2 <= gap0 + 0.02}")
+    return curve
+
+
+def table12_noise_type():
+    suite = common.get_suite()
+    rows = {}
+    for label, gamma, beta in (("additive", 0.02, 0.0),
+                               ("affine", 0.02, 0.06),
+                               ("multiplicative", 0.0, 0.08)):
+        acfg = dataclasses.replace(common.ANALOG, gamma_weight=gamma,
+                                   beta_mult=beta,
+                                   train_noise=(gamma + beta) > 0)
+        m = _distill(suite, acfg)
+        rows[label] = _avg(suite, m, acfg, "hw")
+        common.bench_row(f"table12.{label}", 0.0,
+                         f"noisy_avg={rows[label]:.4f}")
+    common.bench_row(
+        "table12.claims", 0.0,
+        f"additive_sufficient="
+        f"{rows['additive'] >= rows['affine'] - 0.03}")
+    return rows
+
+
+def table13_clipping_vs_noise():
+    suite = common.get_suite()
+    base = dataclasses.replace(common.ANALOG, train_noise=False,
+                               alpha_clip=1e9)      # no clip, no noise
+    clip_only = dataclasses.replace(common.ANALOG, train_noise=False)
+    both = common.ANALOG
+    rows = {}
+    for label, acfg in (("neither", base), ("clipping", clip_only),
+                        ("clip+noise", both)):
+        m = _distill(suite, acfg)
+        rows[label] = _avg(suite, m, acfg, "hw")
+        common.bench_row(f"table13.{label}", 0.0,
+                         f"noisy_avg={rows[label]:.4f}")
+    common.bench_row(
+        "table13.claims", 0.0,
+        f"clip_gain={rows['clipping'] - rows['neither']:.4f} "
+        f"noise_extra={rows['clip+noise'] - rows['clipping']:.4f} "
+        f"combination_best="
+        f"{rows['clip+noise'] >= max(rows['neither'], rows['clipping']) - 0.02}")
+    return rows
+
+
+def table10_distill_vs_ce():
+    suite = common.get_suite()
+    kd = _distill(suite, common.ANALOG)
+    ce = _distill(suite, common.ANALOG,
+                  tcfg=TrainConfig(peak_lr=5e-4, total_steps=150,
+                                   kd_beta=0.0, ce_weight=1.0))
+    a_kd = _avg(suite, kd, common.ANALOG)
+    a_ce = _avg(suite, ce, common.ANALOG)
+    common.bench_row("table10.distill_vs_ce", 0.0,
+                     f"kd={a_kd:.4f} ce={a_ce:.4f} "
+                     f"distill_wins={a_kd >= a_ce - 0.02}")
+    return {"kd": a_kd, "ce": a_ce}
+
+
+def table7_token_scaling():
+    suite = common.get_suite()
+    rows = {}
+    for steps in (40, 150, 300):
+        m = _distill(suite, common.ANALOG, steps=steps)
+        rows[steps] = _avg(suite, m, common.ANALOG, "hw")
+        common.bench_row(f"table7.steps{steps}", 0.0,
+                         f"noisy_avg={rows[steps]:.4f}")
+    common.bench_row("table7.claims", 0.0,
+                     f"more_tokens_help={rows[300] >= rows[40] - 0.02}")
+    return rows
+
+
+def b1_generation_strategies():
+    suite = common.get_suite()
+    key = jax.random.PRNGKey(3)
+    rows = {}
+    for strat in ("sss", "rgs", "sgs"):
+        toks = generate_synthetic(suite["teacher"], suite["cfg"], key, 256,
+                                  33, GenConfig(strategy=strat),
+                                  batch_size=64)
+        m = _distill(suite, common.ANALOG, tokens=toks)
+        rows[strat] = _avg(suite, m, common.ANALOG)
+        common.bench_row(f"b1.{strat}", 0.0, f"clean_avg={rows[strat]:.4f}")
+    common.bench_row("b1.claims", 0.0,
+                     f"sss_competitive={rows['sss'] >= max(rows.values()) - 0.05}")
+    return rows
+
+
+def run():
+    table11_output_quant()
+    fig5_noise_magnitude()
+    table12_noise_type()
+    table13_clipping_vs_noise()
+    table10_distill_vs_ce()
+    table7_token_scaling()
+    b1_generation_strategies()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,128 @@
+"""Analytic parameter / FLOP model per (arch × shape) cell.
+
+``MODEL_FLOPS`` follows the standard convention: 6·N·D for training
+(fwd 2ND + bwd 4ND), 2·N·D for inference, with N = *active* non-embedding
+params per token (MoE counts top-k experts only) — §Roofline's
+"useful compute". Attention-score FLOPs (2·B·S²·H·hd per layer, causal ÷2)
+are reported separately: they are real work but not part of 6·N·D.
+"""
+
+from __future__ import annotations
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def param_counts(cfg: ArchConfig) -> dict:
+    """Analytic parameter counts (exact for this codebase's param shapes)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    attn = (d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+            + cfg.num_heads * hd * d) if cfg.num_heads else 0
+    dense_ffn = (3 * d * cfg.d_ff if cfg.act == "silu"
+                 else 2 * d * cfg.d_ff) if cfg.d_ff else 0
+    expert_ffn = 3 * d * cfg.d_ff
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = cfg.d_inner
+        gn = cfg.ssm_groups * cfg.ssm_state
+        mamba = (d * (2 * d_inner + 2 * gn + cfg.ssm_heads)
+                 + d_inner * d)
+    else:
+        mamba = 0
+
+    total = active = 0
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        total += attn if kind == "attn" else mamba
+        active += attn if kind == "attn" else mamba
+        fk = cfg.ffn_kind(i)
+        if fk == "dense":
+            total += dense_ffn
+            active += dense_ffn
+        elif fk == "moe":
+            total += cfg.num_experts * expert_ffn + d * cfg.num_experts
+            active += cfg.top_k * expert_ffn + d * cfg.num_experts
+    head = 0 if cfg.tie_embeddings else d * cfg.padded_vocab * (
+        cfg.num_codebooks if cfg.family == "audio" else 1)
+    embed = cfg.padded_vocab * d if cfg.family != "audio" \
+        else cfg.num_codebooks * cfg.vocab_size * d
+    return {"total": total + head, "active": active + head,
+            "embed": embed, "attn_per_layer": attn,
+            "n_attn_layers": sum(cfg.layer_kind(i) == "attn"
+                                 for i in range(cfg.num_layers))}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Global MODEL_FLOPS for one cell (+ attention-score FLOPs)."""
+    p = param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    n_attn = p["n_attn_layers"]
+    hd = cfg.head_dim
+
+    if shape.kind == "train":
+        d_tokens = b * s
+        mf = 6.0 * p["active"] * d_tokens
+        # causal attention scores+values, fwd(2) + bwd(4): 6 · B·S²/2·H·hd·2
+        attn = 6.0 * n_attn * b * (s * s / 2) * cfg.num_heads * hd * 2
+    elif shape.kind == "prefill":
+        d_tokens = b * s
+        mf = 2.0 * p["active"] * d_tokens
+        attn = 2.0 * n_attn * b * (s * s / 2) * cfg.num_heads * hd * 2
+    else:  # decode: one token vs seq_len cache
+        d_tokens = b
+        mf = 2.0 * p["active"] * d_tokens
+        attn = 2.0 * n_attn * b * s * cfg.num_heads * hd * 2
+    return {"model_flops": mf, "attn_flops": attn, "tokens": d_tokens,
+            **p}
+
+
+def hw_bytes(cfg: ArchConfig, shape: ShapeConfig, dtype_bytes=2) -> dict:
+    """Minimum-traffic estimates used by the napkin math in §Perf."""
+    p = param_counts(cfg)
+    if shape.kind == "decode":
+        kv = (2 * p["n_attn_layers"] * shape.global_batch * shape.seq_len
+              * cfg.num_kv_heads * cfg.head_dim * dtype_bytes)
+        return {"weights": p["total"] * dtype_bytes, "kv_cache": kv}
+    return {"weights": p["total"] * dtype_bytes, "kv_cache": 0}
+
+
+def analytic_hbm_bytes(cfg: ArchConfig, shape: ShapeConfig, chips: int,
+                       accum: int = 4, dtype_bytes: int = 2,
+                       teacher: bool = True) -> float:
+    """Lower-bound per-device HBM traffic for one step of this cell.
+
+    Counts only irreducible movement (perfect on-chip fusion):
+      * weights streamed once per pass (fwd / bwd / remat-fwd; + teacher fwd),
+      * optimizer state read+write + f32 grads read+write (train),
+      * layer-boundary activations (residual stream) per microbatch,
+      * the KV cache (decode reads it once; prefill writes it once).
+    The HLO-derived figure is the matching *upper* bound (no fusion across
+    top-level ops); real TPU traffic lands between the two.
+    """
+    p = param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    w_dev = p["total"] * dtype_bytes / chips
+    kv = hw_bytes(cfg, shape)["kv_cache"] / chips
+
+    if shape.kind == "train":
+        passes = 3 + (1 if teacher else 0)        # fwd+bwd+remat (+teacher)
+        weights = w_dev * passes * accum + (2 if teacher else 1) * w_dev
+        opt = p["total"] * 4 / chips * 6          # m,v rw + grads rw (f32)
+        act = (b / chips) * s * d * dtype_bytes * cfg.num_layers * 3 \
+            * (2 if teacher else 1)
+        return weights + opt + act
+    if shape.kind == "prefill":
+        act = (b / chips) * s * d * dtype_bytes * cfg.num_layers
+        return w_dev + act + kv                    # cache written once
+    # decode: weights + full cache read once per token
+    act = (b / chips) * d * dtype_bytes * cfg.num_layers
+    return w_dev + kv + act
+
+
+if __name__ == "__main__":
+    for arch in ("qwen2.5-32b", "dbrx-132b", "jamba-v0.1-52b",
+                 "mamba2-130m"):
+        cfg = get_config(arch)
+        p = param_counts(cfg)
+        print(f"{arch:20s} total={p['total'] / 1e9:.2f}B "
+              f"active={p['active'] / 1e9:.2f}B")

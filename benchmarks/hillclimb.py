@@ -1,0 +1,96 @@
+"""§Perf hillclimbing driver for the three chosen cells.
+
+Each variant re-lowers + re-compiles one cell with a perf change and records
+the trip-count-aware roofline terms next to the paper-faithful baseline.
+Variants (cumulative where noted):
+
+  base      — paper-faithful baseline (already in artifacts, tag="")
+  v1_sched  — pregather_params + fused_accum (hoist FSDP all-gather out of
+              the microbatch loop; device-local grad accumulation)
+  v2_remat  — v1 + remat='nothing' (minimum live activations; trades
+              recompute FLOPs for HBM fit)
+  v3_moehint— (MoE cells; the buf shard_hints are already live in moe.py —
+              v1/v2 runs include them, the *baseline* artifacts predate
+              them, so v1 vs base also shows their effect)
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen2.5 --variant v1
+Artifacts: benchmarks/artifacts/dryrun/<arch>__train_4k__single__<tag>.json
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+CELLS = {
+    "qwen2.5": "qwen2.5-32b",
+    "qwen3moe": "qwen3-moe-30b-a3b",
+    "dbrx": "dbrx-132b",
+}
+
+VARIANTS = {
+    # round 1 bundles (REFUTED — kept for the §Perf log)
+    "v1": {"tcfg_overrides": {"pregather_params": True,
+                              "fused_accum": True}},
+    "v1a": {"tcfg_overrides": {"pregather_params": True}},
+    "v1b": {"tcfg_overrides": {"fused_accum": True}},
+    # round 2: single factors
+    "remat": {"tcfg_overrides": {"remat": "nothing"}},
+    "nohint": {"rules_override": {"moe_buf": None}},       # forces replication (refuted)
+    "remat_nohint": {"tcfg_overrides": {"remat": "nothing"},
+                     "rules_override": {"moe_buf": None}},
+    "hintskip_remat": {"tcfg_overrides": {"remat": "nothing"},
+                       "rules_override": {"moe_buf": "skip"}},
+    "hintskip_remat_accum8": {"tcfg_overrides": {"remat": "nothing"},
+                              "rules_override": {"moe_buf": "skip"},
+                              "accum_steps": 8},
+    "accum8_remat": {"tcfg_overrides": {"remat": "nothing"},
+                     "accum_steps": 8},
+    "accum16_remat": {"tcfg_overrides": {"remat": "nothing"},
+                      "accum_steps": 16},
+    # round 4: grad sharding (reduce-scatter + sliced f32 optimizer math)
+    "r4": {"tcfg_overrides": {"remat": "nothing", "shard_grads": True},
+           "accum_steps": 8},
+    "r4_hintskip": {"tcfg_overrides": {"remat": "nothing",
+                                       "shard_grads": True},
+                    "rules_override": {"moe_buf": "skip"},
+                    "accum_steps": 8},
+    "r4_accum16": {"tcfg_overrides": {"remat": "nothing",
+                                      "shard_grads": True},
+                   "accum_steps": 16},
+    # round 5: de-fused q/k/v projections (kills split-reshard permutes)
+    "r5_qkvsplit": {"tcfg_overrides": {"remat": "nothing"},
+                    "arch_overrides": {"fused_qkv": False},
+                    "accum_steps": 8},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--attr", action="store_true",
+                    help="also print collective attribution")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+    from repro.launch.hlo_analysis import attribute_collectives
+
+    arch = CELLS[args.cell]
+    rec = dryrun.run_cell(arch, "train_4k", "single", tag=args.variant,
+                          **VARIANTS[args.variant])
+    path = dryrun.cell_path(arch, "train_4k", "single", args.variant)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    an = rec["analysis"]
+    print(f"[hillclimb] {arch} train_4k single {args.variant}: "
+          f"flops={an['flops']:.3e} coll={an['collective_total_bytes']:.3e} "
+          f"temp={rec['memory']['temp_size_in_bytes'] / 2**30:.1f}GiB")
+    print("  breakdown:", {k: f"{v/1e9:.0f}GB"
+                           for k, v in an["collective_bytes"].items() if v})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Kernel microbenchmarks.
+
+Wall-times on this CPU container time the *interpret-mode* kernels (validity:
+functional, not perf) and the jnp reference path the models actually execute
+on CPU; the TPU-perf statement is the derived bytes/FLOPs model:
+
+    analog_matmul fusion saves 2 HBM round-trips of the activation tensor and
+    1 of the pre-activation vs the unfused DAC→MVM→ADC pipeline;
+    int4_matmul halves weight bandwidth vs bf16 (decode is weight-bound).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import rtn_quantize
+from repro.kernels import ops, ref
+from repro.kernels.ref import pack_int4
+
+from benchmarks import common
+
+
+def _mm_case(m, k, n, key):
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.05
+    beta = jnp.float32(3.0)
+    bound = 12.0 * beta * jnp.max(jnp.abs(w), axis=0)
+    return x, w, beta, bound
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for (m, k, n) in [(256, 512, 512), (512, 2048, 2048)]:
+        x, w, beta, bound = _mm_case(m, k, n, key)
+
+        fused = jax.jit(lambda a, b: ref.analog_matmul_ref(a, b, beta, bound))
+        us, _ = common.timeit(fused, x, w)
+        flops = 2 * m * k * n
+        fused_bytes = 4 * (m * k + k * n + m * n)
+        unfused_bytes = 4 * (3 * m * k + k * n + 3 * m * n)
+        common.bench_row(
+            f"kernel.analog_matmul.{m}x{k}x{n}", us,
+            f"flops={flops:.3e} fused_hbm_bytes={fused_bytes:.3e} "
+            f"unfused_hbm_bytes={unfused_bytes:.3e} "
+            f"traffic_saving={unfused_bytes / fused_bytes:.2f}x")
+
+        w_int, scale = rtn_quantize(w, 4)
+        wp = pack_int4(w_int)
+        i4 = jax.jit(lambda a, b: ref.int4_matmul_ref(a, b, scale[0]))
+        us, _ = common.timeit(i4, x, wp)
+        common.bench_row(
+            f"kernel.int4_matmul.{m}x{k}x{n}", us,
+            f"weight_bytes_bf16={2 * k * n:.3e} "
+            f"weight_bytes_int4={k * n // 2:.3e} bw_saving=4.00x")
+
+    # SSD: chunked (matmul-rich) vs sequential-scan reference
+    bh, s, p, nst = 8, 512, 64, 64
+    kk = jax.random.split(key, 5)
+    xs = jax.random.normal(kk[0], (bh, s, p))
+    dt = jax.nn.softplus(jax.random.normal(kk[1], (bh, s)) * 0.5)
+    a = -jnp.exp(jax.random.normal(kk[2], (bh,)) * 0.3)
+    b = jax.random.normal(kk[3], (bh, s, nst)) * 0.3
+    c = jax.random.normal(kk[4], (bh, s, nst)) * 0.3
+
+    chunked = jax.jit(lambda *t: ops.ssd_chunked_jnp(*t, chunk=128))
+    us_c, _ = common.timeit(chunked, xs, dt, a, b, c)
+    seq = jax.jit(ref.ssd_ref)
+    us_s, _ = common.timeit(seq, xs, dt, a, b, c)
+    common.bench_row(
+        f"kernel.ssd_chunked.{bh}x{s}x{p}", us_c,
+        f"sequential_us={us_s:.1f} speedup_vs_scan={us_s / us_c:.2f}x "
+        f"(chunked form maps intra-chunk work onto the MXU)")
+
+    # interpret-mode kernel execution (functional check timing, CPU)
+    x, w, beta, bound = _mm_case(128, 256, 256, key)
+    us, _ = common.timeit(
+        lambda: ops.analog_matmul(x, w, beta, bound, force_kernel=True),
+        warmup=1, iters=1)
+    common.bench_row("kernel.analog_matmul.interpret_mode", us,
+                     "pallas interpret=True (correctness path on CPU)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,136 @@
+"""§Roofline: three-term roofline per (arch × shape) from dry-run artifacts.
+
+    t_compute    = HLO_FLOPs_per_device / 197 TF/s          (bf16 MXU peak)
+    t_memory     = HBM_bytes_per_device / 819 GB/s
+    t_collective = collective_bytes_per_device / 50 GB/s    (per-link ICI)
+
+All three use the *trip-count-aware* static HLO analysis (repro.launch.
+hlo_analysis); the per-device HLO module is what SPMD partitioning left on
+one chip, so terms are per-chip seconds. Conventions / caveats:
+
+* collective seconds assume one 50 GB/s link serializes all transfers —
+  conservative by ≤2x (bidirectional rings) — and all-reduce moves ~2x its
+  payload (ring), folded in below.
+* HBM bytes are fusion-boundary traffic (operands+results of non-fused ops):
+  an upper bound that ignores buffer reuse in L1/registers.
+* MFU-proxy score = t_useful / max(t_compute, t_memory, t_collective),
+  where t_useful = MODEL_FLOPS_per_device / peak — the §Perf score.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+from benchmarks import flops as F
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+CHIPS = {"single": 256, "multi": 512}
+HBM_CAP = 16 * 2 ** 30     # v5e HBM per chip
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("tag", "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "status": rec.get("error", "error")}
+    chips = CHIPS[rec["mesh"]]
+    an = rec["analysis"]
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mf = F.model_flops(cfg, shape)
+
+    t_comp = an["flops"] / PEAK_FLOPS
+    # memory term bracketed: analytic minimum traffic (perfect fusion) vs
+    # HLO fusion-boundary traffic (no cross-op fusion; CPU-lowered HLO is
+    # far less fused than TPU, so the truth sits between the bounds)
+    t_mem_hi = an["hbm_bytes"] / HBM_BW
+    t_mem_lo = F.analytic_hbm_bytes(cfg, shape, chips) / HBM_BW
+    t_mem = (t_mem_lo * t_mem_hi) ** 0.5          # geometric midpoint
+    cb = an["collective_bytes"]
+    wire = (2.0 * cb.get("all-reduce", 0)      # ring all-reduce ≈ 2x payload
+            + cb.get("all-gather", 0) + cb.get("reduce-scatter", 0)
+            + cb.get("all-to-all", 0) + cb.get("collective-permute", 0))
+    t_coll = wire / ICI_BW
+
+    useful = (mf["model_flops"] + mf["attn_flops"]) / chips
+    t_useful = useful / PEAK_FLOPS
+    bottleneck = max(t_comp, t_mem, t_coll)
+    dom = {t_comp: "compute", t_mem: "memory", t_coll: "collective"}[
+        bottleneck]
+    temp = rec["memory"]["temp_size_in_bytes"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok",
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "t_memory_lo_s": t_mem_lo, "t_memory_hi_s": t_mem_hi,
+        "dominant": dom,
+        "model_flops": mf["model_flops"], "attn_flops": mf["attn_flops"],
+        "hlo_flops_dev": an["flops"],
+        "useful_ratio": useful / max(an["flops"], 1.0),
+        "mfu_proxy": t_useful / max(bottleneck, 1e-12),
+        "temp_gib": temp / 2 ** 30,
+        "fits_hbm": temp <= HBM_CAP,
+        "coll_bytes_dev": an["collective_total_bytes"],
+    }
+
+
+def build_table(tag: str = "") -> list[dict]:
+    return [roofline_row(r) for r in load_cells(tag)]
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "dominant | useful/HLO | MFU-proxy | temp GiB | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR: {str(r.get('status'))[:60]} |" + " |" * 7)
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} "
+            f"| {r['t_collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_proxy']:.3f} "
+            f"| {r['temp_gib']:.1f} | {'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = build_table()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        from benchmarks import common
+        common.bench_row(
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0,
+            f"dom={r['dominant']} tc={r['t_compute_s']:.3f} "
+            f"tm={r['t_memory_s']:.3f} tx={r['t_collective_s']:.3f} "
+            f"mfu={r['mfu_proxy']:.3f} fits={r['fits_hbm']}")
+    out = os.path.join(os.path.dirname(__file__), "artifacts",
+                       "roofline.md")
+    with open(out, "w") as f:
+        f.write(markdown_table(rows) + "\n")
+    print(f"# roofline table -> {out} ({len(ok)}/{len(rows)} cells ok)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

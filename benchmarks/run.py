@@ -1,0 +1,67 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Sections:
+  kernels   — microbench + fusion byte models
+  table1    — hw-noise robustness suite (10-seed protocol)
+  fig3      — Gaussian-noise magnitude sweep
+  table3    — RTN int4 digital deployment
+  fig4      — test-time compute scaling (best-of-n + PRM)
+  ablations — Tables 7/10/11/12/13, App. B.1
+  roofline  — three-term roofline per dry-run cell (reads artifacts)
+
+Run everything: ``PYTHONPATH=src python -m benchmarks.run``
+One section:   ``PYTHONPATH=src python -m benchmarks.run --only table1``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--seeds", type=int, default=10)
+    args = ap.parse_args()
+
+    from benchmarks import (ablations, appendix_a, fig3_noise_sweep,
+                            fig4_test_time_scaling, kernel_bench, roofline,
+                            table1_robustness, table3_rtn)
+
+    sections = {
+        "kernels": kernel_bench.run,
+        "table1": lambda: table1_robustness.run(seeds=args.seeds),
+        "fig3": fig3_noise_sweep.run,
+        "table3": table3_rtn.run,
+        "fig4": fig4_test_time_scaling.run,
+        "ablations": ablations.run,
+        "appendixA": appendix_a.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            failures.append(name)
+            print(f"{name}.FAILED,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        # drop compiled executables between sections: the XLA-CPU ORC JIT
+        # accumulates one dylib per compilation and eventually fails to
+        # materialize symbols (~hundreds of train-step variants per session)
+        import jax
+        jax.clear_caches()
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Core analog-foundation-model ops (the paper's contribution)."""
+
+from repro.core.analog import (AnalogConfig, AnalogCtx, analog_linear,
+                               init_linear, linear_labels, noisy_matmul,
+                               perturb_analog_weights, quantize_for_digital)
+from repro.core.clipping import clip_tree, clip_weight, kurtosis
+from repro.core.noise import (apply_eval_noise, gaussian_weight_noise,
+                              pcm_hermes_noise, pcm_hermes_sigma)
+from repro.core.quant import (dynamic_input_quantize, input_quantize,
+                              output_quantize, rtn_dequantize, rtn_quantize,
+                              round_ste, weight_fake_quant)
+
+__all__ = [
+    "AnalogConfig", "AnalogCtx", "analog_linear", "init_linear",
+    "linear_labels", "noisy_matmul", "perturb_analog_weights",
+    "quantize_for_digital", "clip_tree", "clip_weight", "kurtosis",
+    "apply_eval_noise", "gaussian_weight_noise", "pcm_hermes_noise",
+    "pcm_hermes_sigma", "dynamic_input_quantize", "input_quantize",
+    "output_quantize", "rtn_dequantize", "rtn_quantize", "round_ste",
+    "weight_fake_quant",
+]

@@ -1,0 +1,262 @@
+"""The analog linear layer — the paper's contribution as a composable JAX op.
+
+``analog_linear`` is the single entry point every projection matmul in every
+model routes through. Depending on :class:`AnalogConfig.mode` it executes:
+
+* ``off``     — plain dense ``y = x @ w + b`` (the FP16/W16 reference path).
+* ``analog``  — the full AIMC forward of the paper:
+                eq. (1) static-input DAC quant (learnable range) →
+                eq. (3) per-channel-max Gaussian weight-noise injection
+                (training only; backward sees noise-free weights) →
+                MVM →
+                eq. (2) globally-static per-column ADC output quant (STE).
+* ``qat``     — LLM-QAT baseline: static input quant + 4-bit per-channel
+                weight fake-quant (STE), no noise, optional output quant.
+* ``di8``     — dynamic per-token input quant (SpinQuant-DI8 baseline) +
+                4-bit weight fake-quant.
+* ``rtn``     — digital deployment: weights round-to-nearest quantized
+                per-channel (Table 3 path); eval only.
+
+Deployment-time *programming* noise (W_hw-noise) is applied once per model
+instance by :func:`perturb_analog_weights` — not inside the forward — matching
+the paper's protocol (10 seeds = 10 simulated chip programmings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise as noise_lib
+from repro.core import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    """Static configuration of the analog/quantized execution mode."""
+
+    mode: str = "off"                  # off | analog | qat | di8 | rtn
+    input_bits: int = 8
+    output_bits: int = 8
+    weight_bits: int = 4               # qat / di8 / rtn modes
+    gamma_weight: float = 0.02         # eq. (3) training-noise magnitude
+    beta_mult: float = 0.0             # eq. (5) multiplicative component
+    out_bound: float = 12.0            # lambda_adc (global; 12 Phi-3, 14 Llama)
+    output_quant: bool = True          # O8 on/off (ablation Table 11)
+    alpha_clip: float = 3.0            # eq. (4) clip strength
+    kappa_init: float = 15.0           # EMA-init multiplier (15 Phi-3, 18 Llama)
+    init_steps: int = 500              # EMA-init phase length
+    range_decay: float = 0.01          # input-range decay (AIHWKIT-Lightning)
+    input_min_percentage: float = 0.95
+    train_noise: bool = True           # noise-injection on/off (ablation C.2)
+    use_pallas: bool = False           # fused TPU kernel (target hardware path)
+
+    @property
+    def is_analog(self) -> bool:
+        return self.mode == "analog"
+
+    @property
+    def quantizes_input(self) -> bool:
+        return self.mode in ("analog", "qat")
+
+
+def _static_field(**kw):
+    return dataclasses.field(metadata=dict(static=True), **kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AnalogCtx:
+    """Per-call dynamic context threaded through the model."""
+
+    key: Optional[jax.Array]           # rng for train-time noise (None at eval)
+    training: bool = _static_field(default=False)
+    collect_stats: bool = _static_field(default=False)
+
+
+def empty_stats() -> dict:
+    return {"x_std": jnp.zeros((), jnp.float32),
+            "x_absmax": jnp.zeros((), jnp.float32),
+            "clip_frac": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Matmul with noise-free backward (paper: "During the backward pass, the
+# noise-free weights are used.")
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def noisy_matmul(x: jax.Array, w: jax.Array, w_noise: jax.Array) -> jax.Array:
+    """``x @ (w + w_noise)`` forward; backward differentiates ``x @ w``."""
+    return jnp.matmul(x, w + w_noise, preferred_element_type=jnp.float32)
+
+
+def _noisy_matmul_fwd(x, w, w_noise):
+    y = jnp.matmul(x, w + w_noise, preferred_element_type=jnp.float32)
+    return y, (x, w)
+
+
+def _noisy_matmul_bwd(res, g):
+    x, w = res
+    in_dim, out_dim = w.shape[-2], w.shape[-1]
+    g32 = g.astype(jnp.float32)
+    dx = jnp.matmul(g32, w.astype(jnp.float32).T).astype(x.dtype)
+    xm = x.reshape(-1, in_dim).astype(jnp.float32)
+    gm = g32.reshape(-1, out_dim)
+    dw = jnp.matmul(xm.T, gm).astype(w.dtype)
+    return dx, dw, jnp.zeros_like(dw)
+
+
+noisy_matmul.defvjp(_noisy_matmul_fwd, _noisy_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction / labeling
+# ---------------------------------------------------------------------------
+
+def init_linear(key: jax.Array, in_dim: int, out_dim: int, *, use_bias: bool,
+                dtype=jnp.float32, scale: float | None = None) -> dict:
+    """Initialize one analog-capable linear site.
+
+    Besides ``kernel``/``bias`` it always carries ``input_range`` (the eq.-1
+    learnable DAC range beta, shape ``(1,)``) so pytree structure is mode-
+    independent (switching ``AnalogConfig.mode`` never reshapes checkpoints).
+    """
+    if scale is None:
+        scale = in_dim ** -0.5
+    p = {"kernel": (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+                    * scale).astype(dtype),
+         "input_range": jnp.full((1,), 3.0, jnp.float32)}
+    if use_bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear_labels(p: dict) -> dict:
+    """Label pytree for one linear site (drives clipping/optimizer policy)."""
+    lab = {"kernel": "analog_weight", "input_range": "input_range"}
+    if "bias" in p:
+        lab["bias"] = "digital"
+    return lab
+
+
+# ---------------------------------------------------------------------------
+# The op
+# ---------------------------------------------------------------------------
+
+def analog_linear(p: dict, x: jax.Array, cfg: AnalogConfig,
+                  ctx: AnalogCtx) -> tuple[jax.Array, dict]:
+    """Apply one analog/quantized linear. Returns ``(y, stats)``.
+
+    ``stats`` feeds the input-range EMA-init and decay rules applied by the
+    trainer after each step (always returned with a fixed structure so it
+    stacks cleanly under ``lax.scan`` over layers).
+    """
+    w = p["kernel"]
+    in_dtype = x.dtype
+    stats = empty_stats()
+
+    if cfg.mode == "off":
+        y = jnp.matmul(x, w.astype(in_dtype), preferred_element_type=jnp.float32)
+        y = y.astype(in_dtype)
+        if "bias" in p:
+            y = y + p["bias"].astype(in_dtype)
+        return y, stats
+
+    # ---- input (DAC) side ----------------------------------------------
+    if cfg.mode in ("analog", "qat", "rtn"):
+        # Table-3 digital deployment is SI8-W4-O8: the RTN path reuses the
+        # learned static input ranges and the global ADC output quantizer.
+        beta = jnp.squeeze(p["input_range"]).astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+        if ctx.collect_stats:
+            stats = {
+                "x_std": jax.lax.stop_gradient(jnp.std(xf)),
+                "x_absmax": jax.lax.stop_gradient(jnp.max(jnp.abs(xf))),
+                "clip_frac": jax.lax.stop_gradient(
+                    jnp.mean((jnp.abs(xf) > beta).astype(jnp.float32))),
+            }
+        x_q = quant.input_quantize(xf, beta, cfg.input_bits)
+    else:  # di8: dynamic per-token ranges (SpinQuant baseline)
+        x_q = quant.dynamic_input_quantize(x.astype(jnp.float32), cfg.input_bits)
+        beta = None
+
+    # ---- weight side ------------------------------------------------------
+    wf = w.astype(jnp.float32)
+    if cfg.mode == "analog":
+        if ctx.training and cfg.train_noise and ctx.key is not None:
+            w_noise = noise_lib.gaussian_weight_noise(
+                ctx.key, wf, cfg.gamma_weight, cfg.beta_mult)
+            w_noise = jax.lax.stop_gradient(w_noise)
+        else:
+            w_noise = jnp.zeros_like(wf)
+        y = noisy_matmul(x_q, wf, w_noise)
+    elif cfg.mode in ("qat", "di8"):
+        w_q = quant.weight_fake_quant(wf, cfg.weight_bits)
+        y = jnp.matmul(x_q, w_q, preferred_element_type=jnp.float32)
+    else:  # rtn
+        w_int, scale = quant.rtn_quantize(wf, cfg.weight_bits)
+        wf = quant.rtn_dequantize(w_int, scale)
+        y = jnp.matmul(x_q, wf, preferred_element_type=jnp.float32)
+
+    # ---- output (ADC) side -----------------------------------------------
+    if cfg.output_quant and cfg.mode in ("analog", "rtn") and beta is not None:
+        col_max = jax.lax.stop_gradient(noise_lib.channel_absmax(wf, axis=0))
+        bound = cfg.out_bound * jax.lax.stop_gradient(beta) * col_max[0]
+        y = quant.output_quantize(y, bound, jnp.float32(cfg.output_bits))
+
+    y = y.astype(in_dtype)
+    if "bias" in p:  # bias added in the digital periphery (FP16)
+        y = y + p["bias"].astype(in_dtype)
+    return y, stats
+
+
+# ---------------------------------------------------------------------------
+# Deployment-time weight perturbation (programming noise / Fig. 3 sweeps)
+# ---------------------------------------------------------------------------
+
+def perturb_analog_weights(params, labels, key: jax.Array, model: str,
+                           gamma: float = 0.0):
+    """Simulate one chip programming: perturb every analog weight once.
+
+    ``model``: ``"hw"`` (PCM Hermes polynomial) or ``"gaussian"`` (Fig.-3
+    sweep at relative magnitude ``gamma``) or ``"none"``.
+    """
+    if model == "none":
+        return params
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    lab_leaves = jax.tree_util.tree_leaves(labels)
+    assert len(leaves) == len(lab_leaves)
+    out = []
+    for i, (leaf, lab) in enumerate(zip(leaves, lab_leaves)):
+        if lab == "analog_weight":
+            k = jax.random.fold_in(key, i)
+            # stacked scan weights [L, in, out]: channel axis is -2 regardless
+            flat = leaf.reshape((-1,) + leaf.shape[-2:])
+            ks = jax.random.split(k, flat.shape[0])
+            pert = jax.vmap(
+                lambda w, kk: noise_lib.apply_eval_noise(kk, w, model, gamma)
+            )(flat, ks)
+            out.append(pert.reshape(leaf.shape))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_for_digital(params, labels, bits: int = 4):
+    """Table-3 path: RTN-quantize every analog weight in place (dequantized
+    float carrier; the packed-int4 kernel consumes ``rtn_quantize`` output
+    directly on the serving path)."""
+    def _q(label, p):
+        if label == "analog_weight":
+            flat = p.reshape((-1,) + p.shape[-2:])
+            w_int, scale = jax.vmap(
+                lambda w: quant.rtn_quantize(w, bits))(flat)
+            deq = jax.vmap(quant.rtn_dequantize)(w_int, scale)
+            return deq.reshape(p.shape).astype(p.dtype)
+        return p
+
+    return jax.tree_util.tree_map(_q, labels, params)

@@ -1,0 +1,46 @@
+"""Iterative weight clipping (paper eq. 4).
+
+After *every* optimizer step, each output channel of every analog weight is
+clamped to ``±alpha * std(channel)``. The paper's central ablation (App. C.3,
+Table 13) shows this contributes more robustness (+2.52%) than noise injection
+(+0.52%); it also drives the weight distribution toward uniform (Fig. 6),
+which is why the same models quantize well with plain RTN (Table 3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_weight(w: jax.Array, alpha: float, axis: int = 0) -> jax.Array:
+    """Per-channel clamp to ``alpha`` standard deviations (paper eq. 4)."""
+    std = jnp.std(w.astype(jnp.float32), axis=axis, keepdims=True)
+    zeta = (alpha * std).astype(w.dtype)
+    return jnp.clip(w, -zeta, zeta)
+
+
+def clip_tree(params, labels, alpha: float, axis: int = 0):
+    """Apply eq. (4) to every leaf labeled ``"analog_weight"``.
+
+    ``labels`` is a pytree of strings with the same structure as ``params``
+    (see :mod:`repro.models.model` for the labeling convention).
+    """
+    def _clip(label, p):
+        if label == "analog_weight":
+            # Stacked scan-over-layers weights have a leading layer dim; the
+            # channel axis is always the last one and reduction covers all
+            # others *within a layer*, i.e. axis=-2 for 2-D [in, out] and
+            # axis=-2 for stacked [L, in, out] alike.
+            return clip_weight(p, alpha, axis=-2)
+        return p
+
+    return jax.tree_util.tree_map(_clip, labels, params)
+
+
+def kurtosis(w: jax.Array) -> jax.Array:
+    """Excess-free kurtosis of a weight tensor (Fig. 6b diagnostic)."""
+    w = w.astype(jnp.float32).reshape(-1)
+    mu = jnp.mean(w)
+    var = jnp.mean((w - mu) ** 2)
+    return jnp.mean((w - mu) ** 4) / jnp.maximum(var ** 2, 1e-12)

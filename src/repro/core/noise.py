@@ -1,0 +1,83 @@
+"""Weight-noise models: training-time injection (paper eqs. 3/5) and the
+hardware-realistic PCM programming-noise model (paper Appendix E.3).
+
+All noise is *per output channel* scaled: with weights stored ``[in, out]``,
+channel statistics reduce over ``axis=0`` (the crossbar column).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def channel_absmax(w: jax.Array, axis: int = 0) -> jax.Array:
+    return jnp.maximum(jnp.max(jnp.abs(w), axis=axis, keepdims=True), 1e-12)
+
+
+def gaussian_weight_noise(key: jax.Array, w: jax.Array, gamma: float,
+                          beta_mult: float = 0.0, axis: int = 0) -> jax.Array:
+    """Training-noise term of paper eq. (5) (eq. (3) when ``beta_mult == 0``).
+
+    ``noise = (gamma * max|W_col| + beta_mult * |W|) * tau``, ``tau ~ N(0, I)``.
+
+    The returned value is the *additive term* only; callers combine it as
+    ``w + stop_gradient(noise)`` so the backward pass sees noise-free weights
+    (paper: "During the backward pass, the noise-free weights are used").
+    The paper's final models use the constant/additive form: the multiplicative
+    component "did not contribute any robustness" (App. C.2).
+    """
+    tau = jax.random.normal(key, w.shape, dtype=jnp.float32)
+    sigma = gamma * channel_absmax(w, axis=axis)
+    if beta_mult:
+        sigma = sigma + beta_mult * jnp.abs(w)
+    return (sigma * tau).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Hardware-realistic PCM noise (IBM Hermes chip, paper Appendix E.3)
+# ---------------------------------------------------------------------------
+
+#: third-degree polynomial fitted to the 64-core PCM chip's programming error,
+#: sigma in *percent of the per-channel max weight* as a function of the weight
+#: magnitude expressed in percent of the per-channel max (two devices per
+#: weight already folded into the fit). sigma(0) = 2.11% is the additive noise
+#: floor; an exact zero weight is assumed noiseless.
+_PCM_COEFFS = (1.23e-5, -3.06e-3, 2.45e-1, 2.11)
+
+
+def pcm_hermes_sigma(w_pct: jax.Array) -> jax.Array:
+    """sigma (% of channel max) for weights ``w_pct`` in [0, 100] (% of max)."""
+    a3, a2, a1, a0 = _PCM_COEFFS
+    return ((a3 * w_pct + a2) * w_pct + a1) * w_pct + a0
+
+
+def pcm_hermes_noise(key: jax.Array, w: jax.Array, axis: int = 0) -> jax.Array:
+    """Sample hardware-realistic programming noise for ``w`` (W_hw-noise rows).
+
+    Evaluation-time only. Higher conductances get more absolute noise but a
+    better SNR (the additive floor dominates small weights); exact zeros are
+    noiseless (paper §3.2).
+    """
+    wmax = channel_absmax(w, axis=axis)
+    w_pct = 100.0 * jnp.abs(w.astype(jnp.float32)) / wmax
+    sigma = pcm_hermes_sigma(w_pct) / 100.0 * wmax
+    tau = jax.random.normal(key, w.shape, dtype=jnp.float32)
+    noise = jnp.where(w == 0, 0.0, sigma * tau)
+    return noise.astype(w.dtype)
+
+
+def apply_eval_noise(key: jax.Array, w: jax.Array, model: str, gamma: float = 0.0,
+                     axis: int = 0) -> jax.Array:
+    """Perturb weights for a noisy evaluation run.
+
+    ``model``: ``"none"`` | ``"hw"`` (PCM Hermes) | ``"gaussian"`` (per-channel-max
+    additive with magnitude ``gamma``, the Fig.-3 sweep).
+    """
+    if model == "none":
+        return w
+    if model == "hw":
+        return w + pcm_hermes_noise(key, w, axis=axis)
+    if model == "gaussian":
+        return w + gaussian_weight_noise(key, w, gamma, axis=axis)
+    raise ValueError(f"unknown eval noise model: {model!r}")

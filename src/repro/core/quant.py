@@ -1,0 +1,197 @@
+"""Quantization primitives for analog (AIMC) and digital low-precision execution.
+
+Implements the paper's eq. (1) (static input / DAC quantization with learnable
+ranges), eq. (2) (globally-static output / ADC quantization), plus the fake-quant
+building blocks used by the LLM-QAT and RTN/SpinQuant baselines.
+
+Conventions
+-----------
+* Weights are stored ``[in_features, out_features]`` (``y = x @ w``); the paper's
+  "per-channel" therefore means per *column* (axis 0 reduction), matching the
+  per-ADC-column ranges of an AIMC crossbar.
+* All quantizers are symmetric (paper §3: "In all cases, we employ symmetric
+  quantization").
+* Straight-through estimation: ``round`` never receives a gradient; what happens
+  to clip boundaries differs per quantizer and is documented on each function.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> float:
+    """Largest positive integer level of a symmetric ``bits``-bit quantizer."""
+    return float(2 ** (bits - 1) - 1)
+
+
+def round_ste(x: jax.Array) -> jax.Array:
+    """Round-to-nearest with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+# ---------------------------------------------------------------------------
+# eq. (1): static input (DAC) quantization with learnable range beta
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def input_quantize(x: jax.Array, beta: jax.Array, bits: int) -> jax.Array:
+    """Symmetric static-range fake quantization of activations (paper eq. 1).
+
+    ``x_q = beta/Q * round(clamp(x, -beta, beta) * Q/beta)`` with ``Q = 2^(b-1)-1``.
+
+    Gradients (the "custom gradient that favors tight input ranges" of
+    AIHWKIT-Lightning [52], LSQ-style):
+
+    * d/dx: pass-through inside ``[-beta, beta]``, zero outside (clamp STE).
+    * d/dbeta: ``sign(x)`` for clipped elements (growing beta reduces clipping
+      error) **plus** the in-range quantization-error term
+      ``(x_q - x)/beta`` (shrinking beta tightens the grid) — the second term
+      is what pulls ranges tight once clipping is rare.
+    """
+    q = qmax(bits)
+    beta = jnp.maximum(beta, 1e-8)
+    scale = beta / q
+    xc = jnp.clip(x, -beta, beta)
+    return scale * jnp.round(xc / scale)
+
+
+def _input_quantize_fwd(x, beta, bits):
+    q = qmax(bits)
+    beta = jnp.maximum(beta, 1e-8)
+    scale = beta / q
+    xc = jnp.clip(x, -beta, beta)
+    xq = scale * jnp.round(xc / scale)
+    return xq, (x, beta, xq)
+
+
+def _input_quantize_bwd(bits, res, g):
+    x, beta, xq = res
+    inside = (jnp.abs(x) <= beta)
+    dx = jnp.where(inside, g, 0.0).astype(x.dtype)
+    # LSQ-style range gradient.
+    err = jnp.where(inside, (xq - x) / beta, jnp.sign(x))
+    dbeta = jnp.sum(err * g).astype(beta.dtype).reshape(beta.shape)
+    return dx, dbeta
+
+
+input_quantize.defvjp(_input_quantize_fwd, _input_quantize_bwd)
+
+
+def dynamic_input_quantize(x: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """DI8-style dynamic per-token symmetric quantization (baseline only).
+
+    The range is recomputed per token (``max|x|`` along ``axis``) — the paper
+    notes this is expensive in dedicated hardware; it exists here for the
+    SpinQuant-DI8 comparison rows.
+    """
+    q = qmax(bits)
+    beta = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    beta = jnp.maximum(jax.lax.stop_gradient(beta), 1e-8)
+    scale = beta / q
+    return scale * round_ste(jnp.clip(x, -beta, beta) / scale)
+
+
+# ---------------------------------------------------------------------------
+# eq. (2): globally static output (ADC) quantization
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def output_quantize(y: jax.Array, bound: jax.Array, bits_f: jax.Array) -> jax.Array:
+    """Per-column ADC quantization with plain straight-through gradients.
+
+    ``y_q[:, i] = clamp(round(y[:, i] * Q/bound_i) * bound_i/Q, -bound_i, bound_i)``
+
+    where ``bound_i = lambda_adc * beta_input * max|W[:, i]|`` is computed by the
+    caller (it depends on the layer's input range and weight column maxima; the
+    ADC resolution/range multiplier ``lambda_adc`` is *global* across layers —
+    paper §3 and eq. 2). The paper's result is that *simple STE* suffices here
+    (in contrast to RAOQ [38]), so the backward is exact pass-through for ``y``
+    and zero for ``bound``.
+    """
+    q = 2.0 ** (bits_f - 1.0) - 1.0
+    bound = jnp.maximum(bound, 1e-8)
+    scale = bound / q
+    return jnp.clip(scale * jnp.round(y / scale), -bound, bound)
+
+
+def _output_quantize_fwd(y, bound, bits_f):
+    return output_quantize(y, bound, bits_f), None
+
+
+def _output_quantize_bwd(res, g):
+    # Pure STE: gradient flows through untouched (paper: "simple straight-through
+    # estimation"); the bound is a derived, non-trained quantity.
+    return g, None, None
+
+
+output_quantize.defvjp(_output_quantize_fwd, _output_quantize_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Per-channel weight fake-quant (LLM-QAT W4 baseline) and RTN helpers
+# ---------------------------------------------------------------------------
+
+def weight_fake_quant(w: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Per-channel symmetric weight fake quantization with STE (LLM-QAT W4).
+
+    ``axis`` is the reduction axis: with ``w`` stored ``[in, out]`` the default
+    ``axis=0`` yields per-output-channel scales as in the paper.
+    """
+    q = qmax(bits)
+    beta = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    beta = jnp.maximum(jax.lax.stop_gradient(beta), 1e-12)
+    scale = beta / q
+    return scale * round_ste(jnp.clip(w, -beta, beta) / scale)
+
+
+def rtn_quantize(w: jax.Array, bits: int, axis: int = 0):
+    """Round-to-nearest PTQ: returns ``(w_int, scale)`` with per-channel scales.
+
+    Used for the Table-3 digital 4-bit deployment path; ``w_int`` is an int8
+    carrier holding values in ``[-Q, Q]``.
+    """
+    q = qmax(bits)
+    beta = jnp.maximum(jnp.max(jnp.abs(w), axis=axis, keepdims=True), 1e-12)
+    scale = beta / q
+    w_int = jnp.clip(jnp.round(w / scale), -q, q).astype(jnp.int8)
+    return w_int, scale
+
+
+def rtn_dequantize(w_int: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return w_int.astype(dtype) * scale.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Input-range state machinery (EMA init phase + decay rule)
+# ---------------------------------------------------------------------------
+
+def ema_init_update(beta: jax.Array, x_std: jax.Array, step: jax.Array,
+                    kappa: float, init_steps: int, ema: float = 0.9) -> jax.Array:
+    """Input-range update for the first ``init_steps`` forward passes.
+
+    The paper (§3.1, App. D) initializes input ranges with an exponential moving
+    average over ``kappa * std(x)`` with kappa 15–18, i.e. *no* effective clipping
+    early in training ("any activation clipping in the beginning of training
+    hindered convergence").
+    """
+    target = kappa * x_std
+    ema_val = jnp.where(step == 0, target, ema * beta + (1.0 - ema) * target)
+    return jnp.where(step < init_steps, ema_val, beta)
+
+
+def range_decay_update(beta: jax.Array, clip_fraction: jax.Array, step: jax.Array,
+                       decay: float, input_min_percentage: float,
+                       init_steps: int) -> jax.Array:
+    """Post-step multiplicative decay favoring tight ranges (AIHWKIT-Lightning).
+
+    If less than ``1 - input_min_percentage`` of the batch clipped, the range is
+    decayed by ``(1 - decay)``; gradients (from :func:`input_quantize`) push back
+    when clipping starts to hurt.
+    """
+    should_decay = clip_fraction < (1.0 - input_min_percentage)
+    decayed = beta * jnp.where(should_decay, 1.0 - decay, 1.0)
+    return jnp.where(step >= init_steps, decayed, beta)

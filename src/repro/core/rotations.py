@@ -1,0 +1,138 @@
+"""SpinQuant-lite: rotation-based outlier removal for the PTQ baseline.
+
+SpinQuant [37] / QuaRot [49] multiply the residual stream by an orthogonal
+matrix ``R`` (folded into adjacent weight matrices, so inference cost is zero)
+to spread activation outliers across channels before quantization. We implement
+the *random Hadamard* variant (SpinQuant's initialization; its Cayley-learned
+refinement is an optimizer detail) plus the weight-folding transform, and
+verify FP-invariance of the folded model in tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester Hadamard matrix of size ``n`` (power of two), normalized."""
+    assert n & (n - 1) == 0 and n > 0, f"n={n} must be a power of two"
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h / np.sqrt(n)
+
+
+def random_orthogonal(key: jax.Array, n: int) -> jax.Array:
+    """Haar-random orthogonal matrix via QR (for non-power-of-two dims)."""
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    q, r = jnp.linalg.qr(a)
+    return q * jnp.sign(jnp.diagonal(r))[None, :]
+
+
+def random_hadamard(key: jax.Array, n: int) -> jax.Array:
+    """Random-signed Hadamard rotation ``R = H · diag(s)`` (s ∈ {±1}^n).
+
+    Falls back to a Haar-random orthogonal matrix when ``n`` is not a power
+    of two (e.g. d_model = 5120): same variance-spreading effect, exactly
+    orthogonal either way.
+    """
+    if n & (n - 1) == 0:
+        h = jnp.asarray(hadamard_matrix(n))
+        s = jax.random.rademacher(key, (n,), jnp.float32)
+        return h * s[None, :]
+    return random_orthogonal(key, n)
+
+
+def fold_norm_scales(params: dict, cfg) -> dict:
+    """Fold RMSNorm scales into the downstream linear(s), leaving unit-scale
+    norms (SpinQuant/QuaRot prerequisite: a unit-scale RMSNorm commutes
+    exactly with an orthogonal rotation of the residual stream, since
+    ``rms(xR) = rms(x)``).
+
+    Folding map: ln1 → attn.qkv | mixer.in_proj; ln2 → ffn.{gate_up,up}
+    (+ MoE router and batched expert gate_up); final_norm → lm_head.
+    LayerNorm archs (dbrx, musicgen) subtract the mean, which does not
+    commute — rotation for them is approximate (documented; QuaRot's
+    LN→RMSNorm conversion is out of scope).
+    """
+    import jax.numpy as jnp
+
+    def scale_in(site: dict, s: jax.Array) -> dict:
+        # s is [d] (single layer) or [L, d] (scan-stacked); kernels are
+        # [..., d_in, d_out] with matching leading dims
+        out = dict(site)
+        k = site["kernel"].astype(jnp.float32)
+        sb = s.astype(jnp.float32)[..., :, None]
+        if sb.ndim < k.ndim:                      # e.g. MoE [L, E, d, f]
+            sb = sb.reshape(sb.shape[:-2] + (1,) * (k.ndim - sb.ndim)
+                            + sb.shape[-2:])
+        out["kernel"] = (k * sb).astype(site["kernel"].dtype)
+        return out
+
+    def unit(norm: dict) -> dict:
+        return dict(norm, scale=jnp.ones_like(norm["scale"]))
+
+    def fold_layer(layer: dict) -> dict:
+        out = dict(layer)
+        if "ln1" in layer:
+            s = layer["ln1"]["scale"].astype(jnp.float32)
+            if "attn" in layer:
+                attn = dict(layer["attn"])
+                for site in ("qkv", "q", "k", "v"):
+                    if site in attn:
+                        attn[site] = scale_in(attn[site], s)
+                out["attn"] = attn
+            if "mixer" in layer:
+                mixer = dict(layer["mixer"])
+                mixer["in_proj"] = scale_in(mixer["in_proj"], s)
+                out["mixer"] = mixer
+            out["ln1"] = unit(layer["ln1"])
+        if "ln2" in layer and "ffn" in layer:
+            s = layer["ln2"]["scale"].astype(jnp.float32)
+            ffn = dict(layer["ffn"])
+            for k in ("gate_up", "up"):
+                if k in ffn:
+                    ffn[k] = scale_in(ffn[k], s)
+            if "router" in ffn:
+                ffn["router"] = scale_in(ffn["router"], s)
+            out["ffn"] = ffn
+            out["ln2"] = unit(layer["ln2"])
+        return out
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "ln1" in node or ("ln2" in node and "ffn" in node):
+                return fold_layer({k: walk(v) for k, v in node.items()})
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    out = walk(dict(params))
+    if "lm_head" in out:
+        s = out["final_norm"]["scale"].astype(jnp.float32)
+        out["lm_head"] = scale_in(out["lm_head"], s)
+        out["final_norm"] = dict(out["final_norm"],
+                                 scale=jnp.ones_like(out["final_norm"]["scale"]))
+    return out
+
+
+def fold_rotation_into_linear(p: dict, r: jax.Array, side: str) -> dict:
+    """Fold residual rotation ``R`` into one linear site.
+
+    ``side='in'``  : layer consumes the rotated stream → ``W' = Rᵀ W``.
+    ``side='out'`` : layer produces into the rotated stream → ``W' = W R``
+                     (bias rotated too).
+    """
+    out = dict(p)
+    w = p["kernel"]
+    if side == "in":
+        out["kernel"] = (r.T @ w.astype(jnp.float32)).astype(w.dtype)
+    elif side == "out":
+        out["kernel"] = (w.astype(jnp.float32) @ r).astype(w.dtype)
+        if "bias" in p:
+            out["bias"] = (p["bias"].astype(jnp.float32) @ r).astype(p["bias"].dtype)
+    else:
+        raise ValueError(side)
+    return out

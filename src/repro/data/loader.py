@@ -1,0 +1,57 @@
+"""Deterministic, resumable data loader.
+
+Shuffles with a seeded permutation per epoch; iterator state (epoch, cursor)
+is part of the training checkpoint, so a restarted run consumes exactly the
+batches the crashed run would have — a fault-tolerance requirement at fleet
+scale (duplicate/missing batches skew the loss at 1000+ nodes).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class TokenLoader:
+    def __init__(self, tokens: np.ndarray, batch_size: int, *, seed: int = 0,
+                 microbatches: int = 1, drop_last: bool = True):
+        assert tokens.ndim >= 2
+        self.tokens = tokens
+        self.batch_size = batch_size
+        self.microbatches = microbatches
+        self.seed = seed
+        self.epoch = 0
+        self.cursor = 0
+        self._perm = self._permutation(0)
+
+    def _permutation(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + 1315423911 * epoch)
+        return rng.permutation(len(self.tokens))
+
+    # -- checkpointable state ------------------------------------------------
+    def state(self) -> dict:
+        return {"epoch": self.epoch, "cursor": self.cursor,
+                "seed": self.seed}
+
+    def restore(self, state: dict):
+        self.seed = state["seed"]
+        self.epoch = state["epoch"]
+        self.cursor = state["cursor"]
+        self._perm = self._permutation(self.epoch)
+
+    # -- iteration -------------------------------------------------------------
+    def __iter__(self) -> Iterator[np.ndarray]:
+        while True:
+            if self.cursor + self.batch_size > len(self.tokens):
+                self.epoch += 1
+                self.cursor = 0
+                self._perm = self._permutation(self.epoch)
+            idx = self._perm[self.cursor:self.cursor + self.batch_size]
+            self.cursor += self.batch_size
+            batch = self.tokens[idx]
+            if self.microbatches > 1:
+                mb = self.batch_size // self.microbatches
+                batch = batch.reshape(self.microbatches, mb,
+                                      *batch.shape[1:])
+            yield batch

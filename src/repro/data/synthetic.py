@@ -1,0 +1,84 @@
+"""Synthetic data generation — stage 1 of the paper's pipeline (Fig. 2a).
+
+Sequences are sampled from the *teacher model itself*, starting from the BOS
+token, continuing past EOS, chunked to the training sequence length
+(App. B.1). Three strategies:
+
+* ``sss`` — every token from the softmax distribution (the paper's best);
+* ``rgs`` — random first token, next 5 greedy, rest softmax;
+* ``sgs`` — softmax first token, next 5 greedy, rest softmax.
+
+Top-50 truncation mirrors the Llama-3.2 setting; ``filter_low_logprob``
+implements the optional bottom-20% log-prob filtering ablation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import apply as model_apply
+from repro.serve.decode import generate
+
+
+@dataclasses.dataclass(frozen=True)
+class GenConfig:
+    strategy: str = "sss"           # sss | rgs | sgs
+    temperature: float = 1.0
+    top_k: int = 50
+    bos_token: int = 1
+
+
+def generate_synthetic(params, cfg, key: jax.Array, num_seqs: int,
+                       seq_len: int, gen: GenConfig = GenConfig(),
+                       batch_size: int = 16) -> np.ndarray:
+    """Sample ``num_seqs`` sequences of ``seq_len`` tokens from the teacher."""
+    acfg = AnalogConfig(mode="off")
+    chunks = []
+    done = 0
+    while done < num_seqs:
+        b = min(batch_size, num_seqs - done)
+        key, kp, ks = jax.random.split(key, 3)
+        if gen.strategy == "rgs":
+            first = jax.random.randint(kp, (b, 1), 0, cfg.vocab_size)
+            greedy_first = 5
+        else:
+            first = jnp.full((b, 1), gen.bos_token, jnp.int32)
+            greedy_first = 5 if gen.strategy == "sgs" else 0
+        toks = generate(params, cfg, acfg, ks, first, seq_len - 1,
+                        temperature=gen.temperature, top_k=gen.top_k,
+                        greedy_first=greedy_first)
+        chunks.append(np.asarray(jnp.concatenate([first, toks], axis=1)))
+        done += b
+    return np.concatenate(chunks, axis=0)[:num_seqs]
+
+
+def teacher_logits(params, cfg, tokens: jax.Array,
+                   extra_inputs: Optional[dict] = None) -> jax.Array:
+    """Teacher forward for distillation targets (FP, no noise)."""
+    ctx = AnalogCtx(key=None, training=False)
+    inputs = {"tokens": tokens, **(extra_inputs or {})}
+    logits, _, _ = model_apply(params, cfg, AnalogConfig(mode="off"), ctx,
+                               inputs)
+    return jax.lax.stop_gradient(logits)
+
+
+def filter_low_logprob(params, cfg, tokens: np.ndarray,
+                       drop_fraction: float = 0.2,
+                       batch_size: int = 16) -> np.ndarray:
+    """Drop the lowest-log-prob sequences (App. B.1 filtering ablation)."""
+    scores = []
+    for i in range(0, len(tokens), batch_size):
+        tb = jnp.asarray(tokens[i:i + batch_size])
+        logits = teacher_logits(params, cfg, tb[:, :-1])
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(lp, tb[:, 1:, None], axis=-1)[..., 0]
+        scores.append(np.asarray(jnp.mean(ll, axis=1)))
+    scores = np.concatenate(scores)
+    keep = scores.argsort()[int(drop_fraction * len(tokens)):]
+    return tokens[np.sort(keep)]

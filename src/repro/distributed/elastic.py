@@ -1,0 +1,51 @@
+"""Elastic scaling: reshard a training state between meshes.
+
+When a slice dies mid-run (or capacity is added), the job restarts with a
+different ``data``-axis extent. Because all sharding here is GSPMD-declarative,
+elasticity is a *checkpoint transformation*, not a runtime protocol:
+
+    1. the surviving hosts restore the last checkpoint (host arrays),
+    2. ``reshard`` re-places every leaf under the new mesh's NamedShardings,
+    3. the global batch is re-split over the new ``data`` extent (the loader
+       reshapes ``global_batch = data × per_device_batch``), and
+    4. training resumes bit-exactly (property-tested in tests/test_elastic.py).
+
+On real hardware step 2 is ``jax.device_put`` with the new sharding (arrays
+re-slice themselves across the new topology); on the CPU container the same
+code runs against the forced-host-device mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed import sharding as shd
+
+
+def reshard(tree, new_mesh, rules=None, *, zero: bool = True):
+    """Re-place every leaf of ``tree`` for ``new_mesh``. Values unchanged."""
+    rules = rules or shd.default_rules(new_mesh)
+    with shd.activate(new_mesh, rules):
+        specs = shd.zero_spec_tree(tree) if zero else shd.param_spec_tree(tree)
+        shardings = shd.named(specs)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def shrink_batch_plan(global_batch: int, old_data: int, new_data: int):
+    """How the per-device batch changes when the data axis resizes.
+
+    Keeps the *global* batch (and thus the optimizer trajectory) constant by
+    adjusting gradient-accumulation: returns (per_device_batch, accum_steps).
+    """
+    assert global_batch % old_data == 0
+    per_dev = global_batch // old_data
+    if global_batch % new_data == 0:
+        return global_batch // new_data, 1
+    # fall back to accumulation so global batch stays exact
+    accum = 1
+    while (global_batch % (new_data * accum) != 0
+           or (global_batch // (new_data * accum)) < 1):
+        accum += 1
+        if accum > global_batch:
+            raise ValueError("cannot factor global batch over new mesh")
+    return global_batch // (new_data * accum), accum

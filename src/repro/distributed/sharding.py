@@ -1,0 +1,287 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP) for all architectures.
+
+The scheme is MaxText-style: model code annotates activations with *logical*
+axes via :func:`shard_hint`; parameters get PartitionSpecs from a rule table
+keyed by site name. A mesh + rule mapping is activated with
+:func:`activate` (no-op when inactive, so CPU unit tests are unaffected).
+
+Baseline mapping (paper-faithful Megatron TP + DP):
+
+    batch   → ("pod", "data")     heads  → "model"      mlp    → "model"
+    vocab   → "model"             experts→ "model" (EP) embed  → None
+    kv_seq  → "data" only when the batch axis cannot be sharded
+              (long_500k, global_batch=1) — context/sequence sharding.
+
+ZeRO optimizer-state sharding: Adam moments additionally shard their first
+model-unsharded dim over "data" when divisible (the GSPMD equivalent of the
+paper's DeepSpeed ZeRO-2 partitioning).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+_state = threading.local()
+
+
+def _active():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: dict[str, Any]):
+    """Enable shard_hint / spec resolution inside the block."""
+    prev = _active()
+    _state.ctx = {"mesh": mesh, "rules": dict(rules)}
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def default_rules(mesh: Mesh, *, batch_shardable: bool = True,
+                  seq_shard_kv: bool = False) -> dict[str, Any]:
+    pod = ("pod",) if "pod" in mesh.axis_names else ()
+    rules = {
+        "batch": pod + ("data",) if batch_shardable else None,
+        "heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "moe_buf": "model",      # MoE dispatch-buffer hint (hillclimb knob)
+        "embed": None,
+        "seq": None,
+        "kv_seq": ("data",) if seq_shard_kv else None,
+        "kv_seq_model": "model",
+        "zero": "data",
+    }
+    return rules
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def _guard(mesh: Mesh, shape: tuple, axes: tuple) -> tuple:
+    """Sanitize a spec: drop (replicate) any axis whose extent does not
+    divide the dim, and deduplicate mesh axes (a NamedSharding may map each
+    mesh axis to at most one positional dim).
+
+    pjit argument/output shardings require exact divisibility; GSPMD only
+    pads *internal* values. Non-divisible cases in this repo: mamba2-130m's
+    in_proj fan-out (3352) and its 24 SSD heads; everything else divides by
+    construction (vocab is padded to a multiple of 256 in the model)."""
+    out, used = [], set()
+    for dim, ax in zip(shape, axes):
+        names = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        if ax is None or dim % _axis_size(mesh, ax) != 0 or                 any(n in used for n in names):
+            out.append(None)
+        else:
+            out.append(ax)
+            used.update(names)
+    return tuple(out)
+
+
+def resolve(logical: tuple, shape: tuple | None = None) -> P:
+    ctx = _active()
+    assert ctx is not None
+    axes = tuple(ctx["rules"].get(ax) if ax is not None else None
+                 for ax in logical)
+    if shape is not None:
+        axes = _guard(ctx["mesh"], shape, axes)
+    return P(*axes)
+
+
+def shard_hint(x: jax.Array, *logical) -> jax.Array:
+    """Constrain ``x`` to the mesh axes mapped from logical axes. No-op when
+    no mesh is active, or when any logical axis maps to the "skip" sentinel
+    (a true disable — P(None) would instead *force* replication)."""
+    ctx = _active()
+    if ctx is None:
+        return x
+    if x.ndim != len(logical):
+        return x
+    if any(ctx["rules"].get(ax) == "skip" for ax in logical if ax):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], resolve(tuple(logical), x.shape)))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+#: (site, leaf) → logical axes of the *rightmost* dims; leading stacked-layer
+#: dims are unsharded. "M:" prefix marks MoE-expert variants (kernel has a
+#: trailing [E, in, out]).
+_PARAM_RULES = {
+    ("qkv", "kernel"): (None, "heads"),
+    ("qkv", "bias"): ("heads",),
+    ("q", "kernel"): (None, "heads"),
+    ("q", "bias"): ("heads",),
+    ("k", "kernel"): (None, "heads"),
+    ("k", "bias"): ("heads",),
+    ("v", "kernel"): (None, "heads"),
+    ("v", "bias"): ("heads",),
+    ("o", "kernel"): ("heads", None),
+    ("gate_up", "kernel"): (None, "mlp"),
+    ("up", "kernel"): (None, "mlp"),
+    ("up", "bias"): ("mlp",),
+    ("down", "kernel"): ("mlp", None),
+    ("down", "bias"): (None,),
+    # expert-parallel only: the expert dim maps to "model"; mapping d_ff to
+    # "model" as well would double-book the axis (specs must be injective)
+    ("M:gate_up", "kernel"): ("experts", None, None),
+    ("M:down", "kernel"): ("experts", None, None),
+    ("router", "kernel"): (None, None),
+    ("in_proj", "kernel"): (None, "mlp"),
+    ("out_proj", "kernel"): ("mlp", None),
+    ("conv_w", None): (None, "mlp"),
+    ("conv_b", None): ("mlp",),
+    ("gate_norm", None): ("mlp",),
+    ("a_log", None): (None,),
+    ("d_skip", None): (None,),
+    ("dt_bias", None): (None,),
+    ("tokens", None): ("vocab", None),       # embedding table
+    ("codebooks", None): (None, "vocab", None),
+    ("lm_head", "kernel"): (None, "vocab"),
+    ("projector", "kernel"): (None, None),
+}
+
+
+def param_spec_tree(params) -> Any:
+    """PartitionSpec pytree for a model/optimizer param tree."""
+    def walk(node, site: Optional[str], in_moe: bool):
+        if isinstance(node, dict):
+            moe_here = in_moe or ("router" in node)
+            out = {}
+            for k, v in node.items():
+                if isinstance(v, dict):
+                    out[k] = walk(v, k, moe_here)
+                else:
+                    out[k] = _leaf_spec(site, k, v, moe_here)
+            return out
+        return _leaf_spec(site, None, node, in_moe)
+
+    return walk(params, None, False)
+
+
+def _leaf_spec(site, leaf, value, in_moe) -> P:
+    key = None
+    if site is not None:
+        prefixed = (f"M:{site}", leaf) if in_moe else None
+        if prefixed in _PARAM_RULES:
+            key = prefixed
+        elif (site, leaf) in _PARAM_RULES:
+            key = (site, leaf)
+    if key is None and (leaf, None) in _PARAM_RULES:
+        key = (leaf, None)
+    if key is None and (site, None) in _PARAM_RULES:
+        key = (site, None)
+    if key is None:
+        return P()                       # norms, scalars, input ranges
+    logical = _PARAM_RULES[key]
+    ndim = value.ndim if hasattr(value, "ndim") else len(value.shape)
+    pad = (None,) * (ndim - len(logical))
+    ctx = _active()
+    axes = tuple(ctx["rules"].get(ax) if ax is not None else None
+                 for ax in logical)
+    axes = pad + axes
+    return P(*_guard(ctx["mesh"], tuple(value.shape), axes))
+
+
+def zero_spec_tree(params) -> Any:
+    """Optimizer-moment specs: param spec + "data" on the first free dim
+    whose size divides the data-axis size (ZeRO-1/2 sharding)."""
+    ctx = _active()
+    mesh = ctx["mesh"]
+    dsize = mesh.shape.get("data", 1)
+    specs = param_spec_tree(params)
+
+    def upgrade(p, spec):
+        if not hasattr(p, "ndim") or p.ndim == 0 or dsize == 1:
+            return spec
+        parts = list(spec) + [None] * (p.ndim - len(spec))
+        for i, ax in enumerate(parts):
+            if ax is None and p.shape[i] % dsize == 0 and p.shape[i] >= dsize:
+                parts[i] = ctx["rules"].get("zero")
+                break
+        return P(*_guard(mesh, tuple(p.shape), tuple(parts)))
+
+    return jax.tree.map(upgrade, params, specs)
+
+
+def named(tree_specs) -> Any:
+    ctx = _active()
+    mesh = ctx["mesh"]
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(ndim: int) -> P:
+    ctx = _active()
+    b = ctx["rules"].get("batch")
+    return P(*((b,) + (None,) * (ndim - 1)))
+
+
+def batch_spec_for(shape: tuple) -> P:
+    ctx = _active()
+    b = ctx["rules"].get("batch")
+    axes = (b,) + (None,) * (len(shape) - 1)
+    return P(*_guard(ctx["mesh"], shape, axes))
+
+
+def cache_spec_tree(caches) -> Any:
+    """Decode-cache specs: KV [B, T, KV, hd] → (batch, kv_seq, heads, None);
+    SSM state [B·H, N, P] → (batch, None, None); conv [B, W-1, C] →
+    (batch, None, mlp). Leading stacked-layer dims unsharded."""
+    ctx = _active()
+    rules = ctx["rules"]
+
+    mesh = ctx["mesh"]
+
+    def leaf(path, x):
+        name = str(getattr(path[-1], "key", ""))
+        nd = x.ndim
+        if name in ("k", "v"):
+            # KV [.., B, T, KV, hd]: shard heads over "model" when the head
+            # count divides; otherwise fall back to sharding the *sequence*
+            # dim over "model" (kv=8/40 archs on a 16-way model axis — the
+            # cache would otherwise replicate 16x and blow HBM). Softmax
+            # over the sharded T axis lowers to cheap scalar all-reduces.
+            kv_heads = x.shape[-2]
+            if kv_heads % _axis_size(mesh, rules.get("heads")) == 0:
+                logical = ("batch", "kv_seq", "heads", None)
+            else:
+                logical = ("batch", "kv_seq_model", None, None)
+        elif name == "ssm":
+            logical = ("batch", None, None)
+        elif name == "conv":
+            logical = ("batch", None, "mlp")
+        else:
+            return P()
+        pad = (None,) * (nd - len(logical))
+        axes = pad + tuple(rules.get(ax) if ax else None for ax in logical)
+        return P(*_guard(mesh, tuple(x.shape), axes))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(p, x) for p, x in flat])

@@ -1,0 +1,43 @@
+"""Noisy evaluation harness (paper §3.2 protocol).
+
+Every noisy number in the paper is a mean ± std over 10 random *chip
+programmings* (weight perturbations); the harness reproduces that protocol:
+perturb analog weights once per seed → run the task suite → aggregate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping
+
+import jax
+import numpy as np
+
+from repro.core.analog import AnalogConfig, perturb_analog_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSpec:
+    model: str = "none"        # none | hw | gaussian
+    gamma: float = 0.0         # gaussian magnitude (fraction of channel max)
+
+
+def evaluate(params, labels, cfg, acfg: AnalogConfig,
+             tasks: Mapping[str, Callable], noise: NoiseSpec = NoiseSpec(),
+             seeds: int = 1, base_seed: int = 0) -> dict:
+    """Returns {task: {"mean": .., "std": .., "runs": [...]}} (+ "avg")."""
+    results = {name: [] for name in tasks}
+    n = seeds if noise.model != "none" else 1
+    for s in range(n):
+        key = jax.random.PRNGKey(base_seed + 1000 * s)
+        p = (perturb_analog_weights(params, labels, key, noise.model,
+                                    noise.gamma)
+             if noise.model != "none" else params)
+        for name, task in tasks.items():
+            results[name].append(task(p, cfg, acfg))
+    out = {name: {"mean": float(np.mean(v)), "std": float(np.std(v)),
+                  "runs": v}
+           for name, v in results.items()}
+    out["avg"] = {"mean": float(np.mean([o["mean"] for o in out.values()])),
+                  "std": float(np.mean([o["std"] for o in out.values()]))}
+    return out

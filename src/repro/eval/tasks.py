@@ -1,0 +1,87 @@
+"""Synthetic evaluation tasks — CPU-scale stand-ins for the paper's benchmark
+suite (MMLU-style logit comparison, GSM8K-style answer generation).
+
+Each task returns a closure ``task(params, cfg, acfg) -> accuracy`` so the
+noisy-eval harness can re-run it across weight-perturbation seeds.
+
+* ``markov_next``   — next-token logit-comparison accuracy against the
+                      Bayes-optimal prediction of the generating chain
+                      (knowledge-recall style: MMLU/ARC stand-in).
+* ``induction_copy``— in-context copying (A … A pattern): measures the
+                      in-context mechanisms that degrade first under weight
+                      noise (reasoning-style: GSM8K/ANLI stand-in — the
+                      paper's hardest-hit benchmarks).
+* ``mod_add``       — generative answer task used by the test-time-compute
+                      harness (MATH-500 stand-in).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogCtx
+from repro.models import apply as model_apply
+
+
+def markov_next(corpus, *, num_seqs: int = 64, seq_len: int = 64,
+                seed: int = 1234) -> Callable:
+    toks = corpus.sample(num_seqs, seq_len, seed=seed)
+    target = corpus.optimal_next_token(toks)          # Bayes argmax
+    toks_j = jnp.asarray(toks)
+    tgt_j = jnp.asarray(target)
+
+    def task(params, cfg, acfg) -> float:
+        ctx = AnalogCtx(key=None, training=False)
+        logits, _, _ = model_apply(params, cfg, acfg, ctx,
+                                   {"tokens": toks_j})
+        pred = jnp.argmax(logits, axis=-1)
+        # skip the first few tokens (no context yet)
+        return float(jnp.mean((pred[:, 4:] == tgt_j[:, 4:])))
+    return task
+
+
+def induction_copy(vocab_size: int, *, num_seqs: int = 64,
+                   pattern_len: int = 12, seed: int = 99) -> Callable:
+    rng = np.random.default_rng(seed)
+    pat = rng.integers(2, vocab_size, size=(num_seqs, pattern_len))
+    # [pat, 0, pat] — predict the second occurrence from the first
+    toks = np.concatenate([pat, np.zeros((num_seqs, 1), np.int64), pat],
+                          axis=1).astype(np.int32)
+    toks_j = jnp.asarray(toks)
+
+    def task(params, cfg, acfg) -> float:
+        ctx = AnalogCtx(key=None, training=False)
+        logits, _, _ = model_apply(params, cfg, acfg, ctx,
+                                   {"tokens": toks_j})
+        # positions predicting the repeated pattern (2nd copy, tokens 1..L-1)
+        start = pattern_len + 1
+        pred = jnp.argmax(logits[:, start:start + pattern_len - 1], axis=-1)
+        tgt = toks_j[:, start + 1:start + pattern_len]
+        return float(jnp.mean(pred == tgt))
+    return task
+
+
+def make_mod_add_data(vocab_size: int, *, num: int = 128, mod: int = 23,
+                      seed: int = 7):
+    """Prompts ``[a, b, SEP]`` with answer ``(a + b) % mod`` (token id)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, mod, size=num)
+    b = rng.integers(0, mod, size=num)
+    sep = mod          # reserve token `mod` as separator
+    prompts = np.stack([a, b, np.full(num, sep)], axis=1).astype(np.int32)
+    answers = ((a + b) % mod).astype(np.int32)
+    return prompts, answers
+
+
+def mod_add_train_tokens(vocab_size: int, *, num: int = 4096, mod: int = 23,
+                         seed: int = 11) -> np.ndarray:
+    """Training sequences ``[a, b, SEP, ans]`` (padded) for the TTC demo."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, mod, size=num)
+    b = rng.integers(0, mod, size=num)
+    ans = (a + b) % mod
+    return np.stack([a, b, np.full(num, mod), ans], axis=1).astype(np.int32)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots (see EXAMPLE.md convention).
+
+
+- analog_matmul: fused DAC-quant x (noisy-W) MVM + per-column ADC quant
+- int4_matmul:   packed-int4 digital deployment matmul
+- ssd_scan:      chunked Mamba-2 SSD scan (state carried in VMEM scratch)
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,144 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle batch-dim flattening, dtype plumbing and the CPU/TPU switch:
+on the CPU container the kernels run in ``interpret=True`` mode (functional
+validation); on TPU (the target) they compile to Mosaic. The pure-jnp path
+(``*_ref``) is what the jit'd models use on CPU so XLA's fusion and
+cost-analysis see ordinary HLO — the kernels are the TPU deployment artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.analog_matmul import analog_matmul as _analog_matmul
+from repro.kernels.int4_matmul import int4_matmul as _int4_matmul
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flatten_batch(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def analog_matmul(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
+                  bound: jax.Array, *, in_bits: int = 8, out_bits: int = 8,
+                  force_kernel: bool = False) -> jax.Array:
+    """Fused DAC-quant → MVM → ADC-quant over arbitrary leading batch dims."""
+    x2, lead = _flatten_batch(x)
+    if _on_tpu() or force_kernel:
+        y = _analog_matmul(x2, w_eff, beta, bound, in_bits=in_bits,
+                           out_bits=out_bits, interpret=not _on_tpu())
+    else:
+        y = _ref.analog_matmul_ref(x2, w_eff, beta, bound,
+                                   in_bits=in_bits, out_bits=out_bits)
+    return y.reshape(*lead, w_eff.shape[-1])
+
+
+def int4_matmul(x: jax.Array, w_packed: jax.Array, scale: jax.Array, *,
+                force_kernel: bool = False) -> jax.Array:
+    """Packed-int4 weight matmul over arbitrary leading batch dims."""
+    x2, lead = _flatten_batch(x)
+    if _on_tpu() or force_kernel:
+        y = _int4_matmul(x2, w_packed, scale, interpret=not _on_tpu())
+    else:
+        y = _ref.int4_matmul_ref(x2, w_packed, scale)
+    return y.reshape(*lead, w_packed.shape[-1] * 2)
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, chunk: int = 128,
+        force_kernel: bool = False) -> jax.Array:
+    """Mamba-2 SSD over [B, S, H, P] inputs with [B, S, G, N] gates.
+
+    Broadcasts B/C groups to heads, flattens (B, H) and dispatches to the
+    chunked kernel (TPU) or a chunked jnp implementation mathematically
+    identical to it (CPU) — both are tested against the sequential oracle.
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    b_h = jnp.repeat(b, rep, axis=2)
+    c_h = jnp.repeat(c, rep, axis=2)
+
+    def to_bh(t):
+        return jnp.moveaxis(t, 2, 1).reshape(bsz * h, s, *t.shape[3:])
+
+    x_f, b_f, c_f = to_bh(x), to_bh(b_h), to_bh(c_h)
+    dt_f = jnp.moveaxis(dt, 2, 1).reshape(bsz * h, s)
+    a_f = jnp.tile(a, bsz)
+
+    if (_on_tpu() or force_kernel) and s % chunk == 0:
+        y = _ssd_scan(x_f, dt_f, a_f, b_f, c_f, chunk=chunk,
+                      interpret=not _on_tpu())
+    else:
+        y = ssd_chunked_jnp(x_f, dt_f, a_f, b_f, c_f,
+                            chunk=min(chunk, s) if s % chunk else chunk)
+    y = y.reshape(bsz, h, s, p)
+    return jnp.moveaxis(y, 1, 2)
+
+
+def ssd_chunked_jnp(x, dt, a, b, c, *, chunk: int = 128):
+    """Chunk-parallel SSD in pure jnp (same math as the Pallas kernel; used on
+    CPU and as the lowering the dry-run sees — intra-chunk matmuls dominate
+    its FLOPs exactly like the kernel's MXU work)."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    sc = x.shape[1] // chunk
+
+    xf = x.reshape(bh, sc, chunk, p).astype(jnp.float32)
+    dtf = dt.reshape(bh, sc, chunk).astype(jnp.float32)
+    bf = b.reshape(bh, sc, chunk, n).astype(jnp.float32)
+    cf = c.reshape(bh, sc, chunk, n).astype(jnp.float32)
+
+    la = dtf * a[:, None, None]
+    cums = jnp.cumsum(la, axis=-1)                        # [bh, sc, L]
+    rel = cums[..., :, None] - cums[..., None, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    decay = jnp.exp(jnp.minimum(rel, 0.0)) * mask   # see ssd_scan.py: NaN guard
+    gates = jnp.einsum("zctn,zcrn->zctr", cf, bf)
+    y_intra = jnp.einsum("zctr,zcrp->zctp", gates * decay,
+                         dtf[..., None] * xf)
+
+    # inter-chunk state recurrence (scan over chunks)
+    total = cums[..., -1]                                  # [bh, sc]
+    w_r = jnp.exp(total[..., None] - cums) * dtf           # [bh, sc, L]
+    states = jnp.einsum("zcrn,zcrp->zcnp", bf * w_r[..., None], xf)
+
+    def chunk_step(h, inp):
+        st, tot = inp
+        h_new = jnp.exp(tot)[:, None, None] * h + st
+        return h_new, h
+
+    init = jnp.zeros((bh, n, p), jnp.float32)
+    _, h_ins = jax.lax.scan(chunk_step,
+                            init,
+                            (jnp.moveaxis(states, 1, 0),
+                             jnp.moveaxis(total, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                      # state entering chunk
+    y_inter = jnp.exp(cums)[..., None] * jnp.einsum(
+        "zctn,zcnp->zctp", cf, h_ins)
+
+    y = (y_intra + y_inter).reshape(bh, sc * chunk, p)
+    return y[:, :s].astype(x.dtype)
+
+
+def ssd_decode_step(h: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    a: jax.Array, b_t: jax.Array, c_t: jax.Array):
+    """Single-token SSD recurrence for serving. h [BH,N,P] → (h', y [BH,P])."""
+    decay = jnp.exp(dt_t * a)
+    h = decay[:, None, None] * h + (dt_t[:, None] * b_t)[:, :, None] * x_t[:, None, :]
+    y = jnp.einsum("zn,znp->zp", c_t, h)
+    return h, y.astype(x_t.dtype)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are swept against (interpret=True on
+CPU; the TPU kernel must match them bit-for-bit up to f32 accumulation order).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _qmax(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def analog_matmul_ref(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
+                      bound: jax.Array, *, in_bits: int = 8,
+                      out_bits: int = 8) -> jax.Array:
+    """Oracle for the fused analog MVM.
+
+    x       [M, K]   activations (any float dtype; computed in f32)
+    w_eff   [K, N]   effective (already noise-perturbed) weights
+    beta    scalar   static input range (eq. 1)
+    bound   [N]      per-column ADC bound = lambda_adc * beta * max|W[:,i]| (eq. 2)
+    """
+    xf = x.astype(jnp.float32)
+    qi = _qmax(in_bits)
+    beta = jnp.maximum(beta.astype(jnp.float32), 1e-8)
+    s_in = beta / qi
+    x_q = s_in * jnp.round(jnp.clip(xf, -beta, beta) / s_in)
+
+    y = jnp.matmul(x_q, w_eff.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+    qo = _qmax(out_bits)
+    b = jnp.maximum(bound.astype(jnp.float32), 1e-8)[None, :]
+    s_out = b / qo
+    y_q = jnp.clip(s_out * jnp.round(y / s_out), -b, b)
+    return y_q.astype(x.dtype)
+
+
+def int4_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array
+                    ) -> jax.Array:
+    """Oracle for the packed-int4 digital deployment matmul.
+
+    w_packed [K, N//2] uint8 — byte j holds column 2j in the low nibble and
+    column 2j+1 in the high nibble, each an unsigned nibble storing
+    ``int4 + 8`` (int4 ∈ [-7, 7] from symmetric RTN).
+    scale    [N] per-output-channel dequant scales.
+    """
+    lo = (w_packed & 0x0F).astype(jnp.int32) - 8
+    hi = (w_packed >> 4).astype(jnp.int32) - 8
+    w = jnp.stack([lo, hi], axis=-1).reshape(w_packed.shape[0], -1)
+    w = w.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    y = jnp.matmul(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def pack_int4(w_int: jax.Array) -> jax.Array:
+    """Pack int8-carrier int4 values ([-7,7], [K, N] with N even) to [K, N//2]."""
+    u = (w_int.astype(jnp.int32) + 8).astype(jnp.uint8)
+    lo = u[:, 0::2]
+    hi = u[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """Naive sequential Mamba-2 SSD recurrence (the slow-but-sure oracle).
+
+    x  [BH, S, P]  inputs (head-split)
+    dt [BH, S]     positive timestep
+    a  [BH]        negative per-head decay rate (A)
+    b  [BH, S, N]  input gate (already broadcast from groups to heads)
+    c  [BH, S, N]  output gate
+    h0 [BH, N, P]  optional initial state
+    returns y [BH, S, P] (and matches the chunked kernel exactly in f32)
+    """
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bh, n, p), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp          # [BH,P], [BH], [BH,N], [BH,N]
+        decay = jnp.exp(dtt * a)       # [BH]
+        h = decay[:, None, None] * h + (dtt[:, None] * bt)[:, :, None] * xt[:, None, :]
+        yt = jnp.einsum("zn,znp->zp", ct, h)
+        return h, yt
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

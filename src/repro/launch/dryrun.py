@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init). For every applicable cell this driver:
+
+    1. builds the sharded step (repro.launch.steps.build_cell),
+    2. ``.lower()`` → ``.compile()`` against ShapeDtypeStruct inputs,
+    3. records ``memory_analysis()`` / ``cost_analysis()`` / per-kind
+       collective operand bytes parsed from the optimized HLO,
+
+into ``benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json`` —
+the roofline analysis (benchmarks/roofline.py) reads these artifacts.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--loss kd|ce] [--skip-existing]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s32|u32|s16|u16|s8|u8|pred|"
+                       r"s64|u64)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(stype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    if stype.startswith("f8"):
+        return n
+    for k, b in _BYTES.items():
+        if stype.startswith(k):
+            return n * b
+    return n * 4
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    Output bytes are the right 'wire proxy': for all-gather it is the
+    gathered size, for reduce-scatter the scattered size, for all-reduce
+    the full tensor (ring moves ~2x, accounted in the roofline constant).
+    Async pairs (``*-start`` / ``*-done``) are counted once at the start op.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r".*= *((?:\([^)]*\)|\S+)) ([\w-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        nbytes = sum(_shape_bytes(t, d) for t, d in shapes)
+        out[base] += nbytes
+        counts[base] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, loss: str = "kd",
+             fsdp: bool = True, rules_override=None, accum_steps: int = 4,
+             tag: str = "", tcfg_overrides=None, arch_overrides=None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    plan = build_cell(arch, shape_name, mesh, loss=loss, fsdp=fsdp,
+                      rules_override=rules_override, accum_steps=accum_steps,
+                      tcfg_overrides=tcfg_overrides,
+                      arch_overrides=arch_overrides)
+    lowered = plan.lower()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)          # naive (per-body-once)
+    from repro.launch import hlo_analysis
+    trip_aware = hlo_analysis.analyze(hlo)         # trip-count-weighted
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "meta": plan.meta, "loss": loss, "fsdp": fsdp, "tag": tag,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("temp_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")},
+        "cost": {k: float(v) for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float)) and "{" not in k},
+        "collectives_naive": coll,
+        "analysis": trip_aware,
+        "status": "ok",
+    }
+    return rec
+
+
+def cell_path(arch, shape, mesh_kind, tag=""):
+    sfx = f"__{tag}" if tag else ""
+    return os.path.join(ART_DIR,
+                        f"{arch}__{shape}__{mesh_kind}{sfx}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--loss", default="kd", choices=["kd", "ce"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    n_devices = len(jax.devices())
+    assert n_devices == 512, f"expected 512 forced devices, got {n_devices}"
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if args.shape and shape_name != args.shape:
+                continue
+            if not shape_applicable(cfg, shape):
+                print(f"[dryrun] SKIP {arch} x {shape_name} "
+                      f"(long-context needs sub-quadratic mixer)")
+                continue
+            for mesh_kind in meshes:
+                path = cell_path(arch, shape_name, mesh_kind, args.tag)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] cached {arch} x {shape_name} x "
+                          f"{mesh_kind}")
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_kind} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh_kind,
+                                   loss=args.loss, tag=args.tag)
+                    print(f"    lower {rec['lower_s']}s compile "
+                          f"{rec['compile_s']}s  "
+                          f"flops={rec['analysis']['flops']:.3e}  "
+                          f"coll={rec['analysis']['collective_total_bytes']:.3e}B  "
+                          f"temp={rec['memory']['temp_size_in_bytes']/2**30:.2f}GiB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append((arch, shape_name, mesh_kind, str(e)))
+                    print(f"    FAILED: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+
+    print(f"\n[dryrun] done; {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", *f[:3], "--", f[3][:200])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,275 @@
+"""Trip-count-aware static cost analysis of optimized HLO.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE —
+with scan-over-layers + gradient-accumulation + SSD chunk scans, that
+under-counts FLOPs and collective bytes by the product of every enclosing
+trip count (~100x here). This module parses the optimized HLO text and
+aggregates per-computation costs weighted by call multiplicity:
+
+* multiplicities: ENTRY=1; ``while`` bodies x known_trip_count (annotated by
+  XLA in ``backend_config``), conditions x (n+1); ``fusion``/``call``/
+  ``conditional`` computations inherit the caller's multiplicity.
+* FLOPs: ``dot`` ops (including inside fusion computations) as
+  ``2 · prod(result_dims) · prod(contracted lhs dims)``; convolutions are
+  not used by this codebase.
+* collective bytes: output-shape bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (async pairs counted at
+  ``-start``).
+* HBM traffic: operand+result bytes of *top-level* instructions only —
+  fusion internals are free (on-chip), which is exactly the TPU fusion
+  memory model.
+
+This is a static roofline model, not a simulator: layout padding, dynamic
+slices and latency are out of scope (documented in EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+          "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+          "u8": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"([a-z]\d+|pred)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\(")
+# computation headers end with `{` and contain `->`; params may nest parens
+# (tuple-typed while-body args), so only the leading name is parsed.
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+
+
+def _dtype_bytes(t: str) -> int:
+    if t.startswith("f8"):
+        return 1
+    return _BYTES.get(t, 4)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for t, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _dtype_bytes(t)
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[list[int]]:
+    out = []
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.coll_bytes = defaultdict(float)
+        self.coll_counts = defaultdict(float)
+        self.coll_sites: list[tuple[str, str, float]] = []  # (kind, op_name, bytes)
+        self.hbm_bytes = 0.0
+        self.calls: list[tuple[str, float]] = []   # (callee, multiplier)
+        self.is_fusion_comp = name.startswith("fused_")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    symtab: dict[str, str] = {}
+    entry = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{") and "->" in line and "=" not in \
+                line.split("->")[0].split("(")[0]:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            symtab = {}
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        symtab[name] = shape_str
+
+        # ---- call graph edges -------------------------------------------
+        if op == "while":
+            body = _attr(line, "body")
+            cond = _attr(line, "condition")
+            n = _trip_count(line)
+            if body:
+                cur.calls.append((body, n))
+            if cond:
+                cur.calls.append((cond, n + 1))
+        elif op == "fusion":
+            callee = _attr(line, "calls")
+            if callee:
+                cur.calls.append((callee, 1.0))
+        elif op == "call":
+            callee = _attr(line, "to_apply")
+            if callee:
+                cur.calls.append((callee, 1.0))
+        elif op == "conditional":
+            for c in re.findall(r"branch_computations=\{([^}]*)\}", line):
+                for b in c.split(","):
+                    cur.calls.append((b.strip().lstrip("%"), 1.0))
+
+        # ---- costs -------------------------------------------------------
+        if op == "dot":
+            cur.flops += _dot_flops(line, shape_str, symtab)
+        base = _collective_base(op)
+        if base:
+            nbytes = _shape_bytes(shape_str)
+            cur.coll_bytes[base] += nbytes
+            cur.coll_counts[base] += 1
+            om = re.search(r'op_name="([^"]*)"', line)
+            cur.coll_sites.append((base, om.group(1) if om else "?",
+                                   float(nbytes)))
+
+        # HBM traffic at fusion boundaries: top-level instructions only
+        if not cur.is_fusion_comp and op not in (
+                "parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all"):
+            operands = re.search(r"\(([^)]*)\)", line[m.end() - 1:])
+            opnd_bytes = 0
+            if operands:
+                for o in operands.group(1).split(","):
+                    o = o.strip().lstrip("%")
+                    if o in symtab:
+                        opnd_bytes += _shape_bytes(symtab[o])
+            cur.hbm_bytes += _shape_bytes(shape_str) + opnd_bytes
+
+    comps["__entry__"] = comps.get(entry, Computation("__none__"))
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _attr(line: str, key: str) -> str | None:
+    m = re.search(rf"{key}=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _trip_count(line: str) -> float:
+    m = re.search(r'known_trip_count"?[:=]\s*\{"?n"?[:=]"?(\d+)"?\}', line)
+    if m:
+        return float(m.group(1))
+    return 1.0
+
+
+def _collective_base(op: str) -> str | None:
+    for c in _COLLECTIVES:
+        if op == c or op == c + "-start":
+            return c
+    return None
+
+
+def _dot_flops(line: str, result_shape: str, symtab: dict) -> float:
+    dims = _shape_dims(result_shape)
+    if not dims:
+        return 0.0
+    result_elems = math.prod(dims[0]) if dims[0] else 1
+    m = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+    k = 1
+    if m and m.group(1) in symtab:
+        lhs_dims = _shape_dims(symtab[m.group(1)])
+        lhs_dims = lhs_dims[0] if lhs_dims else []
+        c = re.search(r"lhs_contracting_dims=\{([^}]*)\}", line)
+        if c and lhs_dims:
+            for idx in c.group(1).split(","):
+                idx = idx.strip()
+                if idx and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * k
+
+
+def analyze(text: str) -> dict:
+    """Aggregate trip-count-weighted costs over the whole module."""
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry_name__")  # type: ignore
+    comps.pop("__entry__")
+
+    # exact accumulation via memoized DAG traversal (HLO computations form a
+    # DAG: a while body never calls itself)
+    memo: dict[str, tuple] = {}
+
+    def totals(name: str, depth=0) -> tuple[float, dict, dict, float]:
+        if name in memo:
+            return memo[name]
+        comp = comps[name]
+        fl = comp.flops
+        cb = dict(comp.coll_bytes)
+        cc = dict(comp.coll_counts)
+        hb = comp.hbm_bytes
+        if depth > 128:
+            return fl, cb, cc, hb
+        for callee, k in comp.calls:
+            if callee not in comps or callee == name:
+                continue
+            f2, cb2, cc2, h2 = totals(callee, depth + 1)
+            fl += k * f2
+            hb += k * h2
+            for kk, v in cb2.items():
+                cb[kk] = cb.get(kk, 0.0) + k * v
+            for kk, v in cc2.items():
+                cc[kk] = cc.get(kk, 0.0) + k * v
+        memo[name] = (fl, cb, cc, hb)
+        return memo[name]
+
+    fl, cb, cc, hb = totals(entry)
+    return {"flops": fl,
+            "collective_bytes": {k: cb.get(k, 0.0) for k in _COLLECTIVES},
+            "collective_counts": {k: cc.get(k, 0.0) for k in _COLLECTIVES},
+            "collective_total_bytes": float(sum(cb.values())),
+            "hbm_bytes": hb}
+
+
+def attribute_collectives(text: str, top: int = 20) -> list[dict]:
+    """Trip-count-weighted collective bytes grouped by the JAX op_name that
+    produced them — the targeting table for §Perf hillclimbing."""
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry_name__")  # type: ignore
+    comps.pop("__entry__")
+
+    # multiplicity of each computation from the entry
+    mult: dict[str, float] = defaultdict(float)
+
+    def walk(name: str, m: float, depth=0):
+        if depth > 128:
+            return
+        mult[name] += m
+        for callee, k in comps[name].calls:
+            if callee in comps and callee != name:
+                walk(callee, m * k, depth + 1)
+
+    walk(entry, 1.0)
+
+    agg: dict[tuple[str, str], float] = defaultdict(float)
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        for kind, op_name, nbytes in comp.coll_sites:
+            # trim the op_name to its trailing semantic segments
+            short = "/".join(op_name.split("/")[-4:])[:120]
+            agg[(kind, short)] += m * nbytes
+
+    rows = [{"kind": k, "op": o, "bytes": b}
+            for (k, o), b in agg.items()]
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:top]

@@ -1,0 +1,221 @@
+"""Sharded step builders for the dry-run and production launchers.
+
+``build_cell`` assembles, for one (arch × shape × mesh) cell, the jitted +
+sharded step function and the ShapeDtypeStruct arguments to lower it with —
+*no array is ever allocated* (params/opt-state come from ``jax.eval_shape``).
+
+Cell kinds (DESIGN.md §4):
+  train_4k              → ``train_step``  (full HWA-KD step, teacher inside)
+  prefill_32k           → ``prefill``     (forward, last-only LM head, fills cache)
+  decode_32k / long_500k→ ``serve_step``  (1 token vs statically-shaped cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.distributed import sharding as shd
+from repro.models import input_specs as model_input_specs
+from repro.models import transformer as T
+from repro.optim.schedule import polynomial_with_warmup
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    """Everything needed to lower one cell."""
+    fn: Any                      # jitted, sharded callable
+    args: tuple                  # ShapeDtypeStructs
+    meta: dict
+    mesh: Any = None
+    rules: dict | None = None
+
+    def lower(self):
+        """Trace + lower under the active mesh/rules (shard_hint needs the
+        logical-axis context at trace time)."""
+        with shd.activate(self.mesh, self.rules):
+            return self.fn.lower(*self.args)
+
+
+def _eval_shape_tree(fn, *a, **kw):
+    return jax.eval_shape(fn, *a, **kw)
+
+
+def _batch_axes_size(mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               acfg: AnalogConfig = AnalogConfig(mode="analog"),
+               accum_steps: int = 4, dtype=jnp.bfloat16,
+               loss: str = "kd", fsdp: bool = True,
+               rules_override: dict | None = None,
+               tcfg_overrides: dict | None = None,
+               arch_overrides: dict | None = None) -> CellPlan:
+    cfg = get_config(arch)
+    if arch_overrides:
+        cfg = dataclasses.replace(cfg, **arch_overrides)
+    shape = SHAPES[shape_name]
+    bsz = shape.global_batch
+    batch_shardable = bsz % _batch_axes_size(mesh) == 0
+    rules = shd.default_rules(mesh, batch_shardable=batch_shardable,
+                              seq_shard_kv=not batch_shardable)
+    if rules_override:
+        rules.update(rules_override)
+
+    with shd.activate(mesh, rules):
+        params_shape = _eval_shape_tree(
+            lambda: T.init_model(jax.random.PRNGKey(0), cfg, dtype)[0])
+        # labels are structural (strings) — build from abstract params
+        labels = _labels_from_shapes(cfg, params_shape)
+
+        p_specs = (shd.zero_spec_tree(params_shape) if fsdp
+                   else shd.param_spec_tree(params_shape))
+        p_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                                   is_leaf=lambda s: isinstance(s, P))
+
+        ispecs = model_input_specs(cfg, shape, dtype)
+
+        if shape.kind == "train":
+            tkw = dict(total_steps=10_000, accum_steps=accum_steps,
+                       kd_beta=1.0 if loss == "kd" else 0.0,
+                       ce_weight=0.0 if loss == "kd" else 1.0,
+                       remat=True, vocab_chunk=512)
+            tkw.update(tcfg_overrides or {})
+            tcfg = TrainConfig(**tkw)
+            lr_sched = functools.partial(polynomial_with_warmup,
+                                         peak_lr=1e-5, total_steps=10_000)
+            step = make_train_step(cfg, acfg, tcfg, labels, lr_sched,
+                                   with_teacher=(loss == "kd"))
+            state_shape = _eval_shape_tree(
+                lambda: init_train_state(params_shape))
+            s_specs = {"step": P(), "opt": {
+                "m": shd.zero_spec_tree(params_shape),
+                "v": shd.zero_spec_tree(params_shape),
+                "count": P()}}
+            s_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), s_specs,
+                is_leaf=lambda s: isinstance(s, P))
+
+            mb = bsz // accum_steps
+            def mb_spec(spec):
+                return jax.ShapeDtypeStruct(
+                    (accum_steps, mb) + spec.shape[1:], spec.dtype)
+            batch = {"tokens": mb_spec(ispecs["tokens"]),
+                     "labels": mb_spec(ispecs["labels"])}
+            if "patch_embeds" in ispecs:
+                batch["patch_embeds"] = mb_spec(ispecs["patch_embeds"])
+            b_shardings = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P(None, *shd.batch_spec_for(s.shape[1:]))),
+                batch)
+            key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            key_shard = NamedSharding(mesh, P())
+
+            if loss == "kd":
+                in_sh = (p_shardings, s_shardings, b_shardings, key_shard,
+                         p_shardings)
+                args = (params_shape, state_shape, batch, key_spec,
+                        params_shape)
+            else:
+                in_sh = (p_shardings, s_shardings, b_shardings, key_shard)
+                args = (params_shape, state_shape, batch, key_spec)
+
+            fn = jax.jit(step, in_shardings=in_sh,
+                         out_shardings=(p_shardings, s_shardings, None),
+                         donate_argnums=(0, 1))
+            return CellPlan(fn, args, _meta(cfg, shape, mesh, "train_step"),
+                            mesh, rules)
+
+        if shape.kind == "prefill":
+            def prefill_fn(params, tokens, extra):
+                caches = T.init_caches(cfg, bsz, shape.seq_len, dtype)
+                ctx = AnalogCtx(key=None, training=False)
+                inputs = {"tokens": tokens, **extra}
+                logits, _, caches = T.forward(params, cfg, acfg, ctx, inputs,
+                                              caches=caches, last_only=True)
+                return logits, caches
+
+            extra = ({"patch_embeds": ispecs["patch_embeds"]}
+                     if "patch_embeds" in ispecs else {})
+            tok_shard = NamedSharding(
+                mesh, shd.batch_spec_for(ispecs["tokens"].shape))
+            extra_sh = {k: NamedSharding(mesh, shd.batch_spec_for(v.shape))
+                        for k, v in extra.items()}
+            cache_shape = _eval_shape_tree(
+                lambda: T.init_caches(cfg, bsz, shape.seq_len, dtype))
+            c_specs = shd.cache_spec_tree(cache_shape)
+            c_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), c_specs,
+                is_leaf=lambda s: isinstance(s, P))
+            fn = jax.jit(prefill_fn,
+                         in_shardings=(p_shardings, tok_shard, extra_sh),
+                         out_shardings=(None, c_shardings))
+            args = (params_shape, ispecs["tokens"], extra)
+            return CellPlan(fn, args, _meta(cfg, shape, mesh, "prefill"),
+                            mesh, rules)
+
+        # decode
+        def serve_fn(params, token, caches, pos):
+            ctx = AnalogCtx(key=None, training=False)
+            logits, _, caches = T.forward(params, cfg, acfg, ctx,
+                                          {"tokens": token}, caches=caches,
+                                          pos_offset=pos)
+            return logits[:, 0], caches
+
+        c_specs = shd.cache_spec_tree(ispecs["caches"])
+        c_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), c_specs,
+            is_leaf=lambda s: isinstance(s, P))
+        tok_shard = NamedSharding(
+            mesh, shd.batch_spec_for(ispecs["token"].shape))
+        fn = jax.jit(serve_fn,
+                     in_shardings=(p_shardings, tok_shard, c_shardings,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(None, c_shardings),
+                     donate_argnums=(2,))
+        args = (params_shape, ispecs["token"], ispecs["caches"],
+                ispecs["pos"])
+        return CellPlan(fn, args, _meta(cfg, shape, mesh, "serve_step"),
+                        mesh, rules)
+
+
+def _labels_from_shapes(cfg, params_shape):
+    """Build the label pytree from abstract param shapes (strings only)."""
+    from repro.models import transformer as T
+
+    def walk(node, site=None):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if site == "input_range":
+            return "input_range"
+        if site == "kernel":
+            return "analog_weight"
+        return "digital"
+
+    lab = walk(params_shape)
+    # routers / embeddings / projector stay digital
+    def fix(node, path=()):
+        if isinstance(node, dict):
+            return {k: fix(v, path + (k,)) for k, v in node.items()}
+        if "router" in path or "embed" in path:
+            return "digital"
+        return node
+    return fix(lab)
+
+
+def _meta(cfg, shape, mesh, kind):
+    return {"arch": cfg.name, "shape": shape.name, "kind": kind,
+            "mesh": dict(mesh.shape), "family": cfg.family}

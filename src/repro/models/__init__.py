@@ -1,0 +1,5 @@
+"""Model zoo: composable decoder LMs over all assigned architectures."""
+
+from repro.models.model import apply, build, input_specs
+
+__all__ = ["apply", "build", "input_specs"]

@@ -1,0 +1,278 @@
+"""Shared model layers: norms, RoPE, GQA attention, MLPs.
+
+Every projection matmul routes through :func:`repro.core.analog_linear`; the
+attention computation itself, norms, activations and residual adds stay in
+high precision ("digital units" in the paper's heterogeneous accelerator).
+
+All blocks return ``(y, stats)`` where ``stats`` mirrors the linear-site
+structure of their params (x_std / clip_frac per site) — consumed by the
+input-range EMA-init/decay rules in the trainer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import (AnalogConfig, AnalogCtx, analog_linear,
+                               init_linear, linear_labels)
+from repro.distributed.sharding import shard_hint
+
+# ---------------------------------------------------------------------------
+# norms (digital)
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_labels(p: dict) -> dict:
+    return {k: "digital" for k in p}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (digital)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embeddings. x [..., S, H, hd], positions [..., S]."""
+    if theta <= 0:                       # jamba: no positional embeddings
+        return x
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (digital math, analog projections)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    p = {"o": init_linear(ko, cfg.num_heads * hd, cfg.d_model,
+                          use_bias=False, dtype=dtype)}
+    if getattr(cfg, "fused_qkv", True):
+        qkv_out = (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+        p["qkv"] = init_linear(kq, cfg.d_model, qkv_out,
+                               use_bias=cfg.qkv_bias, dtype=dtype)
+    else:
+        p["q"] = init_linear(kq, cfg.d_model, cfg.num_heads * hd,
+                             use_bias=cfg.qkv_bias, dtype=dtype)
+        p["k"] = init_linear(kk, cfg.d_model, cfg.num_kv_heads * hd,
+                             use_bias=cfg.qkv_bias, dtype=dtype)
+        p["v"] = init_linear(kv, cfg.d_model, cfg.num_kv_heads * hd,
+                             use_bias=cfg.qkv_bias, dtype=dtype)
+    return p
+
+
+def attention_labels(p: dict) -> dict:
+    return {k: linear_labels(v) for k, v in p.items()}
+
+
+def _split_qkv(qkv: jax.Array, cfg):
+    hd = cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    q, k, v = jnp.split(qkv, [nq * hd, (nq + nkv) * hd], axis=-1)
+    q = q.reshape(*q.shape[:-1], nq, hd)
+    k = k.reshape(*k.shape[:-1], nkv, hd)
+    v = v.reshape(*v.shape[:-1], nkv, hd)
+    return q, k, v
+
+
+def _gqa_scores_softmax_v(q, k, v, mask, scale):
+    """q [B,S,H,hd], k/v [B,T,KV,hd] → [B,S,H,hd] (digital FP math)."""
+    nq, nkv = q.shape[-2], k.shape[-2]
+    group = nq // nkv
+    qg = q.reshape(*q.shape[:-2], nkv, group, q.shape[-1])
+    logits = jnp.einsum("bsngh,btnh->bnsgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnsgt,btnh->bsngh", probs, v.astype(jnp.float32))
+    return out.reshape(*q.shape).astype(q.dtype)
+
+
+def _chunked_causal_attention(q, k, v, scale, q_chunk=512, kv_chunk=1024):
+    """Flash-style online-softmax attention over KV chunks.
+
+    Never materializes the [S, S] score matrix — required for the 32k-prefill
+    and 4k-train shapes to fit HBM in the dry-run. Pure jax.lax, so it shards
+    under pjit (S is *not* sharded; heads/batch are).
+    """
+    b, s, nq, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    group = nq // nkv
+    nq_c = (s + q_chunk - 1) // q_chunk
+    nk_c = (t + kv_chunk - 1) // kv_chunk
+    s_pad, t_pad = nq_c * q_chunk, nk_c * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+
+    qg = qp.reshape(b, nq_c, q_chunk, nkv, group, hd).astype(jnp.float32)
+    kc = kp.reshape(b, nk_c, kv_chunk, nkv, hd).astype(jnp.float32)
+    vc = vp.reshape(b, nk_c, kv_chunk, nkv, hd).astype(jnp.float32)
+
+    def q_block(qi, q_blk):
+        # online softmax over kv chunks for one q chunk
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, (k_blk, v_blk) = inp
+            logits = jnp.einsum("bsngh,btnh->bnsgt", q_blk, k_blk) * scale
+            q_pos = qi * q_chunk + jnp.arange(q_chunk)
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            causal = q_pos[:, None] >= k_pos[None, :]
+            valid = (k_pos < t)[None, :]
+            logits = jnp.where((causal & valid)[None, None, :, None, :],
+                               logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bnsgt,btnh->bnsgh", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, q_chunk, group), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, nkv, q_chunk, group), jnp.float32)
+        a0 = jnp.zeros((b, nkv, q_chunk, group, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk_c), (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2)        # [b, q_chunk, nkv, group, hd]
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq_c), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s_pad, nq, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
+              positions: jax.Array, cache: dict | None = None):
+    """GQA attention block. Returns (y, stats, new_cache).
+
+    cache: {"k": [B, T, KV, hd], "v": ..., "pos": scalar} — decode writes one
+    token at ``pos`` and attends over the full (statically-shaped) buffer.
+    """
+    hd = cfg.head_dim
+    if "qkv" in p:
+        qkv, st_qkv = analog_linear(p["qkv"], x, acfg, ctx)
+        q, k, v = _split_qkv(qkv, cfg)
+        stats_in = {"qkv": st_qkv}
+    else:   # de-fused q/k/v sites (§Perf: avoids split-reshard permutes)
+        q, st_q = analog_linear(p["q"], x, acfg, ctx)
+        k, st_k = analog_linear(p["k"], x, acfg, ctx)
+        v, st_v = analog_linear(p["v"], x, acfg, ctx)
+        q = q.reshape(*q.shape[:-1], cfg.num_heads, hd)
+        k = k.reshape(*k.shape[:-1], cfg.num_kv_heads, hd)
+        v = v.reshape(*v.shape[:-1], cfg.num_kv_heads, hd)
+        stats_in = {"q": st_q, "k": st_k, "v": st_v}
+    q = shard_hint(rope(q, positions, cfg.rope_theta),
+                   "batch", "seq", "heads", None)
+    k = shard_hint(rope(k, positions, cfg.rope_theta),
+                   "batch", "seq", "heads", None)
+    v = shard_hint(v, "batch", "seq", "heads", None)
+    scale = cfg.head_dim ** -0.5
+
+    if cache is not None and x.shape[1] == 1:       # decode step
+        pos = cache["pos"]
+        k_buf = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_buf = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        t = k_buf.shape[1]
+        mask = (jnp.arange(t)[None, :] <= pos)[None].repeat(x.shape[0], 0)
+        out = _gqa_scores_softmax_v(q, k_buf, v_buf, mask, scale)
+        new_cache = {"k": k_buf, "v": v_buf, "pos": pos + 1}
+    else:                                            # train / prefill
+        if x.shape[1] <= 1024:
+            t = k.shape[1]
+            mask = (positions[:, :, None] >= jnp.arange(t)[None, None, :])
+            out = _gqa_scores_softmax_v(q, k, v, mask, scale)
+        else:
+            out = _chunked_causal_attention(q, k, v, scale)
+        if cache is not None:                        # prefill fills the cache
+            new_cache = {
+                "k": _fill_cache(cache["k"], k), "v": _fill_cache(cache["v"], v),
+                "pos": cache["pos"] + x.shape[1]}
+        else:
+            new_cache = None
+
+    out = out.reshape(*x.shape[:-1], cfg.num_heads * cfg.head_dim)
+    out = shard_hint(out, "batch", "seq", "heads")
+    y, st_o = analog_linear(p["o"], out, acfg, ctx)
+    return y, {**stats_in, "o": st_o}, new_cache
+
+
+def _fill_cache(buf, new):
+    return jax.lax.dynamic_update_slice(
+        buf, new.astype(buf.dtype), (0, 0, 0, 0))
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32) -> dict:
+    hd = cfg.head_dim
+    return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / plain-GELU), analog projections
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    if cfg.act == "silu":             # SwiGLU: fused gate+up, then down
+        return {"gate_up": init_linear(k1, cfg.d_model, 2 * cfg.d_ff,
+                                       use_bias=False, dtype=dtype),
+                "down": init_linear(k2, cfg.d_ff, cfg.d_model,
+                                    use_bias=False, dtype=dtype)}
+    return {"up": init_linear(k1, cfg.d_model, cfg.d_ff, use_bias=True,
+                              dtype=dtype),
+            "down": init_linear(k2, cfg.d_ff, cfg.d_model, use_bias=True,
+                                dtype=dtype)}
+
+
+def mlp_labels(p: dict) -> dict:
+    return {k: linear_labels(v) for k, v in p.items()}
+
+
+def mlp(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx):
+    if "gate_up" in p:
+        gu, st1 = analog_linear(p["gate_up"], x, acfg, ctx)
+        gate, up = jnp.split(gu, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        h = shard_hint(h, "batch", "seq", "mlp")
+        y, st2 = analog_linear(p["down"], h, acfg, ctx)
+        return y, {"gate_up": st1, "down": st2}
+    h, st1 = analog_linear(p["up"], x, acfg, ctx)
+    h = shard_hint(jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype),
+                   "batch", "seq", "mlp")
+    y, st2 = analog_linear(p["down"], h, acfg, ctx)
+    return y, {"up": st1, "down": st2}

@@ -1,0 +1,155 @@
+"""Mamba-2 (SSD) mixer block.
+
+Projections (in_proj / out_proj) are analog sites; the causal depthwise conv,
+the SSD recurrence and the gated RMSNorm are digital (they are stateful /
+elementwise ops, not static-weight MVMs — DESIGN.md §4). Used by the
+``mamba2-130m`` arch and Jamba's mamba layers (Jamba-v0.1 ships Mamba-1; we
+realize it with the SSD formulation — hardware-adaptation note in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import (AnalogConfig, AnalogCtx, analog_linear,
+                               init_linear, linear_labels)
+from repro.distributed.sharding import shard_hint
+from repro.kernels import ops as kops
+
+
+def _dims(cfg):
+    d_inner = cfg.d_inner
+    heads = cfg.ssm_heads
+    gn = cfg.ssm_groups * cfg.ssm_state
+    conv_ch = d_inner + 2 * gn
+    d_in_proj = 2 * d_inner + 2 * gn + heads
+    return d_inner, heads, gn, conv_ch, d_in_proj
+
+
+def init_mamba(key, cfg, dtype=jnp.float32) -> dict:
+    d_inner, heads, gn, conv_ch, d_in_proj = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(k1, cfg.d_model, d_in_proj, use_bias=False,
+                               dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch), jnp.float32)
+                   * cfg.conv_width ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.full((heads,), 0.01, jnp.float32))),  # softplus^-1(0.01)
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": init_linear(k3, d_inner, cfg.d_model, use_bias=False,
+                                dtype=dtype),
+    }
+
+
+def mamba_labels(p: dict) -> dict:
+    lab = {k: "digital" for k in p
+           if k not in ("in_proj", "out_proj")}
+    lab["in_proj"] = linear_labels(p["in_proj"])
+    lab["out_proj"] = linear_labels(p["out_proj"])
+    return lab
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along seq. x [B, S, C], w [W, C].
+
+    Returns (y, new_state) where state holds the trailing W-1 inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+            for i in range(width))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, axis=-1, keepdims=True) + eps)
+    return (g * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
+          cache: dict | None = None):
+    """SSD mixer over x [B, S, d]. Returns (y, stats, new_cache).
+
+    cache: {"conv": [B, W-1, conv_ch], "ssm": [B*H, N, P]} for decode;
+    prefill (cache passed, S > 1) fills it; train (cache None) skips state.
+    """
+    bsz, s, _ = x.shape
+    d_inner, heads, gn, conv_ch, _ = _dims(cfg)
+    pdim = cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    zxbcdt, st_in = analog_linear(p["in_proj"], x, acfg, ctx)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])           # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                      # [H]
+    xh = shard_hint(xs.reshape(bsz, s, heads, pdim),
+                    "batch", "seq", "heads", None)
+    bg = b.reshape(bsz, s, g, n)
+    cg = c.reshape(bsz, s, g, n)
+
+    if cache is not None and s == 1:                              # decode
+        rep = heads // g
+        to_bh = lambda t: t[:, 0].repeat(rep, axis=1).reshape(bsz * heads, -1)
+        h, y_t = kops.ssd_decode_step(
+            cache["ssm"], xh[:, 0].reshape(bsz * heads, pdim),
+            dt[:, 0].reshape(bsz * heads), jnp.tile(a, bsz),
+            to_bh(bg), to_bh(cg))
+        y = y_t.reshape(bsz, 1, heads, pdim)
+        new_cache = {"conv": new_conv, "ssm": h}
+    else:
+        y, h_final = _ssd_with_state(xh, dt, a, bg, cg)
+        new_cache = ({"conv": new_conv, "ssm": h_final}
+                     if cache is not None else None)
+
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = shard_hint(_gated_rmsnorm(y, z, p["gate_norm"]),
+                   "batch", "seq", "mlp")
+    out, st_out = analog_linear(p["out_proj"], y, acfg, ctx)
+    return out, {"in_proj": st_in, "out_proj": st_out}, new_cache
+
+
+def _ssd_with_state(xh, dt, a, bg, cg):
+    """Chunked SSD returning (y [B,S,H,P] f32, final state [B*H, N, P])."""
+    y = kops.ssd(xh, dt, a, bg, cg).astype(jnp.float32)
+    # final state via one extra recurrence over chunk summaries (cheap):
+    bsz, s, heads, pdim = xh.shape
+    g, n = bg.shape[2], bg.shape[3]
+    rep = heads // g
+    to_bh = lambda t: jnp.moveaxis(jnp.repeat(t, rep, axis=2), 2, 1
+                                   ).reshape(bsz * heads, s, -1)
+    xf = jnp.moveaxis(xh, 2, 1).reshape(bsz * heads, s, pdim).astype(jnp.float32)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(bsz * heads, s)
+    af = jnp.tile(a, bsz)
+    bf = to_bh(bg).astype(jnp.float32)
+    la = dtf * af[:, None]
+    cums = jnp.cumsum(la, axis=-1)
+    total = cums[:, -1]
+    w_r = jnp.exp(total[:, None] - cums) * dtf                    # [BH, S]
+    h = jnp.einsum("zs,zsn,zsp->znp", w_r, bf, xf)
+    return y, h
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, heads, gn, conv_ch, _ = _dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((batch * heads, cfg.ssm_state, cfg.ssm_headdim),
+                             jnp.float32)}

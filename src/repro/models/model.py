@@ -1,0 +1,69 @@
+"""Public model API: build / apply / input_specs per architecture."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig, get_config
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import transformer as T
+
+
+def build(arch: str | ArchConfig, key: jax.Array, dtype=jnp.float32):
+    """Initialize a model. Returns ``(cfg, params, labels)``."""
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    params, labels = T.init_model(key, cfg, dtype)
+    return cfg, params, labels
+
+
+def apply(params, cfg: ArchConfig, acfg: AnalogConfig, ctx: AnalogCtx,
+          inputs, **kw):
+    return T.forward(params, cfg, acfg, ctx, inputs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; never allocate)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Model-input stand-ins for one (arch × shape) cell.
+
+    ``train``/``prefill``: full-sequence tokens (+labels for train).
+    ``decode``: one new token plus the statically-shaped KV/SSM cache of
+    ``seq_len`` (built via ``jax.eval_shape`` over ``init_caches``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    toks = ((b, s, cfg.num_codebooks) if cfg.family == "audio" else (b, s))
+
+    if shape.kind == "train":
+        specs = {"tokens": _sds(toks, jnp.int32),
+                 "labels": _sds(toks, jnp.int32)}
+        if cfg.family == "vlm":
+            specs["tokens"] = _sds((b, s - cfg.vit_tokens), jnp.int32)
+            specs["labels"] = _sds((b, s - cfg.vit_tokens), jnp.int32)
+            specs["patch_embeds"] = _sds((b, cfg.vit_tokens, cfg.vit_dim),
+                                         dtype)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds(toks, jnp.int32)}
+        if cfg.family == "vlm":
+            specs["tokens"] = _sds((b, s - cfg.vit_tokens), jnp.int32)
+            specs["patch_embeds"] = _sds((b, cfg.vit_tokens, cfg.vit_dim),
+                                         dtype)
+        return specs
+
+    # decode: one token + cache of seq_len
+    one = ((b, 1, cfg.num_codebooks) if cfg.family == "audio" else (b, 1))
+    cache = jax.eval_shape(
+        lambda: T.init_caches(cfg, b, s, dtype))
+    return {"token": _sds(one, jnp.int32), "caches": cache,
+            "pos": _sds((), jnp.int32)}

@@ -1,0 +1,126 @@
+"""Mixture-of-experts FFN with sort-based token dispatch (dropping impl).
+
+Routing is computed *per sequence* (group = one sequence, vmapped over the
+batch) so the dispatch never materializes a ``[tokens, E, capacity]`` one-hot
+tensor (GShard-style dispatch is O(T·E·C) memory — prohibitive at E=128).
+Instead token→expert assignments are argsorted by expert id and scattered
+into a ``[E, capacity, d]`` buffer (MegaBlocks-style, SPMD-friendly: batch
+shards over ``data``, experts over ``model``).
+
+The router is a *digital* FP32 linear (DESIGN.md §4: routing under analog
+noise is catastrophic and the paper keeps non-MVM ops digital); the expert
+FFNs are batched analog sites sharing one input range per site (all experts
+see the same token distribution).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import (AnalogConfig, AnalogCtx, analog_linear,
+                               init_linear, linear_labels)
+from repro.distributed.sharding import shard_hint
+
+
+def moe_capacity(seq_len: int, num_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    return max(1, int(seq_len * top_k * capacity_factor / num_experts))
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> dict:
+    kr, k1, k2 = jax.random.split(key, 3)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+
+    def batched(k, din, dout):
+        site = init_linear(k, din, dout, use_bias=False, dtype=dtype)
+        ks = jax.random.split(k, e)
+        site["kernel"] = (jax.vmap(
+            lambda kk: jax.random.normal(kk, (din, dout), jnp.float32))(ks)
+            * din ** -0.5).astype(dtype)
+        return site
+
+    return {
+        "router": {"kernel": (jax.random.normal(kr, (d, e), jnp.float32)
+                              * d ** -0.5)},
+        "gate_up": batched(k1, d, 2 * f),
+        "down": batched(k2, f, d),
+    }
+
+
+def moe_labels(p: dict) -> dict:
+    return {"router": {"kernel": "digital"},
+            "gate_up": linear_labels(p["gate_up"]),
+            "down": linear_labels(p["down"])}
+
+
+def _route_one_sequence(x, p, cfg, acfg, ctx, capacity):
+    """x [S, d] → (y [S, d], aux_loss, stats). See module docstring."""
+    s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = jnp.matmul(x.astype(jnp.float32), p["router"]["kernel"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # [S, E]
+    weights, ids = jax.lax.top_k(probs, k)                       # [S, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style): E * sum_e f_e * P_e
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], e), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * mean_probs)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_ids = ids.reshape(-1)                                   # [S*k]
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=e)
+    offsets = jnp.cumsum(counts) - counts                        # exclusive
+    pos = jnp.arange(s * k) - offsets[sorted_ids]                # rank in expert
+    keep = pos < capacity
+    slot = jnp.where(keep, pos, capacity)                        # drop → slot C
+    tok = order // k
+
+    buf = jnp.zeros((e, capacity + 1, d), x.dtype)
+    buf = buf.at[sorted_ids, slot].set(x[tok], mode="drop")
+    # pin the dispatch buffer to the expert-parallel layout: without this
+    # GSPMD contracts the expert matmul over a mis-sharded dim and emits
+    # full-size partial-sum all-reduces (§Perf hillclimb, dbrx cell)
+    buf_in = shard_hint(buf[:, :capacity], "moe_buf", None, None)
+
+    # ---- expert FFN: batched analog sites (vmap over experts) --------------
+    def expert_fwd(gk, dk, xe):
+        gu, st1 = analog_linear({"kernel": gk,
+                                 "input_range": p["gate_up"]["input_range"]},
+                                xe, acfg, ctx)
+        gate, up = jnp.split(gu, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(xe.dtype) * up
+        y, st2 = analog_linear({"kernel": dk,
+                                "input_range": p["down"]["input_range"]},
+                               h, acfg, ctx)
+        return y, (st1, st2)
+
+    y_buf, (st1, st2) = jax.vmap(expert_fwd)(
+        p["gate_up"]["kernel"], p["down"]["kernel"], buf_in)
+    y_buf = shard_hint(y_buf, "moe_buf", None, None)
+
+    # ---- combine ------------------------------------------------------------
+    y_buf = jnp.pad(y_buf, ((0, 0), (0, 1), (0, 0)))             # drop slot = 0
+    y_sorted = y_buf[sorted_ids, slot]                           # [S*k, d]
+    y_flat = jnp.zeros((s * k, d), x.dtype).at[order].set(y_sorted)
+    y = jnp.sum(y_flat.reshape(s, k, d)
+                * weights[..., None].astype(x.dtype), axis=1)
+
+    stats = {"gate_up": jax.tree.map(jnp.mean, st1),
+             "down": jax.tree.map(jnp.mean, st2)}
+    return y, aux, stats
+
+
+def moe(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx):
+    """MoE FFN over x [B, S, d]. Returns (y, stats) with stats['aux_loss']."""
+    s = x.shape[1]
+    capacity = moe_capacity(s, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
+    y, aux, stats = jax.vmap(
+        lambda xb: _route_one_sequence(xb, p, cfg, acfg, ctx, capacity))(x)
+    stats = jax.tree.map(jnp.mean, stats)
+    stats["router"] = {"aux_loss": jnp.mean(aux)}
+    return y, stats

@@ -1,0 +1,435 @@
+"""Model assembly for all 10 assigned architectures.
+
+One functional decoder LM covering the dense / moe / hybrid / vlm / audio /
+ssm families. Layers are stacked with ``jax.lax.scan`` over layer-stacked
+params (keeps HLO size O(1) in depth — essential for the 512-device dry-run)
+with optional ``jax.checkpoint`` remat on the block body.
+
+Heterogeneous (Jamba) stacks scan over *super-blocks* of ``attn_every``
+layers: 1 attention + 7 mamba mixers with alternating dense/MoE FFNs,
+unrolled inside the scan body (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import (AnalogConfig, AnalogCtx, analog_linear,
+                               init_linear, linear_labels)
+from repro.distributed.sharding import shard_hint
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MoE
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks
+# ---------------------------------------------------------------------------
+
+def _init_ffn(key, cfg, kind: str, dtype):
+    if kind == "moe":
+        return MoE.init_moe(key, cfg, dtype)
+    return L.init_mlp(key, cfg, dtype)
+
+
+def _ffn_labels(p, kind: str):
+    return MoE.moe_labels(p) if kind == "moe" else L.mlp_labels(p)
+
+
+def _apply_ffn(p, x, cfg, acfg, ctx, kind: str):
+    if kind == "moe":
+        return MoE.moe(p, x, cfg, acfg, ctx)
+    return L.mlp(p, x, cfg, acfg, ctx)
+
+
+def init_attn_layer(key, cfg, ffn_kind: str, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+            "ffn": _init_ffn(k2, cfg, ffn_kind, dtype)}
+
+
+def attn_layer_labels(p, ffn_kind: str):
+    return {"ln1": L.norm_labels(p["ln1"]),
+            "attn": L.attention_labels(p["attn"]),
+            "ln2": L.norm_labels(p["ln2"]),
+            "ffn": _ffn_labels(p["ffn"], ffn_kind)}
+
+
+def apply_attn_layer(p, x, cfg, acfg, ctx, positions, cache, ffn_kind: str):
+    h, st_a, new_cache = L.attention(
+        p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg, acfg, ctx,
+        positions, cache)
+    x = x + h
+    h, st_f = _apply_ffn(p["ffn"], L.apply_norm(p["ln2"], x, cfg.norm),
+                         cfg, acfg, ctx, ffn_kind)
+    x = shard_hint(x + h, "batch", "seq", "embed")
+    return x, {"attn": st_a, "ffn": st_f}, new_cache
+
+
+def init_mamba_layer(key, cfg, ffn_kind: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
+         "mixer": M.init_mamba(k1, cfg, dtype)}
+    if ffn_kind != "none":
+        p["ln2"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+        p["ffn"] = _init_ffn(k2, cfg, ffn_kind, dtype)
+    return p
+
+
+def mamba_layer_labels(p, ffn_kind: str):
+    lab = {"ln1": L.norm_labels(p["ln1"]),
+           "mixer": M.mamba_labels(p["mixer"])}
+    if ffn_kind != "none":
+        lab["ln2"] = L.norm_labels(p["ln2"])
+        lab["ffn"] = _ffn_labels(p["ffn"], ffn_kind)
+    return lab
+
+
+def apply_mamba_layer(p, x, cfg, acfg, ctx, cache, ffn_kind: str):
+    h, st_m, new_cache = M.mamba(
+        p["mixer"], L.apply_norm(p["ln1"], x, cfg.norm), cfg, acfg, ctx, cache)
+    x = x + h
+    stats = {"mixer": st_m}
+    if ffn_kind != "none":
+        h, st_f = _apply_ffn(p["ffn"], L.apply_norm(p["ln2"], x, cfg.norm),
+                             cfg, acfg, ctx, ffn_kind)
+        x = x + h
+        stats["ffn"] = st_f
+    return x, stats, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacks (uniform scan / hybrid super-block scan)
+# ---------------------------------------------------------------------------
+
+def _stacked_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_blocks(key, cfg, dtype):
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        return _stacked_init(
+            lambda k: init_attn_layer(k, cfg, "dense", dtype), key,
+            cfg.num_layers)
+    if fam == "moe":
+        return _stacked_init(
+            lambda k: init_attn_layer(k, cfg, "moe", dtype), key,
+            cfg.num_layers)
+    if fam == "ssm":
+        return _stacked_init(
+            lambda k: init_mamba_layer(k, cfg, "none", dtype), key,
+            cfg.num_layers)
+    if fam == "hybrid":
+        n_sb = cfg.num_layers // cfg.attn_every
+
+        def init_sb(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            half = cfg.attn_every // 2
+            return {
+                "attn": init_attn_layer(k1, cfg, "dense", dtype),
+                "mamba": _stacked_init(
+                    lambda kk: init_mamba_layer(kk, cfg, "none", dtype),
+                    k2, cfg.attn_every - 1),
+                "dense_ffn": _stacked_init(
+                    lambda kk: {"ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+                                "ffn": _init_ffn(kk, cfg, "dense", dtype)},
+                    k3, half - 1),
+                "moe_ffn": _stacked_init(
+                    lambda kk: {"ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+                                "ffn": _init_ffn(kk, cfg, "moe", dtype)},
+                    k4, half),
+            }
+
+        return _stacked_init(init_sb, key, n_sb)
+    raise ValueError(fam)
+
+
+def blocks_labels(params_blocks, cfg):
+    """Labels share the stacked structure (string leaves broadcast fine)."""
+    fam = cfg.family
+    one = jax.tree.map(lambda t: t[0] if hasattr(t, "shape") else t,
+                       params_blocks)
+    if fam in ("dense", "vlm", "audio"):
+        lab = attn_layer_labels(one, "dense")
+    elif fam == "moe":
+        lab = attn_layer_labels(one, "moe")
+    elif fam == "ssm":
+        lab = mamba_layer_labels(one, "none")
+    elif fam == "hybrid":
+        inner = jax.tree.map(lambda t: t[0] if hasattr(t, "shape") else t, one)
+        lab = {
+            "attn": attn_layer_labels(one["attn"], "dense"),
+            "mamba": mamba_layer_labels(inner["mamba"], "none"),
+            "dense_ffn": {"ln2": L.norm_labels(inner["dense_ffn"]["ln2"]),
+                          "ffn": _ffn_labels(inner["dense_ffn"]["ffn"],
+                                             "dense")},
+            "moe_ffn": {"ln2": L.norm_labels(inner["moe_ffn"]["ln2"]),
+                        "ffn": _ffn_labels(inner["moe_ffn"]["ffn"], "moe")},
+        }
+    else:
+        raise ValueError(fam)
+    return lab
+
+
+def _hybrid_sb_apply(p_sb, x, cfg, acfg, ctx, positions, cache_sb):
+    """One Jamba super-block: layers 0..attn_every-1, attn at the middle.
+
+    Returned stats mirror the super-block's param structure (attn / mamba /
+    dense_ffn / moe_ffn with stacked sub-stats) so the trainer's input-range
+    rules can walk params and stats in lockstep.
+    """
+    half = cfg.attn_every // 2
+    new_cache = {"attn": None, "mamba": []}
+    st_attn, st_mamba, st_dense, st_moe = None, [], [], []
+    m_idx = 0
+    take = lambda t, i: jax.tree.map(lambda a: a[i], t)
+    for j in range(cfg.attn_every):
+        ffn_kind = "moe" if j % 2 == 1 else "dense"
+        ctx_j = dataclasses.replace(
+            ctx, key=None if ctx.key is None else jax.random.fold_in(ctx.key, j))
+        if j == half:
+            c = None if cache_sb is None else cache_sb["attn"]
+            x, st_attn, nc = apply_attn_layer(p_sb["attn"], x, cfg, acfg,
+                                              ctx_j, positions, c, "dense")
+            new_cache["attn"] = nc
+        else:
+            mp = take(p_sb["mamba"], m_idx)
+            c = None if cache_sb is None else take(cache_sb["mamba"], m_idx)
+            x, st_m, nc = apply_mamba_layer(mp, x, cfg, acfg, ctx_j, c, "none")
+            new_cache["mamba"].append(nc)
+            st_mamba.append(st_m)
+            m_idx += 1
+            if ffn_kind == "moe":
+                fp = take(p_sb["moe_ffn"], j // 2)
+            else:
+                fp = take(p_sb["dense_ffn"], j // 2 - (1 if j > half else 0))
+            h, st_f = _apply_ffn(
+                fp["ffn"], L.apply_norm(fp["ln2"], x, cfg.norm),
+                cfg, acfg, ctx_j, ffn_kind)
+            x = x + h
+            (st_moe if ffn_kind == "moe" else st_dense).append({"ffn": st_f})
+
+    if cache_sb is not None:
+        new_cache["mamba"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_cache["mamba"])
+    else:
+        new_cache = None
+    stack = lambda lst: jax.tree.map(lambda *xs: jnp.stack(xs), *lst)
+    stats = {"attn": st_attn, "mamba": stack(st_mamba),
+             "dense_ffn": stack(st_dense), "moe_ffn": stack(st_moe)}
+    return x, stats, new_cache
+
+
+def apply_blocks(params_blocks, x, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
+                 positions, caches=None, remat: bool = False):
+    """Scan the layer stack. Returns (x, stats_stacked, new_caches)."""
+    fam = cfg.family
+    with_cache = caches is not None
+
+    if fam == "hybrid":
+        def body(carry, inp):
+            x, idx = carry
+            p_l, cache_l = inp if with_cache else (inp, None)
+            ctx_l = dataclasses.replace(
+                ctx, key=None if ctx.key is None
+                else jax.random.fold_in(ctx.key, idx))
+            x, stats, nc = _hybrid_sb_apply(p_l, x, cfg, acfg, ctx_l,
+                                            positions, cache_l)
+            out = (stats, nc) if with_cache else stats
+            return (x, idx + 1), out
+    else:
+        ffn_kind = {"dense": "dense", "vlm": "dense", "audio": "dense",
+                    "moe": "moe", "ssm": "none"}[fam]
+
+        def body(carry, inp):
+            x, idx = carry
+            p_l, cache_l = inp if with_cache else (inp, None)
+            ctx_l = dataclasses.replace(
+                ctx, key=None if ctx.key is None
+                else jax.random.fold_in(ctx.key, idx))
+            if fam == "ssm":
+                x, stats, nc = apply_mamba_layer(p_l, x, cfg, acfg, ctx_l,
+                                                 cache_l, ffn_kind)
+            else:
+                x, stats, nc = apply_attn_layer(p_l, x, cfg, acfg, ctx_l,
+                                                positions, cache_l, ffn_kind)
+            out = (stats, nc) if with_cache else stats
+            return (x, idx + 1), out
+
+    if remat:
+        # remat=True/'dots': save non-batched matmul outputs (XLA default
+        # trade); remat='nothing': full recompute — minimum live activations
+        # (the §Perf memory lever for the 30B+ train cells).
+        policy = (None if remat == "nothing"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (params_blocks, caches) if with_cache else params_blocks
+    (x, _), out = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)), xs)
+    if with_cache:
+        stats, new_caches = out
+    else:
+        stats, new_caches = out, None
+    return x, stats, new_caches
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg, dtype=jnp.float32):
+    """Returns (params, labels)."""
+    keys = jax.random.split(key, 6)
+    emb_scale = cfg.d_model ** -0.5
+    params: dict[str, Any] = {}
+    labels: dict[str, Any] = {}
+
+    if cfg.family == "audio":
+        params["embed"] = {"codebooks": (
+            jax.random.normal(keys[0],
+                              (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+                              jnp.float32) * emb_scale).astype(dtype)}
+        labels["embed"] = {"codebooks": "digital"}
+    else:
+        params["embed"] = {"tokens": (
+            jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model),
+                              jnp.float32) * emb_scale).astype(dtype)}
+        labels["embed"] = {"tokens": "digital"}
+
+    if cfg.family == "vlm":
+        params["projector"] = init_linear(keys[1], cfg.vit_dim, cfg.d_model,
+                                          use_bias=True, dtype=dtype)
+        labels["projector"] = linear_labels(params["projector"])
+
+    params["blocks"] = init_blocks(keys[2], cfg, dtype)
+    labels["blocks"] = blocks_labels(params["blocks"], cfg)
+
+    params["final_norm"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+    labels["final_norm"] = L.norm_labels(params["final_norm"])
+
+    if cfg.family == "audio":
+        params["lm_head"] = init_linear(
+            keys[3], cfg.d_model, cfg.num_codebooks * cfg.vocab_size,
+            use_bias=False, dtype=dtype)
+        labels["lm_head"] = linear_labels(params["lm_head"])
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(keys[3], cfg.d_model,
+                                        cfg.padded_vocab, use_bias=False,
+                                        dtype=dtype)
+        labels["lm_head"] = linear_labels(params["lm_head"])
+    return params, labels
+
+
+def embed_inputs(params, cfg, inputs) -> tuple[jax.Array, jax.Array]:
+    """→ (x [B,S,d], positions [B,S]). Handles modality frontends (stubs)."""
+    if cfg.family == "audio":
+        tok = inputs["tokens"]                       # [B, S, K]
+        emb = params["embed"]["codebooks"]           # [K, V, d]
+        x = sum(emb[k][tok[..., k]] for k in range(cfg.num_codebooks))
+        bsz, s = tok.shape[:2]
+    elif cfg.family == "vlm":
+        text = params["embed"]["tokens"][inputs["tokens"]]
+        x = text
+        bsz, s = inputs["tokens"].shape
+    else:
+        x = params["embed"]["tokens"][inputs["tokens"]]
+        bsz, s = inputs["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    return x, positions
+
+
+def apply_lm_head(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
+                  x: jax.Array):
+    """Project hidden states to (vocab-sliced) logits. Returns (logits, stats).
+
+    Factored out of ``forward`` so the chunked-vocab loss can apply it to
+    sequence slices without materializing [B, S, V]."""
+    stats = {}
+    if cfg.family == "audio":
+        logits, st = analog_linear(params["lm_head"], x, acfg, ctx)
+        stats["lm_head"] = st
+        logits = logits.reshape(*x.shape[:-1], cfg.num_codebooks,
+                                cfg.vocab_size)
+    elif cfg.tie_embeddings:
+        logits = jnp.matmul(x, params["embed"]["tokens"].T.astype(x.dtype),
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+        logits = logits[..., :cfg.vocab_size]
+    else:
+        logits, st = analog_linear(params["lm_head"], x, acfg, ctx)
+        stats["lm_head"] = st
+        logits = logits[..., :cfg.vocab_size]
+    return logits.astype(jnp.float32), stats
+
+
+def forward(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx, inputs,
+            caches=None, pos_offset: Optional[jax.Array] = None,
+            remat: bool = False, last_only: bool = False,
+            return_hidden: bool = False):
+    """Full forward. Returns (logits, stats, new_caches).
+
+    ``inputs``: {"tokens": ...} (+ "patch_embeds" for vlm). For decode pass
+    single-token inputs plus ``caches`` and ``pos_offset``. ``last_only``
+    computes the LM head for the final position only (prefill: avoids the
+    [B, S, V] logits tensor entirely). ``return_hidden`` skips the LM head
+    and returns post-final-norm hidden states (chunked-loss path).
+    """
+    x, positions = embed_inputs(params, cfg, inputs)
+    x = shard_hint(x, "batch", "seq", "embed")
+    stats: dict[str, Any] = {}
+
+    if cfg.family == "vlm" and "patch_embeds" in inputs:
+        pe, st = analog_linear(params["projector"], inputs["patch_embeds"],
+                               acfg, ctx)
+        stats["projector"] = st
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        bsz, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+
+    if pos_offset is not None:
+        positions = positions + pos_offset
+
+    x, st_blocks, new_caches = apply_blocks(
+        params["blocks"], x, cfg, acfg, ctx, positions, caches, remat)
+    stats["blocks"] = st_blocks
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden:
+        return x, stats, new_caches
+
+    logits, st = apply_lm_head(params, cfg, acfg, ctx, x)
+    stats.update(st)
+    return logits, stats, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32):
+    """Stacked per-layer decoding caches matching ``apply_blocks`` scan xs."""
+    fam = cfg.family
+
+    def stack(tree, n):
+        return jax.tree.map(lambda t: jnp.broadcast_to(t, (n,) + t.shape), tree)
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        return stack(L.init_cache(cfg, batch, max_len, dtype), cfg.num_layers)
+    if fam == "ssm":
+        return stack(M.init_mamba_cache(cfg, batch, dtype), cfg.num_layers)
+    if fam == "hybrid":
+        n_sb = cfg.num_layers // cfg.attn_every
+        sb = {"attn": L.init_cache(cfg, batch, max_len, dtype),
+              "mamba": stack(M.init_mamba_cache(cfg, batch, dtype),
+                             cfg.attn_every - 1)}
+        return stack(sb, n_sb)
+    raise ValueError(fam)

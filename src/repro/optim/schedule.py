@@ -1,0 +1,17 @@
+"""LR schedules (paper App. D: polynomial decay + warmup ratio 0.016)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def polynomial_with_warmup(step, *, peak_lr: float, total_steps: int,
+                           warmup_ratio: float = 0.016, power: float = 1.0,
+                           end_lr: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warmup = jnp.maximum(warmup_ratio * total_steps, 1.0)
+    warm = peak_lr * step / warmup
+    frac = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1.0),
+                    0.0, 1.0)
+    decay = end_lr + (peak_lr - end_lr) * (1.0 - frac) ** power
+    return jnp.where(step < warmup, warm, decay)

@@ -1,0 +1,78 @@
+"""Prefill + autoregressive decode loops (batched serving core).
+
+``serve_step`` is the unit the decode-shape dry-run cells lower: one new
+token against a statically-shaped KV/SSM cache. ``generate`` wires prefill +
+a ``lax.scan`` decode loop into a jittable batched generator (used by the
+synthetic-data pipeline, the test-time-compute harness and the examples).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import apply as model_apply
+from repro.models import transformer as T
+from repro.serve.sampling import sample_logits
+
+
+def prefill(params, cfg, acfg: AnalogConfig, tokens: jax.Array,
+            max_len: int, extra_inputs: Optional[dict] = None,
+            dtype=jnp.float32):
+    """Run the prompt through the model, filling a fresh cache.
+
+    Returns (last_logits [B, V...], caches, next_pos).
+    """
+    bsz = tokens.shape[0]
+    caches = T.init_caches(cfg, bsz, max_len, dtype)
+    ctx = AnalogCtx(key=None, training=False)
+    inputs = {"tokens": tokens, **(extra_inputs or {})}
+    logits, _, caches = model_apply(params, cfg, acfg, ctx, inputs,
+                                    caches=caches)
+    seq = logits.shape[1]
+    return logits[:, -1], caches, jnp.int32(seq)
+
+
+def serve_step(params, cfg, acfg: AnalogConfig, token: jax.Array,
+               caches, pos: jax.Array):
+    """One decode step: token [B, 1(, K)] + caches → (logits [B, V...], caches)."""
+    ctx = AnalogCtx(key=None, training=False)
+    logits, _, caches = model_apply(params, cfg, acfg, ctx,
+                                    {"tokens": token}, caches=caches,
+                                    pos_offset=pos)
+    return logits[:, 0], caches
+
+
+def generate(params, cfg, acfg: AnalogConfig, key: jax.Array,
+             prompt: jax.Array, num_new: int, *, temperature: float = 1.0,
+             top_k: int = 0, top_p: float = 1.0, greedy_first: int = 0,
+             extra_inputs: Optional[dict] = None):
+    """Batched ancestral sampling. Returns tokens [B, num_new(, K)].
+
+    ``greedy_first``: number of initial tokens decoded greedily (the RGS/SGS
+    data-generation strategies of paper App. B.1).
+    """
+    max_len = prompt.shape[1] + num_new + (
+        cfg.vit_tokens if cfg.family == "vlm" else 0)
+    last_logits, caches, pos = prefill(params, cfg, acfg, prompt, max_len,
+                                       extra_inputs)
+
+    def step(carry, i):
+        key, logits, caches, pos = carry
+        key, sub = jax.random.split(key)
+        greedy = i < greedy_first
+        sampled = sample_logits(sub, logits, temperature=temperature,
+                                top_k=top_k, top_p=top_p)
+        tok = jnp.where(greedy, jnp.argmax(logits, -1).astype(jnp.int32),
+                        sampled)
+        tok_in = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+        logits, caches = serve_step(params, cfg, acfg, tok_in, caches, pos)
+        return (key, logits, caches, pos + 1), tok
+
+    (_, _, _, _), toks = jax.lax.scan(
+        step, (key, last_logits, caches, pos), jnp.arange(num_new))
+    return jnp.moveaxis(toks, 0, 1)                  # [B, num_new(, K)]

@@ -1,0 +1,73 @@
+"""Batched serving engine + test-time compute scaling (paper §4.4).
+
+``best_of_n`` generates n candidate answers per prompt with temperature
+sampling, scores them with a PRM, and applies one of the three selection
+strategies — the Fig. 4 / Table 15 harness. Generation batches candidates
+across prompts (prompt-major packing) so the decode loop stays saturated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogConfig
+from repro.serve.decode import generate
+from repro.serve.prm import NoisyOraclePRM, select_answer
+
+
+@dataclasses.dataclass(frozen=True)
+class BestOfNConfig:
+    temperature: float = 0.8
+    top_p: float = 1.0
+    max_new: int = 1
+    batch_size: int = 64
+
+
+def sample_candidates(params, cfg, acfg: AnalogConfig, key,
+                      prompts: np.ndarray, n: int,
+                      bcfg: BestOfNConfig = BestOfNConfig()) -> np.ndarray:
+    """→ answers [num_prompts, n] (first generated token per candidate)."""
+    num = len(prompts)
+    rep = np.repeat(prompts, n, axis=0)              # prompt-major packing
+    outs = []
+    for i in range(0, len(rep), bcfg.batch_size):
+        key, sub = jax.random.split(key)
+        chunk = jnp.asarray(rep[i:i + bcfg.batch_size])
+        toks = generate(params, cfg, acfg, sub, chunk, bcfg.max_new,
+                        temperature=bcfg.temperature, top_p=bcfg.top_p)
+        outs.append(np.asarray(toks[:, 0]))
+    flat = np.concatenate(outs)
+    return flat.reshape(num, n)
+
+
+def best_of_n_accuracy(answers: np.ndarray, correct: np.ndarray,
+                       prm: NoisyOraclePRM, ns: list[int],
+                       strategies=("prm_greedy", "prm_voting", "voting"),
+                       repeats: int = 5, seed: int = 0) -> dict:
+    """Accuracy vs n curves for each strategy (subsampling the n candidates).
+
+    ``answers`` [P, N_max]; for each n, draw ``repeats`` random subsets.
+    """
+    rng = np.random.default_rng(seed)
+    out = {s: {} for s in strategies}
+    num_p, n_max = answers.shape
+    for n in ns:
+        accs = {s: [] for s in strategies}
+        for _ in range(repeats):
+            idx = rng.choice(n_max, size=n, replace=False)
+            sub = answers[:, idx]
+            rewards = np.stack([prm.score(sub[p], correct[p])
+                                for p in range(num_p)])
+            for s in strategies:
+                picked = np.array([select_answer(sub[p], rewards[p], s)
+                                   for p in range(num_p)])
+                accs[s].append(float(np.mean(picked == correct)))
+        for s in strategies:
+            out[s][n] = {"mean": float(np.mean(accs[s])),
+                         "std": float(np.std(accs[s]))}
+    return out

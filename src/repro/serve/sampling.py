@@ -1,0 +1,27 @@
+"""Token sampling: temperature / top-k / top-p, jit-friendly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_logits(key: jax.Array, logits: jax.Array, *,
+                  temperature: float = 1.0, top_k: int = 0,
+                  top_p: float = 1.0, greedy: bool = False) -> jax.Array:
+    """Sample token ids from logits [..., V]."""
+    if greedy or temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

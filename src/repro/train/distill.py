@@ -1,0 +1,50 @@
+"""Losses: knowledge distillation (the paper's training loss) + CE.
+
+The paper trains analog foundation models with a *pure* distillation loss
+(KL against the frozen teacher at temperature 2.0/1.0, beta=1.0) — App. B.4
+shows CE-only loses 8.05% on average because the student starts modeling the
+synthetic data instead of imitating the teacher.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+            temperature: float = 1.0, mask: jax.Array | None = None):
+    """KL(teacher || student) with temperature, averaged over tokens.
+
+    Works for [B, S, V] and audio [B, S, K, V] logits alike.
+    """
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    tlogp = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    kl = jnp.sum(tp * (tlogp - sp), axis=-1) * (t * t)
+    if mask is not None:
+        while mask.ndim < kl.ndim:
+            mask = mask[..., None]
+        m = jnp.broadcast_to(mask, kl.shape)
+        return jnp.sum(kl * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(kl)
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array,
+            mask: jax.Array | None = None):
+    """Next-token cross entropy. labels [B, S] (or [B, S, K] audio)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        m = jnp.broadcast_to(mask, ll.shape)
+        return -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return -jnp.mean(ll)
+
+
+def shift_for_next_token(tokens: jax.Array):
+    """(inputs, labels, mask) for autoregressive training on raw tokens."""
+    inputs = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    mask = jnp.ones(labels.shape[:2], jnp.float32)
+    return inputs, labels, mask

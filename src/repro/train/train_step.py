@@ -1,0 +1,361 @@
+"""The HWA training step (paper Fig. 7 stage 2).
+
+One step =
+  1. forward in analog mode (eq. 1 input quant, eq. 3 noise, eq. 2 ADC quant)
+     under a fresh per-step noise key, collecting per-site input statistics;
+  2. loss = KD(teacher ‖ student) (+ optional CE mix + MoE aux loss);
+  3. grads → (optional int8 error-feedback compression) → AdamW;
+  4. post-step input-range rules: EMA-init for the first ``init_steps``
+     forwards, multiplicative decay afterwards (AIHWKIT-Lightning [52]);
+  5. eq. (4): per-channel weight clipping of every analog weight.
+
+Microbatched gradient accumulation (``accum_steps``) runs the fwd/bwd in a
+``lax.scan`` over microbatches — each microbatch re-samples weight noise,
+matching the paper's per-forward noise semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clipping
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.core.quant import ema_init_update, range_decay_update
+from repro.models import apply as model_apply
+from repro.optim import compression
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.train.distill import ce_loss, kd_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 1e-4
+    total_steps: int = 1000
+    warmup_ratio: float = 0.016
+    kd_temperature: float = 1.0
+    kd_beta: float = 1.0          # KD weight (paper: 1.0, pure distillation)
+    ce_weight: float = 0.0        # CE mix (ablation B.4 only)
+    aux_loss_weight: float = 0.01 # MoE load balancing
+    accum_steps: int = 1
+    grad_compression: bool = False
+    remat: bool = True            # True/'dots' | 'nothing' | False
+    #: sequence-chunk size for the chunked-vocab loss (0 = off). Active only
+    #: when vocab >= 4x the chunk — i.e. the production configs, not the CPU
+    #: smoke configs.
+    vocab_chunk: int = 0
+    #: §Perf optimization: constrain (ZeRO/FSDP-sharded) params to their
+    #: TP-only layout once per step, outside the microbatch loop, so the
+    #: parameter all-gather is hoisted instead of re-issued per microbatch
+    #: per pass.
+    pregather_params: bool = False
+    #: §Perf optimization: pin gradients (and the accumulation carry) to the
+    #: ZeRO sharding so XLA reduce-scatters per microbatch instead of
+    #: all-reducing and materializing full f32 gradient tensors.
+    shard_grads: bool = False
+    #: §Perf optimization: accumulate the *loss* over microbatches inside a
+    #: rematerialized scan and differentiate once — gradient accumulation
+    #: then happens device-locally in the scan backward, replacing
+    #: accum_steps cross-device gradient reductions with one.
+    fused_accum: bool = False
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def init_train_state(params, grad_compression: bool = False) -> dict:
+    state = {"step": jnp.zeros((), jnp.int32),
+             "opt": init_opt_state(params)}
+    if grad_compression:
+        state["err"] = compression.init_error_state(params)
+    return state
+
+
+def _collect_aux_losses(stats) -> jax.Array:
+    total, n = jnp.zeros((), jnp.float32), 0
+    def walk(node):
+        nonlocal total, n
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "aux_loss":
+                    total, n = total + jnp.mean(v), n + 1
+                else:
+                    walk(v)
+    walk(stats)
+    return total / max(n, 1)
+
+
+def _update_input_ranges(params, stats, step, acfg: AnalogConfig):
+    """Walk params/stats in lockstep; apply EMA-init + decay to each site.
+
+    A "site" is any dict with an ``input_range`` key; its stats live at the
+    same tree path with ``x_std`` / ``clip_frac`` leaves (possibly with
+    leading stacked-layer dims, handled by broadcasting).
+    """
+    def walk(p, s):
+        if not isinstance(p, dict):
+            return p
+        out = {}
+        for k, v in p.items():
+            if k == "input_range":
+                if s is None or "x_std" not in s:
+                    out[k] = v
+                    continue
+                x_std = s["x_std"]
+                clip_frac = s["clip_frac"]
+                beta = jnp.squeeze(v, axis=-1)
+                beta = ema_init_update(beta, x_std, step, acfg.kappa_init,
+                                       acfg.init_steps)
+                beta = range_decay_update(beta, clip_frac, step,
+                                          acfg.range_decay,
+                                          acfg.input_min_percentage,
+                                          acfg.init_steps)
+                out[k] = jnp.maximum(beta, 1e-6)[..., None]
+            else:
+                out[k] = walk(v, s.get(k) if isinstance(s, dict) else None)
+        return out
+
+    return walk(params, stats)
+
+
+def _align_vlm_labels(cfg, batch):
+    """Prepend an ignore-masked image-token prefix to labels/mask so they
+    line up with the [image ‖ text] combined sequence."""
+    labels = batch.get("labels")
+    mask = batch.get("mask")
+    if "patch_embeds" not in batch or labels is None:
+        return labels, mask
+    b = labels.shape[0]
+    pad = jnp.zeros((b, cfg.vit_tokens), labels.dtype)
+    labels = jnp.concatenate([pad, labels], axis=1)
+    if mask is None:
+        mask = jnp.ones(batch["labels"].shape[:2], jnp.float32)
+    mask = jnp.concatenate([jnp.zeros((b, cfg.vit_tokens), jnp.float32),
+                            mask], axis=1)
+    return labels, mask
+
+
+def make_loss_fn(cfg, acfg: AnalogConfig, tcfg: TrainConfig):
+    from repro.models.transformer import apply_lm_head
+
+    def loss_fn(params, batch, noise_key, teacher_params=None):
+        ctx = AnalogCtx(key=noise_key, training=True, collect_stats=True)
+        inputs = {"tokens": batch["tokens"]}
+        if "patch_embeds" in batch:
+            inputs["patch_embeds"] = batch["patch_embeds"]
+        labels, mask = _align_vlm_labels(cfg, batch)
+
+        chunked = (tcfg.vocab_chunk > 0
+                   and cfg.vocab_size >= 4 * tcfg.vocab_chunk)
+        loss = jnp.zeros((), jnp.float32)
+        metrics = {}
+        kd_sum = ce_sum = denom = None
+
+        if chunked:
+            # chunked-vocab loss: never materialize [B, S, V] logits — the
+            # LM head (and the teacher's) run per sequence chunk inside a
+            # rematerialized scan. Required at vocab ≈ 150k / seq 4k scale.
+            hidden, stats, _ = model_apply(params, cfg, acfg, ctx, inputs,
+                                           remat=tcfg.remat,
+                                           return_hidden=True)
+            t_hidden = None
+            if teacher_params is not None and tcfg.kd_beta:
+                t_hidden, _, _ = model_apply(
+                    teacher_params, cfg, AnalogConfig(mode="off"),
+                    AnalogCtx(key=None, training=False), inputs,
+                    remat=tcfg.remat, return_hidden=True)
+                t_hidden = jax.lax.stop_gradient(t_hidden)
+
+            s = hidden.shape[1]
+            ck = min(tcfg.vocab_chunk, s)
+            n_chunks = (s + ck - 1) // ck
+            s_pad = n_chunks * ck
+            hidden = jnp.pad(hidden, ((0, 0), (0, s_pad - s), (0, 0)))
+            if t_hidden is not None:
+                t_hidden = jnp.pad(t_hidden, ((0, 0), (0, s_pad - s),
+                                              (0, 0)))
+            if mask is None:
+                mask = jnp.ones((hidden.shape[0], s), jnp.float32)
+            mask_p = jnp.pad(mask, ((0, 0), (0, s_pad - s)))
+            labels_p = None
+            if labels is not None:     # audio labels are [B, S, K]
+                pw = (((0, 0), (0, s_pad - s))
+                      + ((0, 0),) * (labels.ndim - 2))
+                labels_p = jnp.pad(labels, pw)
+
+            def chunk_body(i):
+                sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * ck, ck, 1)
+                h_c = sl(hidden)
+                m_c = sl(mask_p)
+                logits_c, _ = apply_lm_head(params, cfg, acfg, ctx, h_c)
+                kd_c = jnp.zeros((), jnp.float32)
+                if t_hidden is not None:
+                    th_c = sl(t_hidden)
+                    t_logits_c, _ = apply_lm_head(
+                        teacher_params, cfg, AnalogConfig(mode="off"),
+                        AnalogCtx(key=None, training=False), th_c)
+                    kd_c = kd_loss(logits_c, t_logits_c,
+                                   tcfg.kd_temperature, m_c) * jnp.sum(m_c)
+                ce_c = jnp.zeros((), jnp.float32)
+                if labels_p is not None and tcfg.ce_weight:
+                    ce_c = ce_loss(logits_c, sl(labels_p), m_c) * jnp.sum(m_c)
+                return kd_c, ce_c, jnp.sum(m_c)
+
+            def scan_body(carry, i):
+                kd_c, ce_c, m_c = jax.checkpoint(chunk_body)(i)
+                return (carry[0] + kd_c, carry[1] + ce_c,
+                        carry[2] + m_c), None
+
+            (kd_sum, ce_sum, denom), _ = jax.lax.scan(
+                scan_body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())),
+                jnp.arange(n_chunks))
+            denom = jnp.maximum(denom, 1.0)
+            if teacher_params is not None and tcfg.kd_beta:
+                kd = kd_sum / denom
+                loss = loss + tcfg.kd_beta * kd
+                metrics["kd"] = kd
+            if labels is not None and tcfg.ce_weight:
+                ce = ce_sum / denom
+                loss = loss + tcfg.ce_weight * ce
+                metrics["ce"] = ce
+        else:
+            logits, stats, _ = model_apply(params, cfg, acfg, ctx, inputs,
+                                           remat=tcfg.remat)
+            t_logits = batch.get("teacher_logits")
+            if t_logits is None and teacher_params is not None:
+                t_logits, _, _ = model_apply(
+                    teacher_params, cfg, AnalogConfig(mode="off"),
+                    AnalogCtx(key=None, training=False), inputs,
+                    remat=tcfg.remat)
+                t_logits = jax.lax.stop_gradient(t_logits)
+            if tcfg.kd_beta and t_logits is not None:
+                kd = kd_loss(logits, t_logits, tcfg.kd_temperature, mask)
+                loss = loss + tcfg.kd_beta * kd
+                metrics["kd"] = kd
+            if tcfg.ce_weight and labels is not None:
+                ce = ce_loss(logits, labels, mask)
+                loss = loss + tcfg.ce_weight * ce
+                metrics["ce"] = ce
+
+        aux = _collect_aux_losses(stats)
+        loss = loss + tcfg.aux_loss_weight * aux
+        metrics["aux"] = aux
+        metrics["loss"] = loss
+        return loss, (stats, metrics)
+    return loss_fn
+
+
+def make_train_step(cfg, acfg: AnalogConfig, tcfg: TrainConfig, labels,
+                    lr_schedule, *, with_teacher: bool = False):
+    """Build the jittable train step.
+
+    Signature: ``(params, state, batch, key)`` → or, with
+    ``with_teacher=True``, ``(params, state, batch, key, teacher_params)``
+    (the production KD path: teacher forward runs inside the step).
+    Returns ``(new_params, new_state, metrics)``. ``batch`` leaves carry a
+    leading microbatch dim when ``tcfg.accum_steps > 1``.
+    """
+    loss_fn = make_loss_fn(cfg, acfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _tp_constrain(tree):
+        """Pin ``tree`` to its TP-only layout (all-gather of the ZeRO dim);
+        no-op when no mesh rules are active (CPU unit tests)."""
+        from repro.distributed import sharding as shd
+        if shd._active() is None:
+            return tree
+        nmd = shd.named(shd.param_spec_tree(tree))
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, nmd)
+
+    def _zero_constrain(tree):
+        """Pin ``tree`` to the ZeRO (data+model) sharding — applied to
+        gradients so the cross-device reduction lowers to reduce-scatter and
+        all f32 optimizer math runs on 1/data_size slices."""
+        from repro.distributed import sharding as shd
+        if shd._active() is None:
+            return tree
+        nmd = shd.named(shd.zero_spec_tree(tree))
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, nmd)
+
+    def train_step(params, state, batch, key, teacher_params=None):
+        step = state["step"]
+        nkey = jax.random.fold_in(key, step)
+
+        if tcfg.pregather_params:
+            p_use = _tp_constrain(params)
+            t_use = (None if teacher_params is None
+                     else _tp_constrain(teacher_params))
+        else:
+            p_use, t_use = params, teacher_params
+
+        if tcfg.accum_steps > 1 and tcfg.fused_accum:
+            # single backward over the loss-accumulating scan: grads
+            # accumulate device-locally in the scan transpose; one
+            # cross-device reduction at the (pregathered) param boundary.
+            def total_loss(p):
+                pg = _tp_constrain(p) if tcfg.pregather_params else p
+
+                def micro(carry, inp):
+                    i, mb = inp
+                    l, (stats, m) = jax.checkpoint(
+                        lambda mbx: loss_fn(pg, mbx,
+                                            jax.random.fold_in(nkey, i),
+                                            t_use))(mb)
+                    return carry + l, (stats, m)
+
+                total, (stats_all, metrics_all) = jax.lax.scan(
+                    micro, jnp.zeros(()),
+                    (jnp.arange(tcfg.accum_steps), batch))
+                stats = jax.tree.map(lambda t: t[-1], stats_all)
+                metrics = jax.tree.map(jnp.mean, metrics_all)
+                return total / tcfg.accum_steps, (stats, metrics)
+
+            (_, (stats, metrics)), grads = jax.value_and_grad(
+                total_loss, has_aux=True)(params)
+        elif tcfg.accum_steps > 1:
+            def micro(carry, inp):
+                acc, _ = carry
+                i, mb = inp
+                (l, (stats, m)), g = grad_fn(p_use, mb,
+                                             jax.random.fold_in(nkey, i),
+                                             t_use)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, i), (stats, m)
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            if tcfg.shard_grads:
+                zero = _zero_constrain(zero)
+            (gsum, _), (stats_all, metrics_all) = jax.lax.scan(
+                micro, (zero, jnp.zeros((), jnp.int32)),
+                (jnp.arange(tcfg.accum_steps), batch))
+            grads = jax.tree.map(lambda g: g / tcfg.accum_steps, gsum)
+            stats = jax.tree.map(lambda t: t[-1], stats_all)
+            metrics = jax.tree.map(jnp.mean, metrics_all)
+        else:
+            (_, (stats, metrics)), grads = grad_fn(p_use, batch, nkey,
+                                                   t_use)
+
+        if tcfg.shard_grads:
+            grads = _zero_constrain(grads)
+        if tcfg.grad_compression:
+            grads, new_err = compression.compress_grads(grads, state["err"])
+
+        lr = lr_schedule(step)
+        new_params, new_opt, gnorm = adamw_update(
+            params, grads, state["opt"], labels, lr, tcfg.adamw)
+
+        # paper-specific post-step transforms -------------------------------
+        new_params = _update_input_ranges(new_params, stats, step, acfg)
+        if acfg.is_analog:
+            new_params = clipping.clip_tree(new_params, labels,
+                                            acfg.alpha_clip)
+
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        new_state = dict(state, step=step + 1, opt=new_opt)
+        if tcfg.grad_compression:
+            new_state["err"] = new_err
+        return new_params, new_state, metrics
+
+    return train_step

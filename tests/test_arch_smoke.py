@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting shapes and finiteness (assignment requirement)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import apply, build
+from repro.optim.schedule import polynomial_with_warmup
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+def _inputs(cfg, key, b=2, s=16):
+    if cfg.family == "audio":
+        toks = jax.random.randint(key, (b, s, cfg.num_codebooks), 0,
+                                  cfg.vocab_size)
+    else:
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.vit_tokens, cfg.vit_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).reduce()
+    key = jax.random.PRNGKey(0)
+    cfg, params, labels = build(cfg, key)
+    batch = _inputs(cfg, key)
+    ctx = AnalogCtx(key=key, training=True, collect_stats=True)
+    logits, stats, _ = apply(params, cfg, AnalogConfig(mode="analog"), ctx,
+                             {k: v for k, v in batch.items()
+                              if k != "labels"})
+    s = batch["tokens"].shape[1] + (cfg.vit_tokens if cfg.family == "vlm"
+                                    else 0)
+    if cfg.family == "audio":
+        assert logits.shape == (2, s, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduce()
+    key = jax.random.PRNGKey(1)
+    cfg, params, labels = build(cfg, key)
+    acfg = AnalogConfig(mode="analog", init_steps=2)
+    tcfg = TrainConfig(peak_lr=1e-3, total_steps=4, kd_beta=0.0,
+                       ce_weight=1.0, remat=True)
+    lr = lambda s: polynomial_with_warmup(s, peak_lr=1e-3, total_steps=4)
+    step = jax.jit(make_train_step(cfg, acfg, tcfg, labels, lr))
+    state = init_train_state(params)
+    batch = _inputs(cfg, key)
+    if cfg.family == "vlm":
+        batch["labels"] = batch["tokens"]
+    p1, s1, m1 = step(params, state, batch, key)
+    assert np.isfinite(float(m1["loss"]))
+    assert int(s1["step"]) == 1
+    # params actually moved
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p1),
+                                jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "dbrx-132b",
+                                  "jamba-v0.1-52b", "mamba2-130m"])
+def test_modes_smoke(arch):
+    """Every AnalogConfig mode runs on every family representative."""
+    cfg = get_config(arch).reduce()
+    key = jax.random.PRNGKey(2)
+    cfg, params, labels = build(cfg, key)
+    batch = _inputs(cfg, key)
+    for mode in ("off", "analog", "qat", "di8", "rtn"):
+        ctx = AnalogCtx(key=key, training=(mode in ("analog", "qat")))
+        logits, _, _ = apply(params, cfg, AnalogConfig(mode=mode), ctx,
+                             {k: v for k, v in batch.items()
+                              if k != "labels"})
+        assert bool(jnp.all(jnp.isfinite(logits))), mode
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the assigned hyperparameters."""
+    spec = {
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    }
+    for arch, (nl, dm, nh, kv, dff, v) in spec.items():
+        c = get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (nl, dm, nh, kv, dff, v), arch
+    # MoE / hybrid extras
+    assert get_config("dbrx-132b").num_experts == 16
+    assert get_config("dbrx-132b").top_k == 4
+    assert get_config("qwen3-moe-30b-a3b").num_experts == 128
+    assert get_config("qwen3-moe-30b-a3b").top_k == 8
+    assert get_config("jamba-v0.1-52b").attn_every == 8
+    assert get_config("jamba-v0.1-52b").ssm_state == 16
+    assert get_config("mamba2-130m").ssm_state == 128

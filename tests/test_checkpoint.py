@@ -1,0 +1,106 @@
+"""Fault-tolerance tests: checkpoint roundtrip, corruption recovery,
+retention, trainer auto-resume and NaN-step skipping."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"params": {"w": jax.random.normal(k1, (8, 4)) * scale,
+                       "b": jnp.zeros((4,))},
+            "state": {"step": jnp.int32(7),
+                      "m": jax.random.normal(k2, (8, 4))}}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 7, tree, extra={"note": "hello"})
+    restored, extra, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 7 and extra["note"] == "hello"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_checkpoint_skipped(tmp_path):
+    tree = _tree(jax.random.PRNGKey(1))
+    ckpt.save(str(tmp_path), 1, tree)
+    tree2 = jax.tree.map(lambda t: t + 1, tree)
+    p2 = ckpt.save(str(tmp_path), 2, tree2)
+    # corrupt the newest checkpoint
+    with open(p2, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    restored, _, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 1          # fell back to the older valid checkpoint
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"]))
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    tree = _tree(jax.random.PRNGKey(2))
+    ckpt.save(str(tmp_path), 3, tree)
+    other = {"different": jnp.zeros((2,))}
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), other)
+
+
+def test_retention(tmp_path):
+    tree = _tree(jax.random.PRNGKey(3))
+    for s in range(1, 8):
+        ckpt.save(str(tmp_path), s, tree)
+    ckpt.retain(str(tmp_path), keep=2, keep_every=3)
+    steps = sorted(s for s, _ in ckpt._ckpt_files(str(tmp_path)))
+    assert steps == [3, 6, 7]  # milestones 3,6 + newest 2 (6,7)
+
+
+def test_atomic_write_no_tmp_left(tmp_path):
+    tree = _tree(jax.random.PRNGKey(4))
+    ckpt.save(str(tmp_path), 5, tree)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_trainer_resume_and_nan_guard(tmp_path):
+    """End-to-end fault tolerance: crash, resume, skip NaN steps."""
+    from repro.train.trainer import Trainer
+
+    calls = {"n": 0}
+
+    def step_fn(params, state, batch, key):
+        calls["n"] += 1
+        loss = jnp.where(state["step"] == 3, jnp.nan, 1.0 / (1 + state["step"]))
+        new_params = jax.tree.map(lambda p: p + 1.0, params)
+        return new_params, dict(state, step=state["step"] + 1), {
+            "loss": loss}
+
+    params = {"w": jnp.zeros((2,))}
+    state = {"step": jnp.int32(0)}
+    tr = Trainer(step_fn, params, state, ckpt_dir=str(tmp_path),
+                 ckpt_every=2, log_every=0)
+    batches = iter([{}] * 100)
+    tr.fit(batches, 6)
+    assert tr.skipped_steps == 1                # the NaN step was dropped
+    assert float(tr.params["w"][0]) == 5.0      # 6 steps - 1 skipped
+    # simulate crash + fresh process: new trainer resumes from disk
+    tr2 = Trainer(step_fn, {"w": jnp.zeros((2,))}, {"step": jnp.int32(0)},
+                  ckpt_dir=str(tmp_path), ckpt_every=100, log_every=0)
+    extra = tr2.try_resume()
+    assert extra is not None
+    assert int(tr2.state["step"]) == 6
+    assert float(tr2.params["w"][0]) == 5.0
+
+
+def test_straggler_monitor():
+    from repro.train.trainer import StragglerMonitor
+    mon = StragglerMonitor(factor=3.0)
+    for i in range(10):
+        mon.observe(i, 0.1)
+    assert mon.observe(10, 1.0)                 # 10x median flagged
+    assert not mon.observe(11, 0.12)
+    assert len(mon.events) == 1

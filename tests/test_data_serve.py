@@ -1,0 +1,106 @@
+"""Data pipeline + serving engine tests: loader resume determinism,
+synthetic generation, PRM selection, best-of-n scaling mechanics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.analog import AnalogConfig
+from repro.data.corpus import MarkovCorpus
+from repro.data.loader import TokenLoader
+from repro.data.synthetic import GenConfig, generate_synthetic
+from repro.models import build
+from repro.serve.engine import best_of_n_accuracy
+from repro.serve.prm import NoisyOraclePRM, select_answer
+
+
+def test_loader_resume_determinism():
+    toks = np.arange(400).reshape(100, 4)
+    l1 = TokenLoader(toks, batch_size=8, seed=3)
+    it1 = iter(l1)
+    seen = [next(it1) for _ in range(7)]
+    state = l1.state()
+
+    l2 = TokenLoader(toks, batch_size=8, seed=0)
+    l2.restore(state)
+    it2 = iter(l2)
+    for i in range(20):
+        a, b = next(it1), next(it2)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_loader_epoch_reshuffle():
+    toks = np.arange(64).reshape(16, 4)
+    l = TokenLoader(toks, batch_size=16, seed=0)
+    it = iter(l)
+    e0 = next(it)
+    e1 = next(it)
+    assert not np.array_equal(e0, e1)        # different permutation
+    np.testing.assert_array_equal(np.sort(e0.ravel()), np.sort(e1.ravel()))
+
+
+def test_markov_corpus_structure():
+    c = MarkovCorpus(64, seed=0)
+    toks = c.sample(32, 50, seed=1)
+    assert toks.shape == (32, 50)
+    # transitions follow the chain: every (s, s') pair is a valid edge
+    valid = 0
+    for row in toks[:8]:
+        for t in range(49):
+            valid += int(row[t + 1] in c.succ[row[t]])
+    assert valid == 8 * 49
+
+
+def test_synthetic_generation_strategies():
+    cfg = get_config("granite-3-8b").reduce()
+    key = jax.random.PRNGKey(0)
+    cfg, params, labels = build(cfg, key)
+    for strat in ("sss", "rgs", "sgs"):
+        toks = generate_synthetic(params, cfg, key, 4, 12,
+                                  GenConfig(strategy=strat), batch_size=4)
+        assert toks.shape == (4, 12)
+        assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+        if strat == "sss":
+            assert np.all(toks[:, 0] == 1)   # BOS start
+
+
+def test_prm_selection_strategies():
+    answers = np.array([3, 3, 5, 7])
+    rewards = np.array([0.1, 0.2, 0.9, 0.3])
+    assert select_answer(answers, rewards, "prm_greedy") == 5
+    assert select_answer(answers, rewards, "voting") == 3
+    # prm_voting: 3 has 0.3 total, 5 has 0.9, 7 has 0.3
+    assert select_answer(answers, rewards, "prm_voting") == 5
+
+
+def test_best_of_n_scaling_monotone():
+    """With an informative PRM, accuracy grows with n (Fig. 4 mechanics)."""
+    rng = np.random.default_rng(0)
+    num_p, n_max = 64, 64
+    correct = rng.integers(0, 10, num_p)
+    # candidate answers: right with p=0.3, else uniform wrong
+    answers = np.where(rng.random((num_p, n_max)) < 0.3,
+                       correct[:, None],
+                       rng.integers(0, 10, (num_p, n_max)))
+    prm = NoisyOraclePRM(reliability=0.8, seed=1)
+    res = best_of_n_accuracy(answers, correct, prm, ns=[1, 4, 16, 64],
+                             repeats=5)
+    curve = [res["prm_voting"][n]["mean"] for n in (1, 4, 16, 64)]
+    assert curve[-1] > curve[0] + 0.15
+    # PRM-based selection beats plain voting when PRM is informative
+    assert res["prm_voting"][16]["mean"] >= res["voting"][16]["mean"] - 0.02
+
+
+def test_uninformative_prm_degrades_to_voting():
+    rng = np.random.default_rng(2)
+    num_p, n_max = 48, 32
+    correct = rng.integers(0, 10, num_p)
+    answers = np.where(rng.random((num_p, n_max)) < 0.4,
+                       correct[:, None],
+                       rng.integers(0, 10, (num_p, n_max)))
+    prm = NoisyOraclePRM(reliability=0.5, seed=3)   # coin-flip PRM
+    res = best_of_n_accuracy(answers, correct, prm, ns=[16], repeats=8)
+    assert abs(res["prm_voting"][16]["mean"]
+               - res["voting"][16]["mean"]) < 0.08

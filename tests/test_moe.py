@@ -1,0 +1,103 @@
+"""MoE routing invariants (hypothesis + unit)."""
+
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import moe as MoE
+
+
+def _cfg(e=4, k=2, cf=8.0):
+    return dataclasses.replace(
+        get_config("dbrx-132b").reduce(), num_experts=e, top_k=k,
+        capacity_factor=cf)
+
+
+def _params(cfg, key):
+    return MoE.init_moe(key, cfg)
+
+
+def test_moe_capacity_formula():
+    assert MoE.moe_capacity(4096, 16, 4, 1.25) == 1280
+    assert MoE.moe_capacity(1, 128, 8, 1.25) == 1
+
+
+@given(st.integers(0, 10000))
+@settings(max_examples=10, deadline=None)
+def test_moe_output_finite_and_shaped(seed):
+    cfg = _cfg()
+    key = jax.random.PRNGKey(seed)
+    p = _params(cfg, key)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    ctx = AnalogCtx(key=None, training=False)
+    y, stats = MoE.moe(p, x, cfg, AnalogConfig(mode="off"), ctx)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(stats["router"]["aux_loss"]) >= 0.99  # >= 1 at optimum
+
+
+def test_moe_no_drop_equals_dense_expert_sum():
+    """With capacity >= S*k the dispatch must reproduce the dense
+    weighted-sum-over-selected-experts exactly."""
+    cfg = _cfg(e=4, k=2, cf=100.0)
+    key = jax.random.PRNGKey(0)
+    p = _params(cfg, key)
+    x = jax.random.normal(key, (1, 8, cfg.d_model))
+    ctx = AnalogCtx(key=None, training=False)
+    acfg = AnalogConfig(mode="off")
+    y, _ = MoE.moe(p, x, cfg, acfg, ctx)
+
+    # dense reference: run every expert on every token
+    logits = x[0] @ p["router"]["kernel"]
+    probs = jax.nn.softmax(logits, -1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    outs = []
+    for e in range(cfg.num_experts):
+        gu = x[0] @ p["gate_up"]["kernel"][e]
+        g, u = jnp.split(gu, 2, -1)
+        h = jax.nn.silu(g) * u
+        outs.append(h @ p["down"]["kernel"][e])
+    outs = jnp.stack(outs, 1)                       # [S, E, d]
+    ref = jnp.einsum("sk,skd->sd", w,
+                     jnp.take_along_axis(outs, ids[..., None], axis=1))
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_moe_capacity_dropping_monotone():
+    """Tiny capacity must zero-out some token outputs (drops), and raising
+    capacity can only add expert contributions."""
+    key = jax.random.PRNGKey(1)
+    cfg_small = _cfg(e=4, k=2, cf=0.25)
+    cfg_big = _cfg(e=4, k=2, cf=100.0)
+    p = _params(cfg_big, key)
+    x = jax.random.normal(key, (1, 32, cfg_big.d_model))
+    ctx = AnalogCtx(key=None, training=False)
+    acfg = AnalogConfig(mode="off")
+    y_small, _ = MoE.moe(p, x, cfg_small, acfg, ctx)
+    y_big, _ = MoE.moe(p, x, cfg_big, acfg, ctx)
+    # dropped assignments -> strictly less energy
+    assert float(jnp.linalg.norm(y_small)) < float(jnp.linalg.norm(y_big))
+
+
+def test_moe_permutation_equivariance_without_drops():
+    """Routing is per-token: permuting tokens permutes outputs."""
+    cfg = _cfg(e=4, k=2, cf=100.0)
+    key = jax.random.PRNGKey(2)
+    p = _params(cfg, key)
+    x = jax.random.normal(key, (1, 16, cfg.d_model))
+    perm = jax.random.permutation(key, 16)
+    ctx = AnalogCtx(key=None, training=False)
+    acfg = AnalogConfig(mode="off")
+    y1, _ = MoE.moe(p, x, cfg, acfg, ctx)
+    y2, _ = MoE.moe(p, x[:, perm], cfg, acfg, ctx)
+    np.testing.assert_allclose(np.asarray(y1[:, perm]), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,112 @@
+"""Noise-model and weight-clipping properties (paper eqs. 3–5, App. E.3)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import clipping, noise
+from repro.core.analog import noisy_matmul
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.005, 0.1))
+@settings(max_examples=20, deadline=None)
+def test_gaussian_noise_statistics(seed, gamma):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (256, 64)) * 0.1
+    n = noise.gaussian_weight_noise(key, w, gamma)
+    sigma_exp = gamma * np.abs(np.asarray(w)).max(axis=0)
+    sigma_obs = np.asarray(n).std(axis=0)
+    # per-channel std matches gamma * max|W_col| within sampling error
+    assert np.allclose(sigma_obs, sigma_exp, rtol=0.35)
+
+
+def test_pcm_sigma_polynomial_anchors():
+    # noise floor at zero conductance, growth toward max
+    s0 = float(noise.pcm_hermes_sigma(jnp.float32(0.0)))
+    s100 = float(noise.pcm_hermes_sigma(jnp.float32(100.0)))
+    assert s0 == pytest.approx(2.11, abs=1e-6)
+    assert 7.0 < s100 < 9.0
+    # monotone over most of the range (allow the fitted poly to wiggle)
+    xs = np.linspace(0, 100, 101)
+    ys = np.asarray(noise.pcm_hermes_sigma(jnp.asarray(xs, jnp.float32)))
+    assert ys.min() >= 2.0
+
+
+def test_pcm_noise_zero_weights_noiseless():
+    key = jax.random.PRNGKey(0)
+    w = jnp.zeros((32, 16)).at[0, 0].set(1.0)
+    n = np.asarray(noise.pcm_hermes_noise(key, w))
+    assert np.all(n[1:, :] == 0)
+    assert np.all(n[:, 1:] == 0)
+    assert n[0, 0] != 0
+
+
+def test_pcm_noise_snr_ordering():
+    """Bigger weights get more absolute noise but better relative SNR."""
+    key = jax.random.PRNGKey(1)
+    w = jnp.concatenate([jnp.full((4000, 1), 0.05), jnp.full((4000, 1), 1.0)],
+                        axis=0)
+    n = np.asarray(noise.pcm_hermes_noise(key, w))
+    std_small = n[:4000].std()
+    std_big = n[4000:].std()
+    assert std_big > std_small                 # absolute noise grows
+    assert std_big / 1.0 < std_small / 0.05    # relative noise shrinks
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1.5, 4.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_weight_bound(seed, alpha):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (128, 32))
+    wc = np.asarray(clipping.clip_weight(w, alpha))
+    std = np.asarray(w).std(axis=0)
+    assert np.all(np.abs(wc) <= alpha * std + 1e-5)
+    # clipping contracts: repeated clips keep shrinking toward 0 but each
+    # pass moves less than the first (std shrinks monotonically)
+    wcc = np.asarray(clipping.clip_weight(jnp.asarray(wc), alpha))
+    assert np.abs(wcc).max() <= np.abs(wc).max() + 1e-6
+    assert np.asarray(wcc).std() <= np.asarray(wc).std() + 1e-6
+
+
+def test_clipping_reduces_kurtosis():
+    key = jax.random.PRNGKey(2)
+    # heavy-tailed weights (outliers)
+    w = jax.random.t(key, df=3.0, shape=(4096,)).reshape(256, 16)
+    k_before = float(clipping.kurtosis(w))
+    wc = clipping.clip_weight(w, 3.0)
+    k_after = float(clipping.kurtosis(wc))
+    assert k_after < k_before          # Fig. 6b mechanism
+
+
+def test_clip_tree_only_touches_analog_weights():
+    params = {"a": {"kernel": jnp.ones((4, 4)) * 10,
+                    "input_range": jnp.ones((1,))},
+              "n": {"scale": jnp.ones((4,)) * 10}}
+    labels = {"a": {"kernel": "analog_weight", "input_range": "input_range"},
+              "n": {"scale": "digital"}}
+    out = clipping.clip_tree(params, labels, alpha=2.0)
+    assert float(jnp.max(out["n"]["scale"])) == 10.0
+    assert float(jnp.max(out["a"]["kernel"])) < 10.0 or \
+        float(jnp.std(params["a"]["kernel"])) == 0.0
+
+
+def test_noisy_matmul_backward_uses_clean_weights():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (8, 16))
+    w = jax.random.normal(key, (16, 4))
+    big_noise = jnp.ones_like(w) * 100.0
+
+    def f(x, w):
+        return jnp.sum(noisy_matmul(x, w, big_noise))
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    # dx must be g @ w.T with CLEAN w (noise-free backward, paper §3.1)
+    expect_gx = jnp.ones((8, 4)) @ w.T
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(expect_gx),
+                               rtol=1e-5)
+    expect_gw = x.T @ jnp.ones((8, 4))
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(expect_gw),
+                               rtol=1e-5)

@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) for the quantization primitives."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quant
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None)
+hypothesis.settings.load_profile("ci")
+
+
+@st.composite
+def arrays(draw, max_dim=64):
+    n = draw(st.integers(1, max_dim))
+    m = draw(st.integers(1, max_dim))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, m)) * scale).astype(np.float32)
+
+
+@given(arrays(), st.integers(2, 8), st.floats(0.1, 100.0))
+def test_input_quantize_invariants(x, bits, beta):
+    xq = np.asarray(quant.input_quantize(jnp.asarray(x), jnp.float32(beta),
+                                         bits))
+    q = quant.qmax(bits)
+    scale = max(beta, 1e-8) / q
+    # range: |xq| <= beta
+    assert np.all(np.abs(xq) <= beta * (1 + 1e-5))
+    # grid: xq / scale is an integer
+    ticks = xq / scale
+    assert np.allclose(ticks, np.round(ticks), atol=1e-3)
+    # error bound for in-range values: |x - xq| <= scale/2
+    inside = np.abs(x) <= beta
+    assert np.all(np.abs(x - xq)[inside] <= scale * 0.5 + 1e-6)
+    # idempotence
+    xqq = np.asarray(quant.input_quantize(jnp.asarray(xq),
+                                          jnp.float32(beta), bits))
+    assert np.allclose(xq, xqq, atol=scale * 1e-3)
+
+
+@given(arrays(), st.integers(2, 8))
+def test_weight_fake_quant_levels(w, bits):
+    wq = np.asarray(quant.weight_fake_quant(jnp.asarray(w), bits))
+    q = quant.qmax(bits)
+    absmax = np.abs(w).max(axis=0, keepdims=True)
+    absmax = np.maximum(absmax, 1e-12)
+    levels = wq / (absmax / q)
+    assert np.allclose(levels, np.round(levels), atol=1e-2)
+    assert np.all(np.abs(wq) <= absmax * (1 + 1e-5))
+
+
+@given(arrays(), st.integers(2, 8))
+def test_rtn_roundtrip_error(w, bits):
+    w_int, scale = quant.rtn_quantize(jnp.asarray(w), bits)
+    deq = np.asarray(quant.rtn_dequantize(w_int, scale))
+    per_ch = np.abs(w).max(axis=0, keepdims=True)
+    # half-step bound with a relative fp32 slack (scales up to 1e3 in the
+    # strategy make absolute epsilons meaningless)
+    bound = np.maximum(per_ch, 1e-12) / quant.qmax(bits) * 0.5
+    slack = 1e-5 * np.maximum(per_ch, 1.0) + 1e-6
+    assert np.all(np.abs(deq - w) <= bound + slack)
+    assert np.asarray(w_int).dtype == np.int8
+    assert np.abs(np.asarray(w_int)).max() <= quant.qmax(bits)
+
+
+@given(arrays())
+def test_dynamic_quant_per_token_range(x):
+    xq = np.asarray(quant.dynamic_input_quantize(jnp.asarray(x), 8))
+    tok_max = np.abs(x).max(axis=-1, keepdims=True)
+    assert np.all(np.abs(xq) <= tok_max * (1 + 1e-5) + 1e-6)
+
+
+def test_output_quantize_ste_gradient():
+    y = jnp.linspace(-5, 5, 64).reshape(8, 8)
+    bound = jnp.full((8,), 2.0)
+
+    def f(y):
+        return jnp.sum(quant.output_quantize(y, bound, jnp.float32(8)) ** 2)
+
+    g = jax.grad(f)(y)
+    # pure STE: gradient equals d/dy of sum(yq^2) with yq treated as y
+    yq = quant.output_quantize(y, bound, jnp.float32(8))
+    assert np.allclose(np.asarray(g), np.asarray(2 * yq), atol=1e-5)
+
+
+def test_output_quantize_respects_per_column_bound():
+    y = jnp.ones((4, 3)) * jnp.array([1.0, 10.0, 100.0])
+    bound = jnp.array([0.5, 5.0, 50.0])
+    yq = np.asarray(quant.output_quantize(y, bound, jnp.float32(8)))
+    assert np.all(np.abs(yq) <= np.array([0.5, 5.0, 50.0]) + 1e-5)
+
+
+def test_input_quantize_gradients_masked():
+    x = jnp.array([[-3.0, -0.5, 0.2, 4.0]])
+    beta = jnp.float32(1.0)
+
+    def f(x, b):
+        return jnp.sum(quant.input_quantize(x, b, 8))
+
+    gx = jax.grad(f, argnums=0)(x, beta)
+    # clipped elements get zero gradient
+    assert np.allclose(np.asarray(gx), [[0.0, 1.0, 1.0, 0.0]])
+    gb = jax.grad(f, argnums=1)(x, beta)
+    # clipped elements contribute sign(x): -1 + 1 = 0 + tiny quant-error term
+    assert np.isfinite(float(gb))
+
+
+def test_ema_init_and_decay_rules():
+    beta = jnp.float32(5.0)
+    # init phase: beta tracks kappa*std
+    b1 = quant.ema_init_update(beta, jnp.float32(1.0), jnp.int32(0),
+                               kappa=15.0, init_steps=10)
+    assert np.isclose(float(b1), 15.0)
+    b2 = quant.ema_init_update(beta, jnp.float32(1.0), jnp.int32(5),
+                               kappa=15.0, init_steps=10)
+    assert 5.0 < float(b2) < 15.0
+    # after init: unchanged by EMA
+    b3 = quant.ema_init_update(beta, jnp.float32(1.0), jnp.int32(20),
+                               kappa=15.0, init_steps=10)
+    assert float(b3) == 5.0
+    # decay fires only when clipping is rare and only after init
+    d1 = quant.range_decay_update(beta, jnp.float32(0.0), jnp.int32(20),
+                                  decay=0.01, input_min_percentage=0.95,
+                                  init_steps=10)
+    assert float(d1) == pytest.approx(5.0 * 0.99)
+    d2 = quant.range_decay_update(beta, jnp.float32(0.5), jnp.int32(20),
+                                  decay=0.01, input_min_percentage=0.95,
+                                  init_steps=10)
+    assert float(d2) == 5.0
+    d3 = quant.range_decay_update(beta, jnp.float32(0.0), jnp.int32(5),
+                                  decay=0.01, input_min_percentage=0.95,
+                                  init_steps=10)
+    assert float(d3) == 5.0

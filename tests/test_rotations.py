@@ -1,0 +1,91 @@
+"""SpinQuant-lite rotation machinery: orthogonality + FP model invariance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import rotations as rot
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import apply, build
+from repro.train.recipes import _rotate_residual_stream
+
+
+@pytest.mark.parametrize("n", [4, 64, 128, 96])
+def test_random_hadamard_orthogonality(n):
+    r = rot.random_hadamard(jax.random.PRNGKey(0), n)
+    eye = np.asarray(r @ r.T)
+    np.testing.assert_allclose(eye, np.eye(n), atol=1e-5)
+
+
+def test_hadamard_spreads_outliers():
+    """A one-hot (outlier) vector becomes uniform-magnitude after rotation."""
+    n = 64
+    r = rot.random_hadamard(jax.random.PRNGKey(1), n)
+    x = jnp.zeros((n,)).at[7].set(8.0)
+    y = np.asarray(x @ r)
+    assert np.abs(y).max() < 0.25 * 8.0   # outlier energy spread
+    np.testing.assert_allclose(np.linalg.norm(y), 8.0, rtol=1e-5)
+
+
+def test_fold_norm_scales_preserves_model():
+    cfg = get_config("granite-3-8b").reduce()
+    key = jax.random.PRNGKey(0)
+    cfg, params, labels = build(cfg, key)
+    # make norm scales non-trivial so folding actually does something
+    params = _randomize_scales(params, key)
+    folded = rot.fold_norm_scales(params, cfg)
+    toks = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+    ctx = AnalogCtx(key=None, training=False)
+    acfg = AnalogConfig(mode="off")
+    a, _, _ = apply(params, cfg, acfg, ctx, {"tokens": toks})
+    b, _, _ = apply(folded, cfg, acfg, ctx, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def _randomize_scales(params, key):
+    def walk(node, path=()):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if path and path[-1] == "scale":
+            k = jax.random.fold_in(key, hash(path) % (2**31))
+            return node * (1.0 + 0.3 * jax.random.normal(k, node.shape))
+        return node
+    return walk(params)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen3-moe-30b-a3b"])
+def test_rotation_invariance_fp(arch):
+    """Folded rotation leaves the FP model's function unchanged
+    (rmsnorm archs; SpinQuant's core correctness property)."""
+    cfg = get_config(arch).reduce()
+    key = jax.random.PRNGKey(3)
+    cfg, params, labels = build(cfg, key)
+    params = rot.fold_norm_scales(params, cfg)
+    rotated, r = _rotate_residual_stream(params, cfg, key)
+    toks = jax.random.randint(key, (2, 10), 0, cfg.vocab_size)
+    ctx = AnalogCtx(key=None, training=False)
+    acfg = AnalogConfig(mode="off")
+    a, _, _ = apply(params, cfg, acfg, ctx, {"tokens": toks})
+    b, _, _ = apply(rotated, cfg, acfg, ctx, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(jax.nn.log_softmax(a)),
+                               np.asarray(jax.nn.log_softmax(b)),
+                               atol=3e-3)
+
+
+def test_rotation_reduces_activation_kurtosis_after_quant():
+    """Rotation makes static-range quantization less lossy on outlier-heavy
+    activations (the SpinQuant mechanism at tensor level)."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.t(key, df=2.5, shape=(512, 128))      # heavy tails
+    r = rot.random_hadamard(key, 128)
+    xr = x @ r
+
+    def quant_err(v):
+        beta = jnp.max(jnp.abs(v)) * 0.5                 # static clipped range
+        q = jnp.clip(v, -beta, beta)
+        q = jnp.round(q / beta * 127) / 127 * beta
+        return float(jnp.mean((v - q) ** 2) / jnp.mean(v ** 2))
+
+    assert quant_err(xr) < quant_err(x)

@@ -1,0 +1,153 @@
+"""Training-step mechanics: KD loss properties, input-range lifecycle,
+eq.-4 clipping inside the step, grad accumulation, compression."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import build
+from repro.optim import compression
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import polynomial_with_warmup
+from repro.train.distill import ce_loss, kd_loss
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+def test_kd_loss_properties():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (4, 8, 32))
+    assert float(kd_loss(a, a)) == pytest.approx(0.0, abs=1e-6)
+    b = a + 0.5 * jax.random.normal(jax.random.fold_in(key, 1), a.shape)
+    assert float(kd_loss(b, a)) > 0
+    # temperature scaling keeps zero at equality
+    assert float(kd_loss(a, a, temperature=2.0)) == pytest.approx(0, abs=1e-6)
+    # masked positions don't contribute
+    mask = jnp.zeros((4, 8)).at[:, :4].set(1.0)
+    c = a.at[:, 4:].set(100.0)
+    assert float(kd_loss(c, a, mask=mask)) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_ce_loss_matches_manual():
+    key = jax.random.PRNGKey(1)
+    logits = jax.random.normal(key, (2, 4, 8))
+    labels = jax.random.randint(key, (2, 4), 0, 8)
+    lp = jax.nn.log_softmax(logits)
+    manual = -np.mean([lp[i, j, labels[i, j]] for i in range(2)
+                       for j in range(4)])
+    assert float(ce_loss(logits, labels)) == pytest.approx(float(manual),
+                                                           rel=1e-5)
+
+
+def _setup(arch="granite-3-8b", init_steps=3, accum=1, compress=False):
+    cfg = get_config(arch).reduce()
+    key = jax.random.PRNGKey(2)
+    cfg, params, labels = build(cfg, key)
+    acfg = AnalogConfig(mode="analog", init_steps=init_steps,
+                        alpha_clip=2.5, range_decay=0.05)
+    tcfg = TrainConfig(peak_lr=1e-3, total_steps=20, kd_beta=0.0,
+                       ce_weight=1.0, accum_steps=accum,
+                       grad_compression=compress, remat=False)
+    lr = lambda s: polynomial_with_warmup(s, peak_lr=1e-3, total_steps=20)
+    step = jax.jit(make_train_step(cfg, acfg, tcfg, labels, lr))
+    state = init_train_state(params, compress)
+    return cfg, params, labels, state, step, key, acfg
+
+
+def _batch(cfg, key, accum=0):
+    b, s = 4, 12
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if accum:
+        batch = jax.tree.map(
+            lambda t: t.reshape(accum, b // accum, *t.shape[1:]), batch)
+    return batch
+
+
+def test_input_range_ema_then_decay():
+    cfg, params, labels, state, step, key, acfg = _setup(init_steps=3)
+    batch = _batch(cfg, key)
+    betas = [float(params["blocks"]["attn"]["qkv"]["input_range"][0, 0])]
+    p = params
+    for i in range(6):
+        p, state, m = step(p, state, batch, key)
+        betas.append(float(p["blocks"]["attn"]["qkv"]["input_range"][0, 0]))
+    # EMA init pushes beta to kappa*std(x) >> init value 3.0
+    assert betas[1] > 5.0
+    # after init_steps, decay pulls the (huge) range back down
+    assert betas[-1] < betas[3]
+
+
+def test_weight_clipping_enforced_every_step():
+    cfg, params, labels, state, step, key, acfg = _setup()
+    batch = _batch(cfg, key)
+    p, state, _ = step(params, state, batch, key)
+    w = np.asarray(p["blocks"]["attn"]["qkv"]["kernel"], np.float32)
+    # the step clips against the PRE-clip per-channel std, which is larger
+    # than the post-clip std we can observe here; 1.35x covers the shrink
+    # for alpha=2.5 Gaussian-ish weights (verified against clip_weight)
+    std = w.std(axis=-2, keepdims=True)
+    assert np.all(np.abs(w) <= acfg.alpha_clip * std * 1.35 + 1e-5)
+    # and the exact invariant: re-clipping with the same alpha must only
+    # touch the tail that the post-step std shift exposes
+    from repro.core.clipping import clip_weight
+    import jax.numpy as jnp2
+    reclipped = np.asarray(clip_weight(jnp2.asarray(w), acfg.alpha_clip,
+                                       axis=-2))
+    assert np.abs(reclipped - w).max() <= np.abs(w).max() * 0.2
+
+
+def test_grad_accumulation_matches_big_batch():
+    cfg, params, labels, state, step1, key, _ = _setup(accum=1)
+    *_, state2, step2, _, _ = _setup(accum=2)
+    batch = _batch(cfg, key)
+    batch2 = jax.tree.map(lambda t: t.reshape(2, 2, *t.shape[1:]), batch)
+    # disable noise-dependent paths by comparing loss only
+    p1, s1, m1 = step1(params, state, batch, key)
+    p2, s2, m2 = step2(params, state2, batch2, key)
+    # same data → losses close (noise keys differ per microbatch by design)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 0.3
+
+
+def test_compression_error_feedback_reduces_bias():
+    key = jax.random.PRNGKey(3)
+    g = {"w": jax.random.normal(key, (64, 64)) * 1e-3}
+    err = compression.init_error_state(g)
+    # accumulated dequantized grads with EF ≈ accumulated true grads
+    total_true = jnp.zeros((64, 64))
+    total_deq = jnp.zeros((64, 64))
+    for i in range(20):
+        gi = {"w": g["w"] * (1 + 0.1 * i)}
+        deq, err = compression.compress_grads(gi, err)
+        total_true += gi["w"]
+        total_deq += deq["w"]
+    rel = float(jnp.linalg.norm(total_deq - total_true)
+                / jnp.linalg.norm(total_true))
+    assert rel < 0.05
+
+
+def test_compressed_train_step_converges():
+    cfg, params, labels, state, step, key, _ = _setup(compress=True)
+    batch = _batch(cfg, key)
+    p = params
+    losses = []
+    for i in range(8):
+        p, state, m = step(p, state, batch, key)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_adamw_decay_mask():
+    params = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    labels = {"w": "analog_weight", "scale": "digital"}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    opt = init_opt_state(params)
+    p2, _, _ = adamw_update(params, grads, opt, labels, jnp.float32(0.1),
+                            AdamWConfig(weight_decay=0.1))
+    assert float(p2["w"][0, 0]) < 1.0       # decayed
+    assert float(p2["scale"][0]) == 1.0     # 1-D digital: no decay
