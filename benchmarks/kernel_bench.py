@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.analog import AnalogConfig, AnalogCtx, analog_linear, init_linear
 from repro.core.quant import rtn_quantize
 from repro.kernels import ops, ref
 from repro.kernels.ref import pack_int4
@@ -80,6 +81,29 @@ def run():
         warmup=1, iters=1)
     common.bench_row("kernel.analog_matmul.interpret_mode", us,
                      "pallas interpret=True (correctness path on CPU)")
+
+    # fused dispatch vs the unfused analog_linear pipeline, one prefill and
+    # one decode shape. On this CPU container the fused column times the
+    # interpret-mode kernel (functional, not perf — Mosaic numbers come from
+    # a TPU run); the perf statement that transfers is the HBM-bytes model.
+    ctx = AnalogCtx(key=None, training=False)
+    for label, (m, k, n) in [("prefill", (256, 512, 512)),
+                             ("decode", (8, 512, 512))]:
+        p = init_linear(jax.random.fold_in(key, m), k, n, use_bias=False)
+        x = jax.random.normal(jax.random.fold_in(key, m + 1), (1, m, k))
+        unfused = jax.jit(lambda p, x: analog_linear(
+            p, x, AnalogConfig(mode="analog"), ctx)[0])
+        fused = jax.jit(lambda p, x: analog_linear(
+            p, x, AnalogConfig(mode="analog", use_pallas=True), ctx)[0])
+        us_u, _ = common.timeit(unfused, p, x)
+        us_f, _ = common.timeit(fused, p, x, warmup=1, iters=2)
+        fused_bytes = 2 * (m * k + m * n) + 4 * k * n
+        unfused_bytes = 2 * (3 * m * k + 3 * m * n) + 4 * k * n
+        common.bench_row(
+            f"kernel.dispatch.{label}.{m}x{k}x{n}", us_f,
+            f"unfused_us={us_u:.1f} "
+            f"cpu_note=fused-col-is-interpret-mode "
+            f"tpu_traffic_saving={unfused_bytes / fused_bytes:.2f}x")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,14 @@ model routes through. Depending on :class:`AnalogConfig.mode` it executes:
 Deployment-time *programming* noise (W_hw-noise) is applied once per model
 instance by :func:`perturb_analog_weights` — not inside the forward — matching
 the paper's protocol (10 seeds = 10 simulated chip programmings).
+
+With :attr:`AnalogConfig.use_pallas` the ``analog``/``rtn`` MVMs execute as
+one fused AIMC tile op on the Pallas kernels via ``repro.kernels.dispatch``
+(DAC quant → MVM → per-column ADC quant; packed-int4 weights for ``rtn``
+serving with :attr:`AnalogConfig.int4_serve`). The fused forward is
+differentially tested against this file's unfused path
+(``tests/test_kernel_dispatch.py``); training backward always uses the
+unfused STE rules via the fused op's custom VJP.
 """
 
 from __future__ import annotations
@@ -32,6 +40,8 @@ import jax.numpy as jnp
 
 from repro.core import noise as noise_lib
 from repro.core import quant
+from repro.kernels import dispatch
+from repro.kernels import ref as kref
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +62,9 @@ class AnalogConfig:
     range_decay: float = 0.01          # input-range decay (AIHWKIT-Lightning)
     input_min_percentage: float = 0.95
     train_noise: bool = True           # noise-injection on/off (ablation C.2)
-    use_pallas: bool = False           # fused TPU kernel (target hardware path)
+    use_pallas: bool = False           # fused kernels (Mosaic on TPU,
+                                       # interpret-mode elsewhere)
+    int4_serve: bool = False           # rtn serving: packed-int4 weight kernel
 
     @property
     def is_analog(self) -> bool:
@@ -167,6 +179,7 @@ def analog_linear(p: dict, x: jax.Array, cfg: AnalogConfig,
         return y, stats
 
     # ---- input (DAC) side ----------------------------------------------
+    fused = dispatch.use_fused(cfg)   # static: cfg is config, not a tracer
     if cfg.mode in ("analog", "qat", "rtn"):
         # Table-3 digital deployment is SI8-W4-O8: the RTN path reuses the
         # learned static input ranges and the global ADC output quantizer.
@@ -179,13 +192,18 @@ def analog_linear(p: dict, x: jax.Array, cfg: AnalogConfig,
                 "clip_frac": jax.lax.stop_gradient(
                     jnp.mean((jnp.abs(xf) > beta).astype(jnp.float32))),
             }
-        x_q = quant.input_quantize(xf, beta, cfg.input_bits)
+        # The fused tile op quantizes inside the kernel; only the unfused
+        # path (and the int4 digital periphery) quantizes here.
+        x_q = None if fused else quant.input_quantize(xf, beta, cfg.input_bits)
     else:  # di8: dynamic per-token ranges (SpinQuant baseline)
         x_q = quant.dynamic_input_quantize(x.astype(jnp.float32), cfg.input_bits)
         beta = None
+        fused = False
 
-    # ---- weight side ------------------------------------------------------
+    # ---- weight side + MVM ------------------------------------------------
     wf = w.astype(jnp.float32)
+    adc_done = False
+    col_max = None                 # precomputed per-column absmax (int4 path)
     if cfg.mode == "analog":
         if ctx.training and cfg.train_noise and ctx.key is not None:
             w_noise = noise_lib.gaussian_weight_noise(
@@ -193,19 +211,56 @@ def analog_linear(p: dict, x: jax.Array, cfg: AnalogConfig,
             w_noise = jax.lax.stop_gradient(w_noise)
         else:
             w_noise = jnp.zeros_like(wf)
-        y = noisy_matmul(x_q, wf, w_noise)
+        if fused:
+            bound = jax.lax.stop_gradient(
+                kref.adc_bound(wf, beta, cfg.out_bound))
+            y = dispatch.fused_analog_mvm(
+                xf, wf, w_noise, beta, bound,
+                in_bits=cfg.input_bits, out_bits=cfg.output_bits)
+            adc_done = True
+        else:
+            y = noisy_matmul(x_q, wf, w_noise)
     elif cfg.mode in ("qat", "di8"):
         w_q = quant.weight_fake_quant(wf, cfg.weight_bits)
         y = jnp.matmul(x_q, w_q, preferred_element_type=jnp.float32)
-    else:  # rtn
-        w_int, scale = quant.rtn_quantize(wf, cfg.weight_bits)
-        wf = quant.rtn_dequantize(w_int, scale)
-        y = jnp.matmul(x_q, wf, preferred_element_type=jnp.float32)
+    else:  # rtn (eval-only: no autodiff rules needed on the fused paths)
+        use_int4 = (cfg.use_pallas and cfg.int4_serve
+                    and dispatch.can_use_int4(w.shape[-1], cfg.weight_bits))
+        if use_int4:
+            # Packed-int4 serving kernel; DAC/ADC quantization stay in the
+            # digital periphery (same bound as unfused). Independent of
+            # output_quant — the ADC is outside this kernel.
+            if x_q is None:
+                x_q = quant.input_quantize(xf, beta, cfg.input_bits)
+            if "int4" in p:   # precomputed once by pack_int4_weights
+                y = dispatch.int4_mvm_packed(
+                    x_q, p["int4"]["packed"], p["int4"]["scale"])
+                col_max = p["int4"]["colmax"]
+            else:             # functional fallback: quantize+pack per call
+                w_int, scale = quant.rtn_quantize(wf, cfg.weight_bits)
+                wf = quant.rtn_dequantize(w_int, scale)
+                y = dispatch.int4_mvm(x_q, w_int, scale)
+        else:
+            w_int, scale = quant.rtn_quantize(wf, cfg.weight_bits)
+            wf = quant.rtn_dequantize(w_int, scale)
+            if fused:
+                bound = jax.lax.stop_gradient(
+                    kref.adc_bound(wf, beta, cfg.out_bound))
+                y = dispatch.analog_mvm(xf, wf, beta, bound,
+                                        in_bits=cfg.input_bits,
+                                        out_bits=cfg.output_bits)
+                adc_done = True
+            else:
+                y = jnp.matmul(x_q, wf, preferred_element_type=jnp.float32)
 
     # ---- output (ADC) side -----------------------------------------------
-    if cfg.output_quant and cfg.mode in ("analog", "rtn") and beta is not None:
-        col_max = jax.lax.stop_gradient(noise_lib.channel_absmax(wf, axis=0))
-        bound = cfg.out_bound * jax.lax.stop_gradient(beta) * col_max[0]
+    if (cfg.output_quant and cfg.mode in ("analog", "rtn")
+            and beta is not None and not adc_done):
+        if col_max is not None:   # precomputed dequantized-weight absmax
+            bound = jax.lax.stop_gradient(cfg.out_bound * beta * col_max)
+        else:
+            bound = jax.lax.stop_gradient(
+                kref.adc_bound(wf, beta, cfg.out_bound))
         y = quant.output_quantize(y, bound, jnp.float32(cfg.output_bits))
 
     y = y.astype(in_dtype)
@@ -244,6 +299,50 @@ def perturb_analog_weights(params, labels, key: jax.Array, model: str,
         else:
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def pack_int4_weights(params, labels, bits: int = 4):
+    """Serving-side transform: precompute the packed-int4 carriers.
+
+    Walks every analog linear site and attaches an ``"int4"`` sub-dict —
+    ``packed`` [.., K, N//2] uint8 two-nibble weights, ``scale`` [.., N]
+    per-column dequant scales, ``colmax`` [.., N] per-column absmax of the
+    *dequantized* weights (so the runtime ADC bound matches the unfused RTN
+    path bit-for-bit). ``analog_linear``'s ``int4_serve`` path consumes
+    these directly, so serving never re-quantizes or re-packs per call and
+    decode reads weights at int4 bandwidth. Sites with odd N (unpackable)
+    are left untouched and fall back to on-the-fly packing.
+
+    Stacked scan weights [L, K, N] keep their leading dims (packed arrays
+    stack the same way, so ``lax.scan`` slices them per layer as usual).
+    Training pytrees are untouched — this is an opt-in deployment transform,
+    like :func:`quantize_for_digital`.
+    """
+    def pack_site(w):
+        flat = w.reshape((-1,) + w.shape[-2:])
+
+        def one(wk):
+            w_int, scale = quant.rtn_quantize(wk.astype(jnp.float32), bits)
+            deq = quant.rtn_dequantize(w_int, scale)
+            return (kref.pack_int4(w_int), scale[0],
+                    jnp.max(jnp.abs(deq), axis=0))
+
+        packed, scale, colmax = jax.vmap(one)(flat)
+        lead = w.shape[:-2]
+        return {"packed": packed.reshape(lead + packed.shape[1:]),
+                "scale": scale.reshape(lead + scale.shape[1:]),
+                "colmax": colmax.reshape(lead + colmax.shape[1:])}
+
+    def walk(p, lab):
+        if not isinstance(p, dict):
+            return p
+        out = {k: walk(p[k], lab[k]) for k in p}
+        if (isinstance(lab, dict) and lab.get("kernel") == "analog_weight"
+                and p["kernel"].shape[-1] % 2 == 0):
+            out["int4"] = pack_site(p["kernel"])
+        return out
+
+    return walk(params, labels)
 
 
 def quantize_for_digital(params, labels, bits: int = 4):

@@ -22,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref as ref_kernels
+
 
 def qmax(bits: int) -> float:
     """Largest positive integer level of a symmetric ``bits``-bit quantizer."""
@@ -54,17 +56,21 @@ def input_quantize(x: jax.Array, beta: jax.Array, bits: int) -> jax.Array:
     """
     q = qmax(bits)
     beta = jnp.maximum(beta, 1e-8)
-    scale = beta / q
+    # Reciprocal-free: round(x * (q/beta)) instead of round(x / (beta/q)).
+    # XLA rewrites large-tensor divisions by broadcast scales into multiplies
+    # by the reciprocal, which perturbs values landing exactly on a rounding
+    # boundary (systematic on the RTN lattice). Keeping the big-tensor op a
+    # plain multiply makes the decision bit-identical across eager, jit and
+    # the fused Pallas kernels — required by the differential parity suite.
     xc = jnp.clip(x, -beta, beta)
-    return scale * jnp.round(xc / scale)
+    return (beta / q) * jnp.round(xc * (q / beta))
 
 
 def _input_quantize_fwd(x, beta, bits):
     q = qmax(bits)
     beta = jnp.maximum(beta, 1e-8)
-    scale = beta / q
     xc = jnp.clip(x, -beta, beta)
-    xq = scale * jnp.round(xc / scale)
+    xq = (beta / q) * jnp.round(xc * (q / beta))
     return xq, (x, beta, xq)
 
 
@@ -114,8 +120,11 @@ def output_quantize(y: jax.Array, bound: jax.Array, bits_f: jax.Array) -> jax.Ar
     """
     q = 2.0 ** (bits_f - 1.0) - 1.0
     bound = jnp.maximum(bound, 1e-8)
-    scale = bound / q
-    return jnp.clip(scale * jnp.round(y / scale), -bound, bound)
+    # Reciprocal-free (see input_quantize) with the shared deterministic
+    # tie-break: the rounding decision must agree between this path and the
+    # fused ADC stage on the kernels (see kernels.ref.ADC_TIE_BREAK).
+    inv = (q / bound) * ref_kernels.ADC_TIE_BREAK
+    return jnp.clip((bound / q) * jnp.round(y * inv), -bound, bound)
 
 
 def _output_quantize_fwd(y, bound, bits_f):
@@ -157,7 +166,7 @@ def rtn_quantize(w: jax.Array, bits: int, axis: int = 0):
     q = qmax(bits)
     beta = jnp.maximum(jnp.max(jnp.abs(w), axis=axis, keepdims=True), 1e-12)
     scale = beta / q
-    w_int = jnp.clip(jnp.round(w / scale), -q, q).astype(jnp.int8)
+    w_int = jnp.clip(jnp.round(w * (q / beta)), -q, q).astype(jnp.int8)
     return w_int, scale
 
 

@@ -5,9 +5,11 @@
 - int4_matmul:   packed-int4 digital deployment matmul
 - ssd_scan:      chunked Mamba-2 SSD scan (state carried in VMEM scratch)
 
-``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+``dispatch`` is the kernel-dispatch layer ``analog_linear`` routes through
+when ``AnalogConfig.use_pallas`` is set; ``ops`` holds the jit'd public
+wrappers; ``ref`` the pure-jnp oracles.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["dispatch", "ops", "ref"]

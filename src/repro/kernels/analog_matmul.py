@@ -30,6 +30,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ref import ADC_TIE_BREAK as _TIE_BREAK
+from repro.kernels.ref import round_up as _rup
+
 
 def _analog_matmul_kernel(beta_ref, x_ref, w_ref, bound_ref, o_ref, acc_ref,
                           *, in_bits: int, out_bits: int, k_steps: int):
@@ -40,11 +43,12 @@ def _analog_matmul_kernel(beta_ref, x_ref, w_ref, bound_ref, o_ref, acc_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # --- eq. (1): DAC fake-quant of the activation tile (VPU ops) ---------
+    # Reciprocal-free round(v * (q/range)) formulation — bit-identical to
+    # core.quant / kernels.ref (see the note in quant.input_quantize).
     qi = float(2 ** (in_bits - 1) - 1)
     beta = jnp.maximum(beta_ref[0, 0].astype(jnp.float32), 1e-8)
-    s_in = beta / qi
     x = x_ref[...].astype(jnp.float32)
-    x_q = s_in * jnp.round(jnp.clip(x, -beta, beta) / s_in)
+    x_q = (beta / qi) * jnp.round(jnp.clip(x, -beta, beta) * (qi / beta))
 
     # --- MXU matmul with f32 accumulation ---------------------------------
     acc_ref[...] += jax.lax.dot_general(
@@ -57,9 +61,9 @@ def _analog_matmul_kernel(beta_ref, x_ref, w_ref, bound_ref, o_ref, acc_ref,
     def _finish():
         qo = float(2 ** (out_bits - 1) - 1)
         b = jnp.maximum(bound_ref[...].astype(jnp.float32), 1e-8)  # (1, bn)
-        s_out = b / qo
         y = acc_ref[...]
-        y_q = jnp.clip(s_out * jnp.round(y / s_out), -b, b)
+        inv = (qo / b) * _TIE_BREAK
+        y_q = jnp.clip((b / qo) * jnp.round(y * inv), -b, b)
         o_ref[...] = y_q.astype(o_ref.dtype)
 
 
@@ -108,7 +112,3 @@ def analog_matmul(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
         interpret=interpret,
     )(beta2, xp, wp, bp)
     return out[:m, :n]
-
-
-def _rup(v: int, mult: int) -> int:
-    return ((v + mult - 1) // mult) * mult

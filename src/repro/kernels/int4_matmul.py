@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ref import round_up as _rup
+
 
 def _int4_matmul_kernel(x_ref, wp_ref, scale_ref, o_ref, acc_ref,
                         *, k_steps: int):
@@ -86,7 +88,3 @@ def int4_matmul(x: jax.Array, w_packed: jax.Array, scale: jax.Array, *,
         interpret=interpret,
     )(xp, wp, sp)
     return out[:m, :n]
-
-
-def _rup(v: int, mult: int) -> int:
-    return ((v + mult - 1) // mult) * mult

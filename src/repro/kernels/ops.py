@@ -2,9 +2,12 @@
 
 These handle batch-dim flattening, dtype plumbing and the CPU/TPU switch:
 on the CPU container the kernels run in ``interpret=True`` mode (functional
-validation); on TPU (the target) they compile to Mosaic. The pure-jnp path
-(``*_ref``) is what the jit'd models use on CPU so XLA's fusion and
-cost-analysis see ordinary HLO — the kernels are the TPU deployment artifact.
+validation); on TPU (the target) they compile to Mosaic. Without
+``force_kernel`` the CPU path is the pure-jnp oracle (``*_ref``) so XLA's
+fusion and cost-analysis see ordinary HLO. The model forward itself routes
+through ``repro.kernels.dispatch`` instead (via ``analog_linear`` when
+``AnalogConfig.use_pallas`` is set), which always executes the kernels —
+interpret-mode on CPU — so the deployed path is what gets tested.
 """
 
 from __future__ import annotations
@@ -12,32 +15,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as _dispatch
 from repro.kernels import ref as _ref
-from repro.kernels.analog_matmul import analog_matmul as _analog_matmul
-from repro.kernels.int4_matmul import int4_matmul as _int4_matmul
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _flatten_batch(x):
-    lead = x.shape[:-1]
-    return x.reshape(-1, x.shape[-1]), lead
+_on_tpu = _dispatch.on_tpu
+_flatten_batch = _dispatch.flatten_batch
 
 
 def analog_matmul(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
                   bound: jax.Array, *, in_bits: int = 8, out_bits: int = 8,
                   force_kernel: bool = False) -> jax.Array:
     """Fused DAC-quant → MVM → ADC-quant over arbitrary leading batch dims."""
-    x2, lead = _flatten_batch(x)
     if _on_tpu() or force_kernel:
-        y = _analog_matmul(x2, w_eff, beta, bound, in_bits=in_bits,
-                           out_bits=out_bits, interpret=not _on_tpu())
-    else:
-        y = _ref.analog_matmul_ref(x2, w_eff, beta, bound,
-                                   in_bits=in_bits, out_bits=out_bits)
+        return _dispatch.analog_mvm(x, w_eff, beta, bound,
+                                    in_bits=in_bits, out_bits=out_bits)
+    x2, lead = _flatten_batch(x)
+    y = _ref.analog_matmul_ref(x2, w_eff, beta, bound,
+                               in_bits=in_bits, out_bits=out_bits)
     return y.reshape(*lead, w_eff.shape[-1])
 
 
@@ -46,7 +41,12 @@ def int4_matmul(x: jax.Array, w_packed: jax.Array, scale: jax.Array, *,
     """Packed-int4 weight matmul over arbitrary leading batch dims."""
     x2, lead = _flatten_batch(x)
     if _on_tpu() or force_kernel:
-        y = _int4_matmul(x2, w_packed, scale, interpret=not _on_tpu())
+        from repro.kernels.int4_matmul import int4_matmul as _kernel
+        m, kdim = x2.shape
+        n = w_packed.shape[-1] * 2
+        bm, bn, bk = _dispatch.select_blocks(m, kdim, n)
+        y = _kernel(x2, w_packed, scale, bm=bm, bn=bn, bk=bk,
+                    interpret=not _on_tpu())
     else:
         y = _ref.int4_matmul_ref(x2, w_packed, scale)
     return y.reshape(*lead, w_packed.shape[-1] * 2)

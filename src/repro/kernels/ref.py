@@ -14,6 +14,36 @@ def _qmax(bits: int) -> float:
     return float(2 ** (bits - 1) - 1)
 
 
+# Deterministic ADC tie-break, shared by every implementation of eq. (2)
+# (``core.quant.output_quantize``, this oracle, the fused kernel's ADC
+# stage). RTN-lattice arithmetic places accumulator values *exactly* on
+# round-half boundaries, where a 1-ulp accumulation-order difference
+# (K-padding, blocked K loops, XLA reassociation) flips a full ADC level.
+# Scaling the rounding operand by (1 - 2^-16) moves the decision boundary
+# strictly between lattice points (lattice spacing ≥ 1/(qi*qo) ≫ 2^-16), so
+# all implementations agree as long as their accumulations differ by much
+# less than 2^-16 relative — true for any reassociation of an f32 dot.
+ADC_TIE_BREAK = 1.0 - 2.0 ** -16
+
+
+def round_up(v: int, mult: int) -> int:
+    """Round ``v`` up to a multiple of ``mult`` (block/tile padding helper)."""
+    return ((v + mult - 1) // mult) * mult
+
+
+def adc_bound(w_eff: jax.Array, beta: jax.Array, lam: float) -> jax.Array:
+    """Per-column ADC bound of eq. (2): ``lam * beta * max|W[:, i]|``.
+
+    Shared between the unfused path (``core.analog``), the fused dispatch
+    layer and the oracles — one definition so the parity suite compares the
+    same quantizer. ``w_eff`` is the effective weight matrix the MVM actually
+    executes (noise-free for the analog training bound, RTN-dequantized for
+    digital deployment). Reduces over ``axis=0`` (per output column / ADC).
+    """
+    col_max = jnp.max(jnp.abs(w_eff.astype(jnp.float32)), axis=0)
+    return lam * beta.astype(jnp.float32) * col_max
+
+
 def analog_matmul_ref(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
                       bound: jax.Array, *, in_bits: int = 8,
                       out_bits: int = 8) -> jax.Array:
@@ -23,20 +53,23 @@ def analog_matmul_ref(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
     w_eff   [K, N]   effective (already noise-perturbed) weights
     beta    scalar   static input range (eq. 1)
     bound   [N]      per-column ADC bound = lambda_adc * beta * max|W[:,i]| (eq. 2)
+
+    Quantizers are formulated reciprocal-free — ``round(v * (q/range))``
+    rather than ``round(v / scale)`` — matching ``core.quant`` and the fused
+    kernel bit-for-bit (see the note in ``quant.input_quantize``).
     """
     xf = x.astype(jnp.float32)
     qi = _qmax(in_bits)
     beta = jnp.maximum(beta.astype(jnp.float32), 1e-8)
-    s_in = beta / qi
-    x_q = s_in * jnp.round(jnp.clip(xf, -beta, beta) / s_in)
+    x_q = (beta / qi) * jnp.round(jnp.clip(xf, -beta, beta) * (qi / beta))
 
     y = jnp.matmul(x_q, w_eff.astype(jnp.float32),
                    preferred_element_type=jnp.float32)
 
     qo = _qmax(out_bits)
     b = jnp.maximum(bound.astype(jnp.float32), 1e-8)[None, :]
-    s_out = b / qo
-    y_q = jnp.clip(s_out * jnp.round(y / s_out), -b, b)
+    inv = (qo / b) * ADC_TIE_BREAK
+    y_q = jnp.clip((b / qo) * jnp.round(y * inv), -b, b)
     return y_q.astype(x.dtype)
 
 

@@ -4,6 +4,16 @@ Every projection matmul routes through :func:`repro.core.analog_linear`; the
 attention computation itself, norms, activations and residual adds stay in
 high precision ("digital units" in the paper's heterogeneous accelerator).
 
+Because ``analog_linear`` is the single MVM entry point, setting
+``AnalogConfig.use_pallas`` routes *every* projection here through the fused
+Pallas tile op (``repro.kernels.dispatch``) with no changes to this module:
+the dispatch layer flattens the ``[B, S, K]`` activations these blocks hand
+it, works on the per-layer ``[K, N]`` weight slices ``lax.scan`` carves out
+of the stacked ``[L, K, N]`` parameters, and drops to decode-shape blocks
+(``bm = 8``) for the single-token ``x.shape[1] == 1`` branch of
+:func:`attention`. Pytree structure (params, stats, caches) is unchanged
+either way — verified by the ``tests/test_kernel_dispatch.py`` parity suite.
+
 All blocks return ``(y, stats)`` where ``stats`` mirrors the linear-site
 structure of their params (x_std / clip_frac per site) — consumed by the
 input-range EMA-init/decay rules in the trainer.

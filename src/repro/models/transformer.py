@@ -8,6 +8,14 @@ with optional ``jax.checkpoint`` remat on the block body.
 Heterogeneous (Jamba) stacks scan over *super-blocks* of ``attn_every``
 layers: 1 attention + 7 mamba mixers with alternating dense/MoE FFNs,
 unrolled inside the scan body (DESIGN.md §3).
+
+Fused-kernel note: with ``AnalogConfig.use_pallas`` the per-layer weight
+slices the scan body hands to ``analog_linear`` execute on the fused Pallas
+analog-MVM kernel (interpret-mode on CPU). This composes with everything
+here — ``lax.scan`` over stacked layers, ``jax.checkpoint`` remat (the
+custom-VJP fused op recomputes its Pallas forward under remat), and the
+``vmap`` over experts in ``models.moe`` (Pallas' batching rule adds a grid
+dimension). See ``repro.kernels.dispatch`` for the dispatch rules.
 """
 
 from __future__ import annotations

@@ -8,6 +8,7 @@ synthetic-data pipeline, the test-time-compute harness and the examples).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -18,6 +19,24 @@ from repro.core.analog import AnalogConfig, AnalogCtx
 from repro.models import apply as model_apply
 from repro.models import transformer as T
 from repro.serve.sampling import sample_logits
+
+
+def digital_int4_config(acfg: AnalogConfig) -> AnalogConfig:
+    """Serving config for the Table-3 digital deployment path.
+
+    RTN 4-bit weights executed by the packed-int4 kernel (weight bandwidth
+    halved vs bf16 — the dominant term at decode shapes, where the dispatch
+    layer picks ``bm = 8`` blocks for the single-token M dimension). Input
+    and output quantization stay in the digital periphery with the learned
+    static ranges, so outputs match the unfused ``rtn`` path.
+
+    Pair with ``core.analog.pack_int4_weights(params, labels)`` to
+    precompute the packed carriers once per deployment — otherwise each
+    call falls back to quantize+pack on the fly (functionally identical,
+    but the weights are read at full precision).
+    """
+    return dataclasses.replace(acfg, mode="rtn", use_pallas=True,
+                               int4_serve=True)
 
 
 def prefill(params, cfg, acfg: AnalogConfig, tokens: jax.Array,
@@ -39,7 +58,14 @@ def prefill(params, cfg, acfg: AnalogConfig, tokens: jax.Array,
 
 def serve_step(params, cfg, acfg: AnalogConfig, token: jax.Array,
                caches, pos: jax.Array):
-    """One decode step: token [B, 1(, K)] + caches → (logits [B, V...], caches)."""
+    """One decode step: token [B, 1(, K)] + caches → (logits [B, V...], caches).
+
+    With ``acfg.use_pallas`` every projection runs the fused analog-MVM
+    kernel at decode-shape blocks (``bm = 8`` — the flattened M is just the
+    batch for single-token steps); add ``acfg.int4_serve`` (see
+    :func:`digital_int4_config`) to serve RTN weights from the packed-int4
+    kernel instead.
+    """
     ctx = AnalogCtx(key=None, training=False)
     logits, _, caches = model_apply(params, cfg, acfg, ctx,
                                     {"tokens": token}, caches=caches,

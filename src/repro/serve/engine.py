@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analog import AnalogConfig
-from repro.serve.decode import generate
+from repro.serve.decode import digital_int4_config, generate
 from repro.serve.prm import NoisyOraclePRM, select_answer
 
 
@@ -26,12 +26,15 @@ class BestOfNConfig:
     top_p: float = 1.0
     max_new: int = 1
     batch_size: int = 64
+    int4_serve: bool = False     # serve RTN weights via the packed-int4 kernel
 
 
 def sample_candidates(params, cfg, acfg: AnalogConfig, key,
                       prompts: np.ndarray, n: int,
                       bcfg: BestOfNConfig = BestOfNConfig()) -> np.ndarray:
     """→ answers [num_prompts, n] (first generated token per candidate)."""
+    if bcfg.int4_serve:
+        acfg = digital_int4_config(acfg)
     num = len(prompts)
     rep = np.repeat(prompts, n, axis=0)              # prompt-major packing
     outs = []

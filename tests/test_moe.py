@@ -1,13 +1,16 @@
-"""MoE routing invariants (hypothesis + unit)."""
+"""MoE routing invariants (hypothesis + unit).
+
+Property tests skip (instead of breaking collection) when hypothesis is
+absent — see tests/strategies.py / requirements-dev.txt.
+"""
 
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from strategies import given, settings, st
 
 from repro.configs import get_config
 from repro.core.analog import AnalogConfig, AnalogCtx

@@ -1,11 +1,14 @@
-"""Noise-model and weight-clipping properties (paper eqs. 3–5, App. E.3)."""
+"""Noise-model and weight-clipping properties (paper eqs. 3–5, App. E.3).
 
-import hypothesis.strategies as st
+Property tests skip (instead of breaking collection) when hypothesis is
+absent — see tests/strategies.py / requirements-dev.txt.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from strategies import given, settings, st
 
 from repro.core import clipping, noise
 from repro.core.analog import noisy_matmul

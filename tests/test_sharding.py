@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import make_abstract_mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -55,7 +56,7 @@ def test_param_specs_sites():
 
 
 def test_divisibility_guard_drops_axes():
-    mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+    mesh = make_abstract_mesh((1, 2), ("data", "model"))
     rules = shd.default_rules(mesh)
     with shd.activate(mesh, rules):
         # 7 not divisible by model=2 → replicated
@@ -66,7 +67,7 @@ def test_divisibility_guard_drops_axes():
 
 
 def test_zero_spec_upgrades_free_dim():
-    mesh = jax.sharding.AbstractMesh((2, 1), ("data", "model"))
+    mesh = make_abstract_mesh((2, 1), ("data", "model"))
     rules = shd.default_rules(mesh)
     params = {"w": jnp.zeros((8, 6))}
     with shd.activate(mesh, rules):

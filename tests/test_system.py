@@ -26,6 +26,10 @@ from repro.models import build
 from repro.train.recipes import distill_recipe, pretrain_recipe
 from repro.train.train_step import TrainConfig
 
+# The module-scoped pipeline fixture pretrains + distills (several minutes on
+# CPU) — CI's fast lane skips the whole module via -m "not slow".
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def pipeline():
