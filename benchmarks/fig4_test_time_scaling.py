@@ -20,8 +20,10 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ArchConfig
-from repro.core.analog import AnalogConfig, perturb_analog_weights
-from repro.eval.tasks import make_mod_add_data, mod_add_train_tokens
+from repro.core.analog import (AnalogConfig, pack_int4_weights,
+                               perturb_analog_weights)
+from repro.eval.tasks import (make_mod_add_data, mod_add_extraction,
+                              mod_add_train_tokens)
 from repro.models import build
 from repro.serve.engine import BestOfNConfig, best_of_n_accuracy, \
     sample_candidates
@@ -69,17 +71,26 @@ def run(num_prompts: int = 48, n_max: int = 16) -> dict:
                                          mod=MOD)
     key = jax.random.PRNGKey(5)
     prm = NoisyOraclePRM(reliability=0.8, seed=2)
-    bcfg = BestOfNConfig(temperature=1.0, max_new=1, batch_size=128)
+    # multi-token candidates on the continuous-batching engine: SEP acts as
+    # the stop token, the task hook extracts the first answer-alphabet token
+    bcfg = BestOfNConfig(temperature=1.0, max_new=2, stop_tokens=(MOD,),
+                         num_slots=32, prefill_chunk=4)
 
+    # three serving modes end-to-end on the continuous-batching engine:
+    # plain fp (off), analog with one simulated chip programming, and the
+    # Table-3 digital path on the packed-int4 kernel
     results = {}
     settings = [
-        ("teacher-W16", teacher, AnalogConfig(mode="off")),
+        ("teacher-W16", teacher, AnalogConfig(mode="off"), bcfg),
         ("analog-FM-hwn", perturb_analog_weights(
-            afm, labels, jax.random.PRNGKey(11), "hw"), common.ANALOG),
+            afm, labels, jax.random.PRNGKey(11), "hw"), common.ANALOG, bcfg),
+        ("analog-FM-int4", pack_int4_weights(afm, labels),
+         dataclasses.replace(common.ANALOG, weight_bits=4),
+         dataclasses.replace(bcfg, int4_serve=True)),
     ]
-    for label, params, acfg in settings:
+    for label, params, acfg, bc in settings:
         cands = sample_candidates(params, cfg, acfg, key, prompts, n_max,
-                                  bcfg)
+                                  bc, extract=mod_add_extraction(MOD))
         res = best_of_n_accuracy(cands, answers, prm, ns=list(NS))
         results[label] = res
         best = {n: max(res[s][n]["mean"] for s in res) for n in NS}

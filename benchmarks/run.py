@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   fig3      — Gaussian-noise magnitude sweep
   table3    — RTN int4 digital deployment
   fig4      — test-time compute scaling (best-of-n + PRM)
+  serve     — static vs continuous-batching serving (BENCH_serve.json)
   ablations — Tables 7/10/11/12/13, App. B.1
   roofline  — three-term roofline per dry-run cell (reads artifacts)
 
@@ -28,7 +29,7 @@ def main() -> None:
 
     from benchmarks import (ablations, appendix_a, fig3_noise_sweep,
                             fig4_test_time_scaling, kernel_bench, roofline,
-                            table1_robustness, table3_rtn)
+                            serve_bench, table1_robustness, table3_rtn)
 
     sections = {
         "kernels": kernel_bench.run,
@@ -36,6 +37,7 @@ def main() -> None:
         "fig3": fig3_noise_sweep.run,
         "table3": table3_rtn.run,
         "fig4": fig4_test_time_scaling.run,
+        "serve": lambda: serve_bench.run(quick=True),
         "ablations": ablations.run,
         "appendixA": appendix_a.run,
         "roofline": roofline.run,

@@ -1,0 +1,197 @@
+"""Serving throughput benchmark: static pad-to-max vs continuous batching.
+
+Drives the same mixed-length synthetic workload (ragged prompt lengths and
+per-request token budgets) through
+
+* **static** — the legacy ``serve.decode.generate`` loop: prompts padded to
+  the workload max, requests batched in fixed groups of ``num_slots``, every
+  group decoding until its *largest* budget is exhausted (the pre-scheduler
+  serving path), and
+* **continuous** — the request-level ``serve.scheduler.ServeEngine``: slots
+  recycle the moment a request finishes, waiting requests are admitted
+  mid-decode via chunked left-padded prefill.
+
+Both paths run once untimed (to compile every executable) and once timed.
+Emits ``BENCH_serve.json`` with useful-token throughput and p50/p99 request
+latency for both engines, the speedup, and the result of the scheduler's
+admission-parity check (solo request ≡ request admitted mid-batch) — the
+start of the serving perf trajectory (ROADMAP: serve heavy mixed traffic).
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py [--quick] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.analog import AnalogConfig
+from repro.models import build
+from repro.serve.decode import generate
+from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
+                                   required_max_len)
+
+from benchmarks import common
+
+
+def bench_arch(d_model: int = 320, num_layers: int = 6) -> ArchConfig:
+    """A serving-shaped toy config: big enough that one decode step's
+    compute dominates the per-step host dispatch, small enough for CI."""
+    return ArchConfig(name="serve-bench", family="dense",
+                      num_layers=num_layers, d_model=d_model, num_heads=8,
+                      num_kv_heads=4, d_ff=4 * d_model, vocab_size=2048,
+                      d_head=40, norm="rmsnorm", act="silu")
+
+
+def make_workload(num_requests: int, max_prompt: int, max_new: int,
+                  seed: int = 0) -> list[Request]:
+    """Mixed-length requests: ragged prompts, bimodal decode budgets.
+
+    Budgets follow serving reality — most requests are short, a heavy tail
+    runs to the full ``max_new``. Under pad-to-max batching one long
+    request pins its whole group at the long budget; slot recycling is
+    exactly what continuous batching monetizes here.
+    """
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(num_requests):
+        plen = int(rng.integers(4, max_prompt + 1))
+        budget = (max_new if rng.random() < 0.25
+                  else int(rng.integers(2, max(3, max_new // 4))))
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(0, 2048, plen).astype(np.int32),
+            max_new=budget, temperature=0.8, seed=seed + i))
+    return reqs
+
+
+_STATIC_JIT: dict = {}
+
+
+def run_static(params, cfg, acfg, reqs, num_slots):
+    """Pad-to-max batched serving: groups of ``num_slots``, each decoding
+    to the group's largest budget. Returns (wall_s, latencies_s, tokens).
+
+    The per-group ``generate`` call is jit-wrapped and cached per
+    ``(batch, num_new)`` shape, so the baseline pays zero re-tracing —
+    the comparison isolates scheduling, not dispatch overhead.
+    """
+    max_prompt = max(len(r.prompt) for r in reqs)
+    lats, useful = [], 0
+    t0 = time.perf_counter()
+    for g in range(0, len(reqs), num_slots):
+        group = reqs[g:g + num_slots]
+        batch = np.zeros((len(group), max_prompt), np.int32)
+        for i, r in enumerate(group):         # left-pad to the workload max
+            batch[i, max_prompt - len(r.prompt):] = r.prompt
+        new = max(r.max_new for r in group)
+        sig = (id(cfg), id(acfg), len(group), max_prompt, new)
+        if sig not in _STATIC_JIT:
+            _STATIC_JIT[sig] = jax.jit(
+                lambda p, k, b, n=new: generate(p, cfg, acfg, k, b, n,
+                                                temperature=0.8))
+        toks = _STATIC_JIT[sig](params, jax.random.PRNGKey(g),
+                                jax.numpy.asarray(batch))
+        toks.block_until_ready()
+        done = time.perf_counter() - t0
+        lats += [done] * len(group)
+        useful += sum(r.max_new for r in group)
+    return time.perf_counter() - t0, lats, useful
+
+
+def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk):
+    """Continuous batching. Returns (wall_s, latencies_s, tokens, steps)."""
+    max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
+                  for r in reqs)
+    eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
+        num_slots=num_slots, max_len=max_len, prefill_chunk=prefill_chunk))
+    t0 = time.perf_counter()
+    results = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    lats = [eng.finished_at[r.uid] - t0 for r in reqs]
+    return wall, lats, sum(len(v) for v in results.values()), eng.decode_steps
+
+
+def parity_check(params, cfg, acfg, num_slots, prefill_chunk) -> bool:
+    """Acceptance check: a request admitted mid-batch at step k produces
+    exactly the tokens it produces running solo."""
+    scfg = SchedulerConfig(num_slots=num_slots, max_len=96,
+                           prefill_chunk=prefill_chunk)
+    rng = np.random.default_rng(7)
+    target = Request(uid=99, prompt=rng.integers(0, 2048, 9).astype(np.int32),
+                     max_new=10, temperature=0.9, top_k=64, seed=123)
+    solo = ServeEngine(params, cfg, acfg, scfg).run([target])[99]
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    for i in range(num_slots):
+        eng.submit(Request(
+            uid=i, prompt=rng.integers(0, 2048, 5 + i).astype(np.int32),
+            max_new=3 + i, temperature=1.0, seed=i))
+    for _ in range(2):
+        eng.step()                         # slots busy, decode under way
+    eng.submit(target)                     # admitted mid-decode
+    mixed = eng.run()[99]
+    return bool(np.array_equal(solo, mixed))
+
+
+def summarize(wall, lats, tokens):
+    lats_ms = np.asarray(lats) * 1e3
+    return {"wall_s": round(wall, 3), "tokens": int(tokens),
+            "tokens_per_s": round(tokens / wall, 1),
+            "p50_ms": round(float(np.percentile(lats_ms, 50)), 1),
+            "p99_ms": round(float(np.percentile(lats_ms, 99)), 1)}
+
+
+def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
+        prefill_chunk=16, quick=False, out="BENCH_serve.json"):
+    if quick:
+        num_requests, max_prompt, max_new, num_slots = 20, 16, 48, 8
+    cfg = bench_arch() if not quick else bench_arch(192, 4)
+    cfg, params, labels = build(cfg, jax.random.PRNGKey(0))
+    acfg = AnalogConfig(mode="off")
+    reqs = make_workload(num_requests, max_prompt, max_new)
+
+    # untimed warm-up pass compiles every executable both paths use
+    run_static(params, cfg, acfg, reqs, num_slots)
+    run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk)
+
+    s_wall, s_lats, s_tok = run_static(params, cfg, acfg, reqs, num_slots)
+    c_wall, c_lats, c_tok, steps = run_continuous(
+        params, cfg, acfg, reqs, num_slots, prefill_chunk)
+    parity = parity_check(params, cfg, acfg, num_slots, prefill_chunk)
+
+    result = {
+        "workload": {"num_requests": num_requests, "max_prompt": max_prompt,
+                     "max_new": max_new, "num_slots": num_slots,
+                     "prefill_chunk": prefill_chunk,
+                     "arch": f"d{cfg.d_model}xL{cfg.num_layers}"},
+        "static": summarize(s_wall, s_lats, s_tok),
+        "continuous": {**summarize(c_wall, c_lats, c_tok),
+                       "decode_steps": steps},
+        "speedup_tokens_per_s": round((c_tok / c_wall) / (s_tok / s_wall), 3),
+        "admission_parity": parity,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    common.bench_row("serve.static", s_wall * 1e6,
+                     f"tok_s={result['static']['tokens_per_s']}")
+    common.bench_row("serve.continuous", c_wall * 1e6,
+                     f"tok_s={result['continuous']['tokens_per_s']} "
+                     f"steps={steps}")
+    common.bench_row(
+        "serve.claims", 0.0,
+        f"speedup={result['speedup_tokens_per_s']} parity={parity} "
+        f"continuous_wins={result['speedup_tokens_per_s'] > 1.0}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized workload (~tens of seconds)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)

@@ -15,12 +15,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.analog import AnalogConfig
+from repro.core.analog import AnalogConfig, pack_int4_weights
 from repro.core.quant import rtn_quantize
 from repro.eval.harness import evaluate
 from repro.eval.tasks import markov_next
 from repro.kernels import ops
 from repro.kernels.ref import pack_int4
+from repro.serve.decode import digital_int4_config
+from repro.serve.scheduler import Request, SchedulerConfig, ServeEngine
 
 from benchmarks import common
 
@@ -53,6 +55,21 @@ def main():
     print(f"weight bytes: bf16={w.size * 2} -> int4={wp.size} "
           f"({w.size * 2 / wp.size:.1f}x bandwidth saving on the "
           f"weight-bound decode path)")
+
+    print("\n=== continuous-batching serving on the packed-int4 path ===")
+    packed = pack_int4_weights(afm, labels)
+    acfg = digital_int4_config(dataclasses.replace(common.ANALOG,
+                                                   weight_bits=4))
+    eng = ServeEngine(packed, cfg, acfg, SchedulerConfig(
+        num_slots=2, max_len=24, prefill_chunk=4))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               3 + 2 * i).astype(np.int32),
+                    max_new=4 + 2 * i, temperature=0.8, seed=i)
+            for i in range(3)]
+    out = eng.run(reqs)
+    for i in range(3):
+        print(f"request {i} (prompt {3 + 2 * i} toks): {out[i]}")
 
 
 if __name__ == "__main__":

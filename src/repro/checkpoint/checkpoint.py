@@ -30,6 +30,7 @@ import numpy as np
 
 
 def _flatten_with_paths(tree):
+    """Flatten a pytree to (path strings, leaves, treedef)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path) for path, _ in flat]
@@ -64,6 +65,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, shard_id: int = 0,
 
 
 def _ckpt_files(ckpt_dir: str, shard_id: int = 0):
+    """List (step, path) checkpoint files in a directory."""
     if not os.path.isdir(ckpt_dir):
         return []
     pat = re.compile(rf"step_(\d+)\.shard{shard_id}\.npz$")
@@ -76,6 +78,7 @@ def _ckpt_files(ckpt_dir: str, shard_id: int = 0):
 
 
 def latest_step(ckpt_dir: str, shard_id: int = 0) -> Optional[int]:
+    """Newest checkpoint step in ``ckpt_dir`` (None when empty)."""
     files = _ckpt_files(ckpt_dir, shard_id)
     return files[-1][0] if files else None
 

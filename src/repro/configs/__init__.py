@@ -23,6 +23,7 @@ ARCH_NAMES = tuple(k for k in _MODULES if not k.startswith(("phi", "llama")))
 
 
 def get_config(name: str) -> ArchConfig:
+    """Resolve an architecture name to its ``ArchConfig``."""
     import importlib
     if name not in _MODULES:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")

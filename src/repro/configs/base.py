@@ -14,6 +14,7 @@ from typing import Optional
 
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
+    """One architecture's static hyperparameters (see field comments)."""
     name: str
     family: str                       # dense | moe | hybrid | vlm | audio | ssm
     num_layers: int
@@ -56,6 +57,7 @@ class ArchConfig:
 
     @property
     def head_dim(self) -> int:
+        """Attention head dim (explicit ``d_head`` or d_model/num_heads)."""
         if self.d_head:
             return self.d_head
         return self.d_model // max(self.num_heads, 1)
@@ -69,14 +71,17 @@ class ArchConfig:
 
     @property
     def is_attention_free(self) -> bool:
+        """True for pure-SSM architectures (no attention heads)."""
         return self.num_heads == 0
 
     @property
     def ssm_heads(self) -> int:
+        """Number of SSD heads (d_inner / ssm_headdim)."""
         return (self.ssm_expand * self.d_model) // self.ssm_headdim
 
     @property
     def d_inner(self) -> int:
+        """Mamba inner width (ssm_expand * d_model)."""
         return self.ssm_expand * self.d_model
 
     def layer_kind(self, i: int) -> str:
@@ -122,6 +127,7 @@ class ArchConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
+    """One (seq_len, batch, kind) workload cell of the dry-run grid."""
     name: str
     seq_len: int
     global_batch: int
@@ -129,6 +135,7 @@ class ShapeConfig:
 
     @property
     def is_decode(self) -> bool:
+        """True for single-token decode cells."""
         return self.kind == "decode"
 
 
@@ -145,6 +152,7 @@ LONG_CONTEXT_ARCHS = ("mamba2-130m", "jamba-v0.1-52b")
 
 
 def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> bool:
+    """Whether a shape cell runs for an arch (long ctx: SSM/hybrid only)."""
     if shape.name == "long_500k":
         return arch.name in LONG_CONTEXT_ARCHS
     return True

@@ -46,7 +46,57 @@ from repro.kernels import ref as kref
 
 @dataclasses.dataclass(frozen=True)
 class AnalogConfig:
-    """Static configuration of the analog/quantized execution mode."""
+    """Static configuration of the analog/quantized execution mode.
+
+    Every field cites its origin in the paper (equation / section / table)
+    so configs double as an experiment reference; see ``docs/noise.md`` for
+    the noise model and ``docs/kernels.md`` for what changes when the
+    fused kernels execute these semantics.
+
+    Attributes:
+        mode: Execution mode of every linear site — ``off`` (FP16/W16
+            reference), ``analog`` (the paper's AIMC forward, §3.1),
+            ``qat`` (LLM-QAT SI8-W4 baseline, §4 Table 1), ``di8``
+            (SpinQuant-style dynamic-input-8-bit baseline, §4) or ``rtn``
+            (round-to-nearest digital deployment, §4.3 Table 3).
+        input_bits: DAC resolution of the eq. (1) static input quantizer
+            (SI8 in the paper's SI8-W16-O8 recipe, §3.1).
+        output_bits: ADC resolution of the eq. (2) per-column output
+            quantizer (O8, §3.1).
+        weight_bits: Weight quantization width for the ``qat`` / ``di8`` /
+            ``rtn`` baselines (W4 in Tables 1 and 3; unused in ``analog``,
+            which keeps W16 carriers and models hardware by noise).
+        gamma_weight: Relative magnitude of the eq. (3) per-channel-max
+            Gaussian weight noise injected during training (0.02 ≈ the
+            Hermes PCM chip's observed programming error, §3.1).
+        beta_mult: Multiplicative component of the eq. (5) combined noise
+            model (App. C.2 ablation; 0 = purely additive eq. (3)).
+        out_bound: λ_adc — the *globally static* bound of the eq. (2) ADC
+            range, in units of (input range β × per-column weight max);
+            12 for Phi-3, 14 for Llama (§3.1 / App. B).
+        output_quant: O8 on/off (ablation Table 11: disabling output quant
+            recovers a fraction of a point, hardware permitting).
+        alpha_clip: Strength of the eq. (4) iterative weight clipping in
+            units of the per-channel weight std (α = 3, §3.1).
+        kappa_init: Multiplier on the EMA of input std used to initialize
+            the learnable input ranges β (15 Phi-3, 18 Llama; App. B).
+        init_steps: Length of the EMA-init phase in optimizer steps before
+            β becomes a learned (LSQ-gradient) parameter (App. B).
+        range_decay: Per-step multiplicative decay of β toward the live
+            input absmax (the AIHWKIT-Lightning input-range learning rule,
+            §2/App. B) — balances the LSQ counter-gradient.
+        input_min_percentage: Floor on the decayed range as a fraction of
+            the current absmax EMA (AIHWKIT-Lightning default 0.95).
+        train_noise: Master switch for training-time noise injection
+            (ablation App. C.2: no-noise HWA training loses robustness).
+        use_pallas: Execute ``analog``/``rtn`` MVMs as one fused AIMC tile
+            op (DAC → MVM → ADC) via the Pallas kernels — Mosaic on TPU,
+            interpret-mode elsewhere; see ``docs/kernels.md``.
+        int4_serve: With ``mode="rtn"`` + ``use_pallas``, serve weights
+            from the packed-int4 kernel (two nibbles per byte, dequant in
+            VMEM) — the Table 3 digital deployment at int4 weight
+            bandwidth; pair with :func:`pack_int4_weights`.
+    """
 
     mode: str = "off"                  # off | analog | qat | di8 | rtn
     input_bits: int = 8
@@ -68,14 +118,17 @@ class AnalogConfig:
 
     @property
     def is_analog(self) -> bool:
+        """True in the paper's AIMC execution mode."""
         return self.mode == "analog"
 
     @property
     def quantizes_input(self) -> bool:
+        """True when the eq. (1) static input quantizer is active."""
         return self.mode in ("analog", "qat")
 
 
 def _static_field(**kw):
+    """Dataclass field marked static for jax.tree_util registration."""
     return dataclasses.field(metadata=dict(static=True), **kw)
 
 
@@ -90,6 +143,7 @@ class AnalogCtx:
 
 
 def empty_stats() -> dict:
+    """Zero-valued per-site stats (fixed structure for lax.scan)."""
     return {"x_std": jnp.zeros((), jnp.float32),
             "x_absmax": jnp.zeros((), jnp.float32),
             "clip_frac": jnp.zeros((), jnp.float32)}
@@ -107,11 +161,13 @@ def noisy_matmul(x: jax.Array, w: jax.Array, w_noise: jax.Array) -> jax.Array:
 
 
 def _noisy_matmul_fwd(x, w, w_noise):
+    """custom_vjp forward: noisy product, save noise-free residuals."""
     y = jnp.matmul(x, w + w_noise, preferred_element_type=jnp.float32)
     return y, (x, w)
 
 
 def _noisy_matmul_bwd(res, g):
+    """custom_vjp backward: grads through the noise-free weights."""
     x, w = res
     in_dim, out_dim = w.shape[-2], w.shape[-1]
     g32 = g.astype(jnp.float32)

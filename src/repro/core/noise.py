@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 
 def channel_absmax(w: jax.Array, axis: int = 0) -> jax.Array:
+    """Per-output-channel absolute max |W|, floored at 1e-12."""
     return jnp.maximum(jnp.max(jnp.abs(w), axis=axis, keepdims=True), 1e-12)
 
 

@@ -67,6 +67,7 @@ def input_quantize(x: jax.Array, beta: jax.Array, bits: int) -> jax.Array:
 
 
 def _input_quantize_fwd(x, beta, bits):
+    """custom_vjp forward for :func:`input_quantize` (saves x, beta, x_q)."""
     q = qmax(bits)
     beta = jnp.maximum(beta, 1e-8)
     xc = jnp.clip(x, -beta, beta)
@@ -75,6 +76,7 @@ def _input_quantize_fwd(x, beta, bits):
 
 
 def _input_quantize_bwd(bits, res, g):
+    """clamp-STE dx + LSQ range gradient dbeta (see input_quantize)."""
     x, beta, xq = res
     inside = (jnp.abs(x) <= beta)
     dx = jnp.where(inside, g, 0.0).astype(x.dtype)
@@ -128,10 +130,12 @@ def output_quantize(y: jax.Array, bound: jax.Array, bits_f: jax.Array) -> jax.Ar
 
 
 def _output_quantize_fwd(y, bound, bits_f):
+    """custom_vjp forward for :func:`output_quantize` (no residuals)."""
     return output_quantize(y, bound, bits_f), None
 
 
 def _output_quantize_bwd(res, g):
+    """Pure STE backward: pass-through dy, no bound gradient."""
     # Pure STE: gradient flows through untouched (paper: "simple straight-through
     # estimation"); the bound is a derived, non-trained quantity.
     return g, None, None
@@ -171,6 +175,7 @@ def rtn_quantize(w: jax.Array, bits: int, axis: int = 0):
 
 
 def rtn_dequantize(w_int: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Dequantize an RTN int carrier back to ``w_int * scale``."""
     return w_int.astype(dtype) * scale.astype(dtype)
 
 

@@ -13,8 +13,10 @@ import numpy as np
 
 
 class MarkovCorpus:
+    """Sparse seeded Markov chain with Zipfian marginals (see module doc)."""
     def __init__(self, vocab_size: int, *, branching: int = 8,
                  zipf_a: float = 1.2, seed: int = 0):
+        """Build the chain: ``branching`` successors per state, Zipf(zipf_a)."""
         rng = np.random.default_rng(seed)
         self.vocab_size = vocab_size
         # Zipfian target-state popularity
@@ -31,6 +33,7 @@ class MarkovCorpus:
 
     def sample(self, num_seqs: int, seq_len: int,
                seed: int | None = None) -> np.ndarray:
+        """Sample [num_seqs, seq_len] token sequences from the chain."""
         rng = np.random.default_rng(seed) if seed is not None else self._rng
         out = np.empty((num_seqs, seq_len), np.int32)
         state = rng.integers(0, self.vocab_size, size=num_seqs)

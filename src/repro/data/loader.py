@@ -14,8 +14,10 @@ import numpy as np
 
 
 class TokenLoader:
+    """Seeded-permutation batch iterator with checkpointable state."""
     def __init__(self, tokens: np.ndarray, batch_size: int, *, seed: int = 0,
                  microbatches: int = 1, drop_last: bool = True):
+        """tokens [N, S...]: shuffled in batches of ``batch_size`` per epoch."""
         assert tokens.ndim >= 2
         self.tokens = tokens
         self.batch_size = batch_size
@@ -26,15 +28,18 @@ class TokenLoader:
         self._perm = self._permutation(0)
 
     def _permutation(self, epoch: int) -> np.ndarray:
+        """Deterministic per-epoch shuffle (seed ⊕ epoch hash)."""
         rng = np.random.default_rng(self.seed + 1315423911 * epoch)
         return rng.permutation(len(self.tokens))
 
     # -- checkpointable state ------------------------------------------------
     def state(self) -> dict:
+        """Checkpointable iterator state (epoch, cursor, seed)."""
         return {"epoch": self.epoch, "cursor": self.cursor,
                 "seed": self.seed}
 
     def restore(self, state: dict):
+        """Resume exactly where ``state`` left off (rebuilds the perm)."""
         self.seed = state["seed"]
         self.epoch = state["epoch"]
         self.cursor = state["cursor"]
@@ -42,6 +47,7 @@ class TokenLoader:
 
     # -- iteration -------------------------------------------------------------
     def __iter__(self) -> Iterator[np.ndarray]:
+        """Yield [B, ...] (or [microbatches, B/mb, ...]) batches forever."""
         while True:
             if self.cursor + self.batch_size > len(self.tokens):
                 self.epoch += 1

@@ -28,6 +28,7 @@ from repro.serve.decode import generate
 
 @dataclasses.dataclass(frozen=True)
 class GenConfig:
+    """Synthetic-generation settings (strategy sss/rgs/sgs, App. B.1)."""
     strategy: str = "sss"           # sss | rgs | sgs
     temperature: float = 1.0
     top_k: int = 50

@@ -32,6 +32,7 @@ _state = threading.local()
 
 
 def _active():
+    """The thread-local active (mesh, rules) context, or None."""
     return getattr(_state, "ctx", None)
 
 
@@ -48,6 +49,7 @@ def activate(mesh: Mesh, rules: dict[str, Any]):
 
 def default_rules(mesh: Mesh, *, batch_shardable: bool = True,
                   seq_shard_kv: bool = False) -> dict[str, Any]:
+    """Logical-axis → mesh-axis mapping for the standard 3-axis mesh."""
     pod = ("pod",) if "pod" in mesh.axis_names else ()
     rules = {
         "batch": pod + ("data",) if batch_shardable else None,
@@ -66,6 +68,7 @@ def default_rules(mesh: Mesh, *, batch_shardable: bool = True,
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
+    """Product of mesh-axis sizes for an axis name (1 for None)."""
     if axis is None:
         return 1
     if isinstance(axis, (tuple, list)):
@@ -97,6 +100,7 @@ def _guard(mesh: Mesh, shape: tuple, axes: tuple) -> tuple:
 
 
 def resolve(logical: tuple, shape: tuple | None = None) -> P:
+    """Logical axes tuple → PartitionSpec under the active context."""
     ctx = _active()
     assert ctx is not None
     axes = tuple(ctx["rules"].get(ax) if ax is not None else None
@@ -181,6 +185,7 @@ def param_spec_tree(params) -> Any:
 
 
 def _leaf_spec(site, leaf, value, in_moe) -> P:
+    """PartitionSpec for one named parameter leaf (site-based rules)."""
     key = None
     if site is not None:
         prefixed = (f"M:{site}", leaf) if in_moe else None
@@ -226,6 +231,7 @@ def zero_spec_tree(params) -> Any:
 
 
 def named(tree_specs) -> Any:
+    """Resolve a tree of logical-axis tuples to PartitionSpecs."""
     ctx = _active()
     mesh = ctx["mesh"]
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
@@ -237,12 +243,14 @@ def named(tree_specs) -> Any:
 # ---------------------------------------------------------------------------
 
 def batch_spec(ndim: int) -> P:
+    """Batch-sharded spec with ``ndim - 1`` trailing replicated dims."""
     ctx = _active()
     b = ctx["rules"].get("batch")
     return P(*((b,) + (None,) * (ndim - 1)))
 
 
 def batch_spec_for(shape: tuple) -> P:
+    """Like :func:`batch_spec` but guarded against non-divisible shapes."""
     ctx = _active()
     b = ctx["rules"].get("batch")
     axes = (b,) + (None,) * (len(shape) - 1)
@@ -251,7 +259,7 @@ def batch_spec_for(shape: tuple) -> P:
 
 def cache_spec_tree(caches) -> Any:
     """Decode-cache specs: KV [B, T, KV, hd] → (batch, kv_seq, heads, None);
-    SSM state [B·H, N, P] → (batch, None, None); conv [B, W-1, C] →
+    SSM state [B, H, N, P] → (batch, heads, None, None); conv [B, W-1, C] →
     (batch, None, mlp). Leading stacked-layer dims unsharded."""
     ctx = _active()
     rules = ctx["rules"]
@@ -273,7 +281,8 @@ def cache_spec_tree(caches) -> Any:
             else:
                 logical = ("batch", "kv_seq_model", None, None)
         elif name == "ssm":
-            logical = ("batch", None, None)
+            # [.., B, H, N, P] slot-major SSM state (batch leads, heads next)
+            logical = ("batch", "heads", None, None)
         elif name == "conv":
             logical = ("batch", None, "mlp")
         else:

@@ -18,6 +18,7 @@ from repro.core.analog import AnalogConfig, perturb_analog_weights
 
 @dataclasses.dataclass(frozen=True)
 class NoiseSpec:
+    """Eval-time weight-perturbation spec (model + gaussian magnitude)."""
     model: str = "none"        # none | hw | gaussian
     gamma: float = 0.0         # gaussian magnitude (fraction of channel max)
 

@@ -29,6 +29,7 @@ from repro.models import apply as model_apply
 
 def markov_next(corpus, *, num_seqs: int = 64, seq_len: int = 64,
                 seed: int = 1234) -> Callable:
+    """Logit-comparison task vs the corpus Bayes argmax (MMLU stand-in)."""
     toks = corpus.sample(num_seqs, seq_len, seed=seed)
     target = corpus.optimal_next_token(toks)          # Bayes argmax
     toks_j = jnp.asarray(toks)
@@ -46,6 +47,7 @@ def markov_next(corpus, *, num_seqs: int = 64, seq_len: int = 64,
 
 def induction_copy(vocab_size: int, *, num_seqs: int = 64,
                    pattern_len: int = 12, seed: int = 99) -> Callable:
+    """In-context copying task ([pat, 0, pat]; GSM8K/ANLI stand-in)."""
     rng = np.random.default_rng(seed)
     pat = rng.integers(2, vocab_size, size=(num_seqs, pattern_len))
     # [pat, 0, pat] — predict the second occurrence from the first
@@ -63,6 +65,45 @@ def induction_copy(vocab_size: int, *, num_seqs: int = 64,
         tgt = toks_j[:, start + 1:start + pattern_len]
         return float(jnp.mean(pred == tgt))
     return task
+
+
+# ---------------------------------------------------------------------------
+# answer extraction (task-level hooks for serve.engine.sample_candidates)
+# ---------------------------------------------------------------------------
+
+def extract_first_token(toks: np.ndarray) -> int:
+    """Answer = first generated token (single-token answer tasks)."""
+    return int(np.asarray(toks)[0])
+
+
+def extract_before_stop(stop_id: int) -> Callable[[np.ndarray], int]:
+    """Answer = token immediately preceding the first ``stop_id``.
+
+    The multi-token extraction hook: a generation shaped
+    ``[...scratch..., answer, STOP, ...]`` reduces to ``answer``
+    (GSM8K-style "final answer then terminator"). Falls back to the last
+    generated token when no stop token appears (generation hit
+    ``max_new``) or the stop token came first.
+    """
+    def extract(toks: np.ndarray) -> int:
+        toks = np.asarray(toks)
+        hits = np.flatnonzero(toks == stop_id)
+        if hits.size and hits[0] > 0:
+            return int(toks[hits[0] - 1])
+        return int(toks[-1])
+    return extract
+
+
+def mod_add_extraction(mod: int = 23) -> Callable[[np.ndarray], int]:
+    """Task-level hook for ``mod_add``: the answer is the first generated
+    token in the answer alphabet ``[0, mod)`` (later tokens are free-run
+    continuation; the SEP token ``mod`` acts as a terminator when the
+    request carries it in ``stop_tokens``)."""
+    def extract(toks: np.ndarray) -> int:
+        toks = np.asarray(toks)
+        valid = np.flatnonzero(toks < mod)
+        return int(toks[valid[0]]) if valid.size else int(toks[0])
+    return extract
 
 
 def make_mod_add_data(vocab_size: int, *, num: int = 128, mod: int = 23,

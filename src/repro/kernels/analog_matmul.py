@@ -36,6 +36,7 @@ from repro.kernels.ref import round_up as _rup
 
 def _analog_matmul_kernel(beta_ref, x_ref, w_ref, bound_ref, o_ref, acc_ref,
                           *, in_bits: int, out_bits: int, k_steps: int):
+    """Pallas tile body: DAC-quant x, MXU accumulate, ADC-quant on exit."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)

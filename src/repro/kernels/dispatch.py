@@ -50,6 +50,7 @@ DECODE_BM = 8
 
 
 def on_tpu() -> bool:
+    """True when the default JAX backend is TPU (compiled kernels)."""
     return jax.default_backend() == "tpu"
 
 
@@ -109,16 +110,19 @@ def analog_mvm(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _fused_analog_mvm(in_bits, out_bits, x, w, w_noise, beta, bound):
+    """custom_vjp core: fused forward on the effective (noisy) weights."""
     return analog_mvm(x, w + w_noise, beta, bound,
                       in_bits=in_bits, out_bits=out_bits)
 
 
 def _fused_fwd(in_bits, out_bits, x, w, w_noise, beta, bound):
+    """Forward rule: run the fused kernel, save STE residuals."""
     y = _fused_analog_mvm(in_bits, out_bits, x, w, w_noise, beta, bound)
     return y, (x, w, beta, bound)
 
 
 def _fused_bwd(in_bits, out_bits, res, g):
+    """Backward rule: replay the unfused STE chain (see module doc)."""
     # Replays the unfused VJP chain through the *canonical* custom rules in
     # core (single source of truth: quant.input_quantize's clamp-STE/LSQ
     # gradients and analog.noisy_matmul's noise-free weight rule compose

@@ -25,6 +25,7 @@ from repro.kernels.ref import round_up as _rup
 
 def _int4_matmul_kernel(x_ref, wp_ref, scale_ref, o_ref, acc_ref,
                         *, k_steps: int):
+    """Pallas tile body: unpack int4 nibbles in VMEM, dequant, accumulate."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)

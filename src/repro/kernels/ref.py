@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 
 def _qmax(bits: int) -> float:
+    """Largest positive level of a symmetric ``bits``-bit quantizer."""
     return float(2 ** (bits - 1) - 1)
 
 

@@ -30,6 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
                 *, chunk: int):
+    """Pallas body: chunked SSD recurrence for one (batch·head) block."""
     c_idx = pl.program_id(1)
 
     @pl.when(c_idx == 0)

@@ -45,6 +45,7 @@ _BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
 
 
 def _shape_bytes(stype: str, dims: str) -> int:
+    """Total bytes of one ShapeDtypeStruct-like leaf."""
     n = 1
     for d in dims.split(","):
         if d:
@@ -93,6 +94,7 @@ def collective_bytes_from_hlo(hlo_text: str) -> dict:
 def run_cell(arch: str, shape_name: str, mesh_kind: str, loss: str = "kd",
              fsdp: bool = True, rules_override=None, accum_steps: int = 4,
              tag: str = "", tcfg_overrides=None, arch_overrides=None) -> dict:
+    """Lower + compile one (arch, shape, mesh) cell; write its artifact."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     plan = build_cell(arch, shape_name, mesh, loss=loss, fsdp=fsdp,
@@ -130,12 +132,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, loss: str = "kd",
 
 
 def cell_path(arch, shape, mesh_kind, tag=""):
+    """Artifact path for one dry-run cell."""
     sfx = f"__{tag}" if tag else ""
     return os.path.join(ART_DIR,
                         f"{arch}__{shape}__{mesh_kind}{sfx}.json")
 
 
 def main():
+    """CLI entry point (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -45,12 +45,14 @@ _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
 
 
 def _dtype_bytes(t: str) -> int:
+    """Bytes per element for an HLO dtype string."""
     if t.startswith("f8"):
         return 1
     return _BYTES.get(t, 4)
 
 
 def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string (product of dims × dtype)."""
     total = 0
     for t, dims in _SHAPE_RE.findall(shape_str):
         n = 1
@@ -62,6 +64,7 @@ def _shape_bytes(shape_str: str) -> int:
 
 
 def _shape_dims(shape_str: str) -> list[list[int]]:
+    """Parse the dimension list out of an HLO shape string."""
     out = []
     for _, dims in _SHAPE_RE.findall(shape_str):
         out.append([int(d) for d in dims.split(",") if d])
@@ -69,7 +72,9 @@ def _shape_dims(shape_str: str) -> list[list[int]]:
 
 
 class Computation:
+    """One parsed HLO computation: instructions + metadata."""
     def __init__(self, name: str):
+        """Empty accumulator for computation ``name``."""
         self.name = name
         self.flops = 0.0
         self.coll_bytes = defaultdict(float)
@@ -81,6 +86,7 @@ class Computation:
 
 
 def parse_hlo(text: str) -> dict[str, Computation]:
+    """Parse optimized HLO text into Computation records."""
     comps: dict[str, Computation] = {}
     cur: Computation | None = None
     symtab: dict[str, str] = {}
@@ -161,11 +167,13 @@ def parse_hlo(text: str) -> dict[str, Computation]:
 
 
 def _attr(line: str, key: str) -> str | None:
+    """Extract one ``key=value`` attribute from an HLO instruction."""
     m = re.search(rf"{key}=%?([\w.\-]+)", line)
     return m.group(1) if m else None
 
 
 def _trip_count(line: str) -> float:
+    """Best-effort while-loop trip count from HLO attributes."""
     m = re.search(r'known_trip_count"?[:=]\s*\{"?n"?[:=]"?(\d+)"?\}', line)
     if m:
         return float(m.group(1))
@@ -173,6 +181,7 @@ def _trip_count(line: str) -> float:
 
 
 def _collective_base(op: str) -> str | None:
+    """Collective op base name (all-reduce, all-gather, ...)."""
     for c in _COLLECTIVES:
         if op == c or op == c + "-start":
             return c
@@ -180,6 +189,7 @@ def _collective_base(op: str) -> str | None:
 
 
 def _dot_flops(line: str, result_shape: str, symtab: dict) -> float:
+    """FLOPs of one dot instruction from its shapes."""
     dims = _shape_dims(result_shape)
     if not dims:
         return 0.0

@@ -48,10 +48,12 @@ class CellPlan:
 
 
 def _eval_shape_tree(fn, *a, **kw):
+    """eval_shape a builder → ShapeDtypeStruct pytree (no allocation)."""
     return jax.eval_shape(fn, *a, **kw)
 
 
 def _batch_axes_size(mesh) -> int:
+    """Total mesh extent backing the batch logical axis."""
     n = mesh.shape.get("data", 1)
     n *= mesh.shape.get("pod", 1)
     return n
@@ -64,6 +66,7 @@ def build_cell(arch: str, shape_name: str, mesh, *,
                rules_override: dict | None = None,
                tcfg_overrides: dict | None = None,
                arch_overrides: dict | None = None) -> CellPlan:
+    """Build the sharded jitted step + input specs for one grid cell."""
     cfg = get_config(arch)
     if arch_overrides:
         cfg = dataclasses.replace(cfg, **arch_overrides)
@@ -217,5 +220,6 @@ def _labels_from_shapes(cfg, params_shape):
 
 
 def _meta(cfg, shape, mesh, kind):
+    """Static metadata record for one cell (arch/shape/mesh)."""
     return {"arch": cfg.name, "shape": shape.name, "kind": kind,
             "mesh": dict(mesh.shape), "family": cfg.family}

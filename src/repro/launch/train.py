@@ -31,6 +31,7 @@ from repro.train.train_step import TrainConfig
 
 
 def main():
+    """CLI entry point (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-3.2-1b")
     ap.add_argument("--mode", default="analog",

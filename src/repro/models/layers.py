@@ -34,6 +34,7 @@ from repro.distributed.sharding import shard_hint
 
 
 def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    """Init RMSNorm/LayerNorm params (digital — scale/bias only)."""
     p = {"scale": jnp.ones((d,), dtype)}
     if kind == "layernorm":
         p["bias"] = jnp.zeros((d,), dtype)
@@ -41,10 +42,12 @@ def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
 
 
 def norm_labels(p: dict) -> dict:
+    """Clipping/optimizer labels for a norm site (all digital)."""
     return {k: "digital" for k in p}
 
 
 def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    """Apply RMSNorm or LayerNorm in fp32, returning the input dtype."""
     xf = x.astype(jnp.float32)
     if kind == "rmsnorm":
         xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
@@ -81,6 +84,7 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 
 
 def init_attention(key, cfg, dtype=jnp.float32) -> dict:
+    """Init GQA attention params (fused qkv or split q/k/v analog sites)."""
     kq, kk, kv, ko = jax.random.split(key, 4)
     hd = cfg.head_dim
     p = {"o": init_linear(ko, cfg.num_heads * hd, cfg.d_model,
@@ -100,10 +104,12 @@ def init_attention(key, cfg, dtype=jnp.float32) -> dict:
 
 
 def attention_labels(p: dict) -> dict:
+    """Labels for attention params: one linear-site label set per proj."""
     return {k: linear_labels(v) for k, v in p.items()}
 
 
 def _split_qkv(qkv: jax.Array, cfg):
+    """Split a fused qkv projection into per-head q, k, v tensors."""
     hd = cfg.head_dim
     nq, nkv = cfg.num_heads, cfg.num_kv_heads
     q, k, v = jnp.split(qkv, [nq * hd, (nq + nkv) * hd], axis=-1)
@@ -186,8 +192,19 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
               positions: jax.Array, cache: dict | None = None):
     """GQA attention block. Returns (y, stats, new_cache).
 
-    cache: {"k": [B, T, KV, hd], "v": ..., "pos": scalar} — decode writes one
-    token at ``pos`` and attends over the full (statically-shaped) buffer.
+    Two cache layouts (see ``init_cache``):
+
+    * legacy (``pos`` scalar): ``{"k": [B, T, KV, hd], "v": ..., "pos": ()}``
+      — batched lockstep serving; decode writes one token at the shared
+      ``pos`` and attends over the full statically-shaped buffer.
+    * slot mode (``pos`` [B]): ``{"k", "v", "pos": [B], "start": [B]}`` —
+      the continuous-batching layout. Every row is an independent request
+      slot: the current chunk (decode: S=1, chunked prefill: S=C) is
+      scattered at per-row write indices ``pos[b] + arange(S)`` and the
+      mask attends cache indices ``start[b] <= j <= pos[b] + i`` only, so
+      left-pad rows (``j < start``) and unwritten rows are never attended.
+      All index math is static-shape (gather/scatter), keeping the decode
+      scan jittable with requests at heterogeneous positions.
     """
     hd = cfg.head_dim
     if "qkv" in p:
@@ -209,7 +226,21 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     v = shard_hint(v, "batch", "seq", "heads", None)
     scale = cfg.head_dim ** -0.5
 
-    if cache is not None and x.shape[1] == 1:       # decode step
+    if cache is not None and jnp.ndim(cache["pos"]) == 1:   # slot mode
+        pos, start = cache["pos"], cache["start"]
+        bsz, s = x.shape[0], x.shape[1]
+        t = cache["k"].shape[1]
+        idx = pos[:, None] + jnp.arange(s)[None, :]          # [B, S] writes
+        b_idx = jnp.arange(bsz)[:, None]
+        k_buf = cache["k"].at[b_idx, idx].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        v_buf = cache["v"].at[b_idx, idx].set(
+            v.astype(cache["v"].dtype), mode="drop")
+        j = jnp.arange(t)[None, None, :]
+        mask = (j >= start[:, None, None]) & (j <= idx[:, :, None])
+        out = _gqa_scores_softmax_v(q, k_buf, v_buf, mask, scale)
+        new_cache = {"k": k_buf, "v": v_buf, "pos": pos + s, "start": start}
+    elif cache is not None and x.shape[1] == 1:     # legacy decode step
         pos = cache["pos"]
         k_buf = jax.lax.dynamic_update_slice(
             cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
@@ -240,15 +271,26 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
 
 
 def _fill_cache(buf, new):
+    """Write prefill k/v into the front of a statically-shaped cache."""
     return jax.lax.dynamic_update_slice(
         buf, new.astype(buf.dtype), (0, 0, 0, 0))
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32) -> dict:
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32,
+               per_slot: bool = False) -> dict:
+    """Attention KV cache. ``per_slot=True`` selects the continuous-batching
+    slot layout: per-row write cursors (``pos`` [B]) and first-valid-index
+    markers (``start`` [B], the number of left-pad rows) instead of one
+    shared scalar position."""
     hd = cfg.head_dim
-    return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
-            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
-            "pos": jnp.zeros((), jnp.int32)}
+    c = {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+         "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype)}
+    if per_slot:
+        c["pos"] = jnp.zeros((batch,), jnp.int32)
+        c["start"] = jnp.zeros((batch,), jnp.int32)
+    else:
+        c["pos"] = jnp.zeros((), jnp.int32)
+    return c
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +299,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32) -> dict:
 
 
 def init_mlp(key, cfg, dtype=jnp.float32) -> dict:
+    """Init MLP params: SwiGLU (fused gate_up) for silu, plain GELU else."""
     k1, k2 = jax.random.split(key)
     if cfg.act == "silu":             # SwiGLU: fused gate+up, then down
         return {"gate_up": init_linear(k1, cfg.d_model, 2 * cfg.d_ff,
@@ -270,10 +313,12 @@ def init_mlp(key, cfg, dtype=jnp.float32) -> dict:
 
 
 def mlp_labels(p: dict) -> dict:
+    """Labels for MLP params: one linear-site label set per projection."""
     return {k: linear_labels(v) for k, v in p.items()}
 
 
 def mlp(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx):
+    """MLP block over [B, S, d] (analog projections). Returns (y, stats)."""
     if "gate_up" in p:
         gu, st1 = analog_linear(p["gate_up"], x, acfg, ctx)
         gate, up = jnp.split(gu, 2, axis=-1)

@@ -19,6 +19,7 @@ from repro.kernels import ops as kops
 
 
 def _dims(cfg):
+    """Derived mamba dims: (d_inner, heads, groups*state, conv_ch, in_proj)."""
     d_inner = cfg.d_inner
     heads = cfg.ssm_heads
     gn = cfg.ssm_groups * cfg.ssm_state
@@ -28,6 +29,7 @@ def _dims(cfg):
 
 
 def init_mamba(key, cfg, dtype=jnp.float32) -> dict:
+    """Init one SSD mixer: analog in/out projections + digital scan params."""
     d_inner, heads, gn, conv_ch, d_in_proj = _dims(cfg)
     k1, k2, k3, k4 = jax.random.split(key, 4)
     return {
@@ -47,6 +49,7 @@ def init_mamba(key, cfg, dtype=jnp.float32) -> dict:
 
 
 def mamba_labels(p: dict) -> dict:
+    """Labels for mamba params: analog projections, digital scan/conv."""
     lab = {k: "digital" for k in p
            if k not in ("in_proj", "out_proj")}
     lab["in_proj"] = linear_labels(p["in_proj"])
@@ -73,17 +76,27 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 
 
 def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    """Mamba-2 gated RMSNorm: normalize y * silu(z), then scale."""
     g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
     g = g * jax.lax.rsqrt(jnp.mean(g * g, axis=-1, keepdims=True) + eps)
     return (g * scale.astype(jnp.float32)).astype(y.dtype)
 
 
 def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
-          cache: dict | None = None):
+          cache: dict | None = None, seq_mask: jax.Array | None = None):
     """SSD mixer over x [B, S, d]. Returns (y, stats, new_cache).
 
-    cache: {"conv": [B, W-1, conv_ch], "ssm": [B*H, N, P]} for decode;
+    cache: {"conv": [B, W-1, conv_ch], "ssm": [B, H, N, P]} for decode;
     prefill (cache passed, S > 1) fills it; train (cache None) skips state.
+
+    ``seq_mask`` [B, S] (1 = real token) makes padded/inactive positions
+    state-transparent, which is what the continuous-batching scheduler's
+    left-padded chunked prefill relies on: masked positions get ``dt = 0``
+    (state decay ``exp(dt·a) = 1`` and input contribution ``dt·B·x = 0``,
+    so the recurrence passes through unchanged) and zeroed conv inputs
+    (left-pads then match the zero-padding a fresh ``_causal_conv`` start
+    applies). The state after a masked chunk is bit-equal to running the
+    unpadded tokens alone.
     """
     bsz, s, _ = x.shape
     d_inner, heads, gn, conv_ch, _ = _dims(cfg)
@@ -93,12 +106,17 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     zxbcdt, st_in = analog_linear(p["in_proj"], x, acfg, ctx)
     z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
 
+    if seq_mask is not None:
+        xbc = xbc * seq_mask[..., None].astype(xbc.dtype)
+
     conv_state = cache["conv"] if cache is not None else None
     xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
     xs, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + p["dt_bias"][None, None, :])           # [B,S,H]
+    if seq_mask is not None:
+        dt = dt * seq_mask[..., None].astype(dt.dtype)
     a = -jnp.exp(p["a_log"])                                      # [H]
     xh = shard_hint(xs.reshape(bsz, s, heads, pdim),
                     "batch", "seq", "heads", None)
@@ -109,14 +127,18 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
         rep = heads // g
         to_bh = lambda t: t[:, 0].repeat(rep, axis=1).reshape(bsz * heads, -1)
         h, y_t = kops.ssd_decode_step(
-            cache["ssm"], xh[:, 0].reshape(bsz * heads, pdim),
+            cache["ssm"].reshape(bsz * heads, n, pdim),
+            xh[:, 0].reshape(bsz * heads, pdim),
             dt[:, 0].reshape(bsz * heads), jnp.tile(a, bsz),
             to_bh(bg), to_bh(cg))
         y = y_t.reshape(bsz, 1, heads, pdim)
-        new_cache = {"conv": new_conv, "ssm": h}
+        new_cache = {"conv": new_conv, "ssm": h.reshape(bsz, heads, n, pdim)}
     else:
-        y, h_final = _ssd_with_state(xh, dt, a, bg, cg)
-        new_cache = ({"conv": new_conv, "ssm": h_final}
+        h0 = (cache["ssm"].reshape(bsz * heads, n, pdim)
+              if cache is not None else None)
+        y, h_final = _ssd_with_state(xh, dt, a, bg, cg, h0)
+        new_cache = ({"conv": new_conv,
+                      "ssm": h_final.reshape(bsz, heads, n, pdim)}
                      if cache is not None else None)
 
     y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
@@ -127,8 +149,15 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     return out, {"in_proj": st_in, "out_proj": st_out}, new_cache
 
 
-def _ssd_with_state(xh, dt, a, bg, cg):
-    """Chunked SSD returning (y [B,S,H,P] f32, final state [B*H, N, P])."""
+def _ssd_with_state(xh, dt, a, bg, cg, h0=None):
+    """Chunked SSD returning (y [B,S,H,P] f32, final state [B*H, N, P]).
+
+    ``h0`` [B*H, N, P] is an optional incoming recurrence state (continuous
+    batching's chunked prefill: chunk k continues from chunk k-1's state).
+    The carried state contributes ``C_t · exp(Σ_{i≤t} dt_i·a) · h0`` to each
+    output and decays by ``exp(Σ dt·a)`` into the final state; with the
+    all-zero state a fresh cache holds, both terms vanish exactly.
+    """
     y = kops.ssd(xh, dt, a, bg, cg).astype(jnp.float32)
     # final state via one extra recurrence over chunk summaries (cheap):
     bsz, s, heads, pdim = xh.shape
@@ -145,11 +174,22 @@ def _ssd_with_state(xh, dt, a, bg, cg):
     total = cums[:, -1]
     w_r = jnp.exp(total[:, None] - cums) * dtf                    # [BH, S]
     h = jnp.einsum("zs,zsn,zsp->znp", w_r, bf, xf)
+    if h0 is not None:
+        cf = to_bh(cg).astype(jnp.float32)
+        h0 = h0.astype(jnp.float32)
+        y_carry = jnp.einsum("zs,zsn,znp->zsp", jnp.exp(cums), cf, h0)
+        y = y + jnp.moveaxis(
+            y_carry.reshape(bsz, heads, s, pdim), 1, 2)
+        h = h + jnp.exp(total)[:, None, None] * h0
     return y, h
 
 
 def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    """Decode-time SSM state. Slot-major: every leaf has the batch/slot
+    dimension leading (``conv`` [B, W-1, C], ``ssm`` [B, H, N, P]) so the
+    continuous-batching scheduler can gather/scatter one request's state
+    with a single dynamic slice per leaf, uniformly with the KV cache."""
     d_inner, heads, gn, conv_ch, _ = _dims(cfg)
     return {"conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
-            "ssm": jnp.zeros((batch * heads, cfg.ssm_state, cfg.ssm_headdim),
+            "ssm": jnp.zeros((batch, heads, cfg.ssm_state, cfg.ssm_headdim),
                              jnp.float32)}

@@ -21,6 +21,7 @@ def build(arch: str | ArchConfig, key: jax.Array, dtype=jnp.float32):
 
 def apply(params, cfg: ArchConfig, acfg: AnalogConfig, ctx: AnalogCtx,
           inputs, **kw):
+    """Run the model forward (thin alias of ``transformer.forward``)."""
     return T.forward(params, cfg, acfg, ctx, inputs, **kw)
 
 
@@ -29,6 +30,7 @@ def apply(params, cfg: ArchConfig, acfg: AnalogConfig, ctx: AnalogCtx,
 # ---------------------------------------------------------------------------
 
 def _sds(shape, dtype):
+    """Shorthand ShapeDtypeStruct constructor."""
     return jax.ShapeDtypeStruct(shape, dtype)
 
 

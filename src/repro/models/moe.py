@@ -25,10 +25,12 @@ from repro.distributed.sharding import shard_hint
 
 def moe_capacity(seq_len: int, num_experts: int, top_k: int,
                  capacity_factor: float) -> int:
+    """Per-expert token capacity for one routed group (Switch-style)."""
     return max(1, int(seq_len * top_k * capacity_factor / num_experts))
 
 
 def init_moe(key, cfg, dtype=jnp.float32) -> dict:
+    """Init MoE params: digital router + batched analog expert FFNs."""
     kr, k1, k2 = jax.random.split(key, 3)
     e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
 
@@ -49,6 +51,7 @@ def init_moe(key, cfg, dtype=jnp.float32) -> dict:
 
 
 def moe_labels(p: dict) -> dict:
+    """Labels for MoE params: digital router, analog expert sites."""
     return {"router": {"kernel": "digital"},
             "gate_up": linear_labels(p["gate_up"]),
             "down": linear_labels(p["down"])}

@@ -40,22 +40,26 @@ from repro.models import moe as MoE
 # ---------------------------------------------------------------------------
 
 def _init_ffn(key, cfg, kind: str, dtype):
+    """Init the FFN of one block: dense MLP or MoE by ``kind``."""
     if kind == "moe":
         return MoE.init_moe(key, cfg, dtype)
     return L.init_mlp(key, cfg, dtype)
 
 
 def _ffn_labels(p, kind: str):
+    """Labels for one block FFN, dispatching on ``kind``."""
     return MoE.moe_labels(p) if kind == "moe" else L.mlp_labels(p)
 
 
 def _apply_ffn(p, x, cfg, acfg, ctx, kind: str):
+    """Apply one block FFN (dense or MoE). Returns (y, stats)."""
     if kind == "moe":
         return MoE.moe(p, x, cfg, acfg, ctx)
     return L.mlp(p, x, cfg, acfg, ctx)
 
 
 def init_attn_layer(key, cfg, ffn_kind: str, dtype):
+    """Init one pre-norm attention block (ln1/attn/ln2/ffn)."""
     k1, k2 = jax.random.split(key)
     return {"ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
             "attn": L.init_attention(k1, cfg, dtype),
@@ -64,6 +68,7 @@ def init_attn_layer(key, cfg, ffn_kind: str, dtype):
 
 
 def attn_layer_labels(p, ffn_kind: str):
+    """Labels mirroring ``init_attn_layer`` structure."""
     return {"ln1": L.norm_labels(p["ln1"]),
             "attn": L.attention_labels(p["attn"]),
             "ln2": L.norm_labels(p["ln2"]),
@@ -71,6 +76,7 @@ def attn_layer_labels(p, ffn_kind: str):
 
 
 def apply_attn_layer(p, x, cfg, acfg, ctx, positions, cache, ffn_kind: str):
+    """One attention block with residuals. Returns (x, stats, cache)."""
     h, st_a, new_cache = L.attention(
         p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg, acfg, ctx,
         positions, cache)
@@ -82,6 +88,7 @@ def apply_attn_layer(p, x, cfg, acfg, ctx, positions, cache, ffn_kind: str):
 
 
 def init_mamba_layer(key, cfg, ffn_kind: str, dtype):
+    """Init one mamba block (ln1/mixer, optional ln2/ffn)."""
     k1, k2 = jax.random.split(key)
     p = {"ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
          "mixer": M.init_mamba(k1, cfg, dtype)}
@@ -92,6 +99,7 @@ def init_mamba_layer(key, cfg, ffn_kind: str, dtype):
 
 
 def mamba_layer_labels(p, ffn_kind: str):
+    """Labels mirroring ``init_mamba_layer`` structure."""
     lab = {"ln1": L.norm_labels(p["ln1"]),
            "mixer": M.mamba_labels(p["mixer"])}
     if ffn_kind != "none":
@@ -100,9 +108,12 @@ def mamba_layer_labels(p, ffn_kind: str):
     return lab
 
 
-def apply_mamba_layer(p, x, cfg, acfg, ctx, cache, ffn_kind: str):
+def apply_mamba_layer(p, x, cfg, acfg, ctx, cache, ffn_kind: str,
+                      seq_mask=None):
+    """One mamba block with residuals. Returns (x, stats, cache)."""
     h, st_m, new_cache = M.mamba(
-        p["mixer"], L.apply_norm(p["ln1"], x, cfg.norm), cfg, acfg, ctx, cache)
+        p["mixer"], L.apply_norm(p["ln1"], x, cfg.norm), cfg, acfg, ctx, cache,
+        seq_mask=seq_mask)
     x = x + h
     stats = {"mixer": st_m}
     if ffn_kind != "none":
@@ -118,10 +129,12 @@ def apply_mamba_layer(p, x, cfg, acfg, ctx, cache, ffn_kind: str):
 # ---------------------------------------------------------------------------
 
 def _stacked_init(fn, key, n):
+    """vmap an init over n fresh keys → layer-stacked params."""
     return jax.vmap(fn)(jax.random.split(key, n))
 
 
 def init_blocks(key, cfg, dtype):
+    """Init the family-specific layer stack (scan-stacked params)."""
     fam = cfg.family
     if fam in ("dense", "vlm", "audio"):
         return _stacked_init(
@@ -187,7 +200,8 @@ def blocks_labels(params_blocks, cfg):
     return lab
 
 
-def _hybrid_sb_apply(p_sb, x, cfg, acfg, ctx, positions, cache_sb):
+def _hybrid_sb_apply(p_sb, x, cfg, acfg, ctx, positions, cache_sb,
+                     seq_mask=None):
     """One Jamba super-block: layers 0..attn_every-1, attn at the middle.
 
     Returned stats mirror the super-block's param structure (attn / mamba /
@@ -211,7 +225,8 @@ def _hybrid_sb_apply(p_sb, x, cfg, acfg, ctx, positions, cache_sb):
         else:
             mp = take(p_sb["mamba"], m_idx)
             c = None if cache_sb is None else take(cache_sb["mamba"], m_idx)
-            x, st_m, nc = apply_mamba_layer(mp, x, cfg, acfg, ctx_j, c, "none")
+            x, st_m, nc = apply_mamba_layer(mp, x, cfg, acfg, ctx_j, c, "none",
+                                            seq_mask)
             new_cache["mamba"].append(nc)
             st_mamba.append(st_m)
             m_idx += 1
@@ -237,8 +252,14 @@ def _hybrid_sb_apply(p_sb, x, cfg, acfg, ctx, positions, cache_sb):
 
 
 def apply_blocks(params_blocks, x, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
-                 positions, caches=None, remat: bool = False):
-    """Scan the layer stack. Returns (x, stats_stacked, new_caches)."""
+                 positions, caches=None, remat: bool = False, seq_mask=None):
+    """Scan the layer stack. Returns (x, stats_stacked, new_caches).
+
+    ``seq_mask`` [B, S] marks valid (non-pad) positions; it is forwarded to
+    the stateful mamba mixers so masked tokens leave the SSM/conv state
+    untouched (attention handles padding through the slot cache's ``start``
+    markers instead — see ``layers.attention``).
+    """
     fam = cfg.family
     with_cache = caches is not None
 
@@ -250,7 +271,7 @@ def apply_blocks(params_blocks, x, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
                 ctx, key=None if ctx.key is None
                 else jax.random.fold_in(ctx.key, idx))
             x, stats, nc = _hybrid_sb_apply(p_l, x, cfg, acfg, ctx_l,
-                                            positions, cache_l)
+                                            positions, cache_l, seq_mask)
             out = (stats, nc) if with_cache else stats
             return (x, idx + 1), out
     else:
@@ -265,7 +286,7 @@ def apply_blocks(params_blocks, x, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
                 else jax.random.fold_in(ctx.key, idx))
             if fam == "ssm":
                 x, stats, nc = apply_mamba_layer(p_l, x, cfg, acfg, ctx_l,
-                                                 cache_l, ffn_kind)
+                                                 cache_l, ffn_kind, seq_mask)
             else:
                 x, stats, nc = apply_attn_layer(p_l, x, cfg, acfg, ctx_l,
                                                 positions, cache_l, ffn_kind)
@@ -380,7 +401,7 @@ def apply_lm_head(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
 def forward(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx, inputs,
             caches=None, pos_offset: Optional[jax.Array] = None,
             remat: bool = False, last_only: bool = False,
-            return_hidden: bool = False):
+            return_hidden: bool = False, seq_mask=None):
     """Full forward. Returns (logits, stats, new_caches).
 
     ``inputs``: {"tokens": ...} (+ "patch_embeds" for vlm). For decode pass
@@ -388,6 +409,11 @@ def forward(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx, inputs,
     computes the LM head for the final position only (prefill: avoids the
     [B, S, V] logits tensor entirely). ``return_hidden`` skips the LM head
     and returns post-final-norm hidden states (chunked-loss path).
+
+    Continuous-batching extensions: ``pos_offset`` may be per-row ([B, 1])
+    so request slots decode at heterogeneous positions, and ``seq_mask``
+    [B, S] marks left-pad positions of a chunked prefill as
+    state-transparent (see :func:`apply_blocks`).
     """
     x, positions = embed_inputs(params, cfg, inputs)
     x = shard_hint(x, "batch", "seq", "embed")
@@ -405,7 +431,8 @@ def forward(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx, inputs,
         positions = positions + pos_offset
 
     x, st_blocks, new_caches = apply_blocks(
-        params["blocks"], x, cfg, acfg, ctx, positions, caches, remat)
+        params["blocks"], x, cfg, acfg, ctx, positions, caches, remat,
+        seq_mask)
     stats["blocks"] = st_blocks
 
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
@@ -423,21 +450,61 @@ def forward(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx, inputs,
 # cache construction
 # ---------------------------------------------------------------------------
 
-def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32):
-    """Stacked per-layer decoding caches matching ``apply_blocks`` scan xs."""
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32,
+                per_slot: bool = False):
+    """Stacked per-layer decoding caches matching ``apply_blocks`` scan xs.
+
+    ``per_slot=True`` builds the continuous-batching slot layout: the
+    attention caches carry per-row write cursors (``pos``/``start`` [B])
+    instead of one shared scalar position, and every leaf keeps the slot
+    dimension at a fixed, known axis so one request's state can be
+    gathered/scattered by the scheduler (see :func:`cache_slot_spec`).
+    """
     fam = cfg.family
 
     def stack(tree, n):
         return jax.tree.map(lambda t: jnp.broadcast_to(t, (n,) + t.shape), tree)
 
     if fam in ("dense", "vlm", "audio", "moe"):
-        return stack(L.init_cache(cfg, batch, max_len, dtype), cfg.num_layers)
+        return stack(L.init_cache(cfg, batch, max_len, dtype, per_slot),
+                     cfg.num_layers)
     if fam == "ssm":
         return stack(M.init_mamba_cache(cfg, batch, dtype), cfg.num_layers)
     if fam == "hybrid":
         n_sb = cfg.num_layers // cfg.attn_every
-        sb = {"attn": L.init_cache(cfg, batch, max_len, dtype),
+        sb = {"attn": L.init_cache(cfg, batch, max_len, dtype, per_slot),
               "mamba": stack(M.init_mamba_cache(cfg, batch, dtype),
                              cfg.attn_every - 1)}
         return stack(sb, n_sb)
+    raise ValueError(fam)
+
+
+def cache_slot_spec(cfg):
+    """Companion trees for the slot cache: ``(axes, kinds)``.
+
+    ``axes`` mirrors the ``init_caches(per_slot=True)`` structure with the
+    integer axis of the slot (request) dimension at each leaf; ``kinds``
+    labels each leaf ``"start"`` (per-slot first-valid index, set to the
+    left-pad count at admission) or ``"state"`` (zeroed at admission).
+    The scheduler uses these to gather one slot's cache row, run a prefill
+    chunk on it, and scatter it back — without hard-coding the pytree
+    layout of any model family.
+    """
+    fam = cfg.family
+    attn_axes = {"k": 1, "v": 1, "pos": 1, "start": 1}
+    attn_kinds = {"k": "state", "v": "state", "pos": "state",
+                  "start": "start"}
+    mamba_axes = {"conv": 1, "ssm": 1}
+    mamba_kinds = {"conv": "state", "ssm": "state"}
+    if fam in ("dense", "vlm", "audio", "moe"):
+        return attn_axes, attn_kinds
+    if fam == "ssm":
+        return mamba_axes, mamba_kinds
+    if fam == "hybrid":
+        # hybrid mamba leaves carry an extra leading per-super-block stack
+        # dimension, shifting the slot axis by one
+        axes = {"attn": attn_axes,
+                "mamba": {k: v + 1 for k, v in mamba_axes.items()}}
+        kinds = {"attn": attn_kinds, "mamba": mamba_kinds}
+        return axes, kinds
     raise ValueError(fam)

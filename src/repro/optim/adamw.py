@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW hyperparameters (paper App. B: b2=0.98, decoupled decay)."""
     b1: float = 0.9
     b2: float = 0.98
     eps: float = 1e-6
@@ -26,6 +27,7 @@ class AdamWConfig:
 
 
 def init_opt_state(params) -> dict:
+    """Zero first/second-moment state matching the param tree."""
     zeros = lambda p: jax.tree.map(
         lambda t: jnp.zeros(t.shape, jnp.float32), p)
     return {"m": zeros(params), "v": zeros(params),
@@ -33,17 +35,20 @@ def init_opt_state(params) -> dict:
 
 
 def global_norm(tree) -> jax.Array:
+    """Global L2 norm across every leaf of a gradient tree."""
     return jnp.sqrt(sum(jnp.sum(jnp.square(t.astype(jnp.float32)))
                         for t in jax.tree.leaves(tree)))
 
 
 def clip_by_global_norm(grads, max_norm: float):
+    """Scale grads so the global norm is at most ``max_norm``."""
     norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
     return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
 
 
 def _decays(label: str, p) -> bool:
+    """Whether a labeled param takes weight decay (matrices only)."""
     return label in ("analog_weight", "digital") and p.ndim >= 2
 
 

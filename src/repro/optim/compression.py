@@ -24,10 +24,12 @@ import jax.numpy as jnp
 
 
 def init_error_state(params):
+    """Zero error-feedback accumulators matching the param tree."""
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
 def _quantize_leaf(g: jax.Array):
+    """int8-quantize one gradient leaf; returns (q, scale)."""
     scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
     return q, scale

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 def polynomial_with_warmup(step, *, peak_lr: float, total_steps: int,
                            warmup_ratio: float = 0.016, power: float = 1.0,
                            end_lr: float = 0.0):
+    """Linear-warmup → polynomial-decay LR schedule (paper App. B)."""
     step = jnp.asarray(step, jnp.float32)
     warmup = jnp.maximum(warmup_ratio * total_steps, 1.0)
     warm = peak_lr * step / warmup

@@ -57,8 +57,17 @@ def prefill(params, cfg, acfg: AnalogConfig, tokens: jax.Array,
 
 
 def serve_step(params, cfg, acfg: AnalogConfig, token: jax.Array,
-               caches, pos: jax.Array):
+               caches, pos: jax.Array, seq_mask=None):
     """One decode step: token [B, 1(, K)] + caches → (logits [B, V...], caches).
+
+    ``pos`` is the RoPE position offset: a scalar for the legacy lockstep
+    cache, or per-row [B, 1] for the continuous-batching slot cache, where
+    row ``b`` decodes at its own position (``pos[b] = written - left_pads``;
+    the per-slot cache write index lives inside the cache itself — see
+    ``models.layers.attention``). ``seq_mask`` [B, 1] marks the rows whose
+    slot currently holds an admitted request; inactive rows keep their SSM
+    state frozen, so the whole decode step stays one static-shape jitted
+    call no matter which subset of slots is live.
 
     With ``acfg.use_pallas`` every projection runs the fused analog-MVM
     kernel at decode-shape blocks (``bm = 8`` — the flattened M is just the
@@ -69,7 +78,7 @@ def serve_step(params, cfg, acfg: AnalogConfig, token: jax.Array,
     ctx = AnalogCtx(key=None, training=False)
     logits, _, caches = model_apply(params, cfg, acfg, ctx,
                                     {"tokens": token}, caches=caches,
-                                    pos_offset=pos)
+                                    pos_offset=pos, seq_mask=seq_mask)
     return logits[:, 0], caches
 
 

@@ -1,51 +1,104 @@
-"""Batched serving engine + test-time compute scaling (paper §4.4).
+"""Best-of-n test-time compute scaling harness (paper §4.4).
 
-``best_of_n`` generates n candidate answers per prompt with temperature
-sampling, scores them with a PRM, and applies one of the three selection
-strategies — the Fig. 4 / Table 15 harness. Generation batches candidates
-across prompts (prompt-major packing) so the decode loop stays saturated.
+``sample_candidates`` generates n candidate answers per prompt with
+temperature sampling on the continuous-batching :class:`ServeEngine`
+(every (prompt, candidate) pair is one request — slots recycle as
+candidates finish, so mixed-progress candidates never pad each other),
+scores them with a PRM, and ``best_of_n_accuracy`` applies the three
+selection strategies — the Fig. 4 / Table 15 pipeline.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analog import AnalogConfig
-from repro.serve.decode import digital_int4_config, generate
+from repro.serve.decode import digital_int4_config
 from repro.serve.prm import NoisyOraclePRM, select_answer
+from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
+                                   required_max_len)
 
 
 @dataclasses.dataclass(frozen=True)
 class BestOfNConfig:
+    """Candidate-generation settings for the §4.4 best-of-n harness.
+
+    Attributes:
+        temperature: Sampling temperature for candidate diversity — the
+            knob that makes best-of-n non-degenerate (paper App. F uses
+            temperature sampling for all MATH-500 candidates).
+        top_k: Keep only the k most likely tokens per step (0 = off);
+            candidate-diversity control, paper App. B.1.
+        top_p: Nucleus sampling mass (1.0 = off), as in App. F.
+        max_new: Tokens generated per candidate. 1 reproduces the
+            single-token toy answer task; larger values enable the
+            multi-token answers extracted via the ``extract`` hook of
+            :func:`sample_candidates`.
+        greedy_first: Decode this many initial tokens greedily before
+            sampling (the RGS/SGS generation strategies, App. B.1).
+        stop_tokens: Per-candidate stop ids — generation ends early when
+            one is sampled (answer-terminator for multi-token tasks).
+        num_slots: In-flight candidate capacity of the serving engine
+            (the decode batch width; replaces the old pad-to-max
+            ``batch_size``).
+        prefill_chunk: Admission prefill granularity of the engine.
+        int4_serve: Serve RTN weights via the packed-int4 kernel (the
+            Table 3 digital deployment path executed by
+            ``kernels.int4_matmul``).
+    """
+
     temperature: float = 0.8
+    top_k: int = 0
     top_p: float = 1.0
     max_new: int = 1
-    batch_size: int = 64
-    int4_serve: bool = False     # serve RTN weights via the packed-int4 kernel
+    greedy_first: int = 0
+    stop_tokens: tuple = ()
+    num_slots: int = 32
+    prefill_chunk: int = 8
+    int4_serve: bool = False
 
 
 def sample_candidates(params, cfg, acfg: AnalogConfig, key,
                       prompts: np.ndarray, n: int,
-                      bcfg: BestOfNConfig = BestOfNConfig()) -> np.ndarray:
-    """→ answers [num_prompts, n] (first generated token per candidate)."""
+                      bcfg: BestOfNConfig = BestOfNConfig(),
+                      extract: Optional[Callable[[np.ndarray], int]] = None,
+                      ) -> np.ndarray:
+    """Generate and extract n candidate answers per prompt.
+
+    Runs ``num_prompts * n`` requests through the continuous-batching
+    engine (per-candidate PRNG seeds derived from ``key``) and reduces
+    each generated token sequence to a scalar answer id with ``extract``
+    — a task-level hook (see ``eval.tasks``); the default keeps the first
+    generated token, matching the single-token toy answer tasks.
+
+    → answers [num_prompts, n] int array.
+    """
     if bcfg.int4_serve:
         acfg = digital_int4_config(acfg)
+    if extract is None:
+        extract = lambda toks: int(toks[0])
     num = len(prompts)
-    rep = np.repeat(prompts, n, axis=0)              # prompt-major packing
-    outs = []
-    for i in range(0, len(rep), bcfg.batch_size):
-        key, sub = jax.random.split(key)
-        chunk = jnp.asarray(rep[i:i + bcfg.batch_size])
-        toks = generate(params, cfg, acfg, sub, chunk, bcfg.max_new,
-                        temperature=bcfg.temperature, top_p=bcfg.top_p)
-        outs.append(np.asarray(toks[:, 0]))
-    flat = np.concatenate(outs)
-    return flat.reshape(num, n)
+    seeds = np.asarray(jax.random.randint(
+        key, (num * n,), 0, np.iinfo(np.int32).max))
+    plen = int(np.shape(prompts)[1])
+    scfg = SchedulerConfig(
+        num_slots=bcfg.num_slots,
+        max_len=required_max_len(plen, bcfg.max_new, bcfg.prefill_chunk),
+        prefill_chunk=bcfg.prefill_chunk)
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    reqs = [Request(uid=i, prompt=np.asarray(prompts[i // n], np.int32),
+                    max_new=bcfg.max_new, temperature=bcfg.temperature,
+                    top_k=bcfg.top_k, top_p=bcfg.top_p,
+                    greedy_first=bcfg.greedy_first,
+                    stop_tokens=tuple(bcfg.stop_tokens), seed=int(seeds[i]))
+            for i in range(num * n)]
+    outs = eng.run(reqs)
+    return np.array([[extract(outs[p * n + i]) for i in range(n)]
+                     for p in range(num)])
 
 
 def best_of_n_accuracy(answers: np.ndarray, correct: np.ndarray,

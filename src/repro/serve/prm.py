@@ -14,7 +14,9 @@ import numpy as np
 
 
 class NoisyOraclePRM:
+    """Noisy-oracle PRM: reward = sigmoid(noise + margin·correctness)."""
     def __init__(self, reliability: float = 0.75, seed: int = 0):
+        """reliability ∈ [0.5, 1]: 0.5 = uninformative, 1 = oracle."""
         assert 0.0 <= reliability <= 1.0
         self.margin = 2.0 * (reliability - 0.5)
         self.rng = np.random.default_rng(seed)

@@ -25,3 +25,60 @@ def sample_logits(key: jax.Array, logits: jax.Array, *,
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_logits_batched(keys: jax.Array, logits: jax.Array,
+                          temperature: jax.Array, top_k: jax.Array,
+                          top_p: jax.Array, greedy: jax.Array,
+                          use_top_k: bool = True,
+                          use_top_p: bool = True) -> jax.Array:
+    """Per-request sampling for the continuous-batching engine.
+
+    Unlike :func:`sample_logits` (one static parameter set for the whole
+    batch), every row carries its own sampling parameters as *traced*
+    values, so one compiled decode step serves requests with heterogeneous
+    ``temperature`` / ``top_k`` / ``top_p`` / greediness. All filtering is
+    row-independent and each row consumes its own PRNG key — a request
+    samples the same tokens whether it runs solo or packed next to other
+    requests (the scheduler's admission-parity contract).
+
+    ``keys`` [B, 2] uint32 raw PRNG keys; ``temperature``/``top_p`` [B]
+    f32; ``top_k`` [B] int32 (0 disables); ``greedy`` [B] bool. → [B] ids.
+
+    ``use_top_k`` / ``use_top_p`` are *static* fast-path switches: when the
+    engine knows no in-flight request uses a filter, disabling it removes
+    the full-vocab sorts from the compiled step (the filters are exact
+    no-ops for rows with ``top_k = 0`` / ``top_p = 1`` either way, so
+    specialization never changes any row's tokens).
+    """
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = lf / temp
+
+    if use_top_k:
+        # top-k: threshold at the k-th largest logit (row-wise dynamic k)
+        sorted_desc = jnp.sort(scaled, axis=-1)[..., ::-1]
+        k_idx = jnp.clip(top_k - 1, 0, v - 1)[:, None]
+        kth = jnp.take_along_axis(sorted_desc, k_idx, axis=-1)
+        k_on = ((top_k > 0) & (top_k < v))[:, None]
+        scaled = jnp.where(k_on & (scaled < kth), -jnp.inf, scaled)
+    if use_top_p:
+        # top-p: smallest prefix of the (top-k-filtered, matching the
+        # scalar sampler's order of operations) sorted distribution with
+        # mass >= p
+        sorted_desc = jnp.sort(scaled, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p[:, None], axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
+        p_on = (top_p < 1.0)[:, None]
+        scaled = jnp.where(p_on & (scaled < cutoff), -jnp.inf, scaled)
+
+    sampled = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l, axis=-1))(keys, scaled)
+    pick_greedy = greedy | (temperature <= 0.0)
+    return jnp.where(pick_greedy, greedy_tok,
+                     sampled.astype(jnp.int32)).astype(jnp.int32)

@@ -1,0 +1,390 @@
+"""Request-level continuous-batching serving engine (in-flight batching).
+
+The static ``serve.decode.generate`` loop pads every prompt to the batch
+max and decodes until the *slowest* request finishes — fine for the
+lockstep data-generation pipelines, but it strands decode throughput on
+the mixed-length traffic the ROADMAP targets (and that hardware-aware
+deployments must serve efficiently — Rasch et al. 2023). This module
+replaces it for serving:
+
+* **Slot-based in-flight batching** — the engine owns ``num_slots`` cache
+  slots (one row of the per-slot KV/SSM cache layout,
+  ``models.transformer.init_caches(per_slot=True)``). A finished sequence
+  releases its slot immediately and a waiting request is admitted
+  mid-decode; the decode step itself stays one jitted static-shape call
+  regardless of which subset of slots is live.
+* **Chunked, left-padded prefill** — an admitted prompt is left-padded to
+  a multiple of ``prefill_chunk`` and driven through the model chunk by
+  chunk against the slot's cache row (gather → run → scatter, via
+  ``models.transformer.cache_slot_spec``). Left-pad positions are masked
+  state-transparent (attention: the cache's ``start`` marker; SSM: the
+  ``seq_mask`` → ``dt = 0`` rule in ``models.mamba2``), so only two
+  executables exist per engine: one ``[1, chunk]`` prefill and one
+  ``[num_slots, 1]`` decode.
+* **Per-request sampling and stop conditions** — temperature / top-k /
+  top-p / ``greedy_first`` ride along each request as traced per-row
+  arrays (``sampling.sample_logits_batched``), and every request carries
+  its own PRNG key folded per generated token. Sampling and the model
+  math are row-independent, which yields the engine's *admission-parity
+  contract*: a request produces bit-identical tokens whether it runs solo
+  or is admitted into a half-full batch mid-decode (verified in
+  ``tests/test_scheduler.py``; MoE capacity dropping is the one documented
+  exception — token dropping is chunk-shape dependent).
+
+Works in every serving mode of ``AnalogConfig`` — ``off``, ``analog``
+(optionally after ``perturb_analog_weights``), ``rtn``, and packed-int4
+(``decode.digital_int4_config`` + ``core.analog.pack_int4_weights``).
+Families: dense / moe / ssm / hybrid (audio's multi-codebook tokens and
+vlm's patch-embed prefill are not wired into the scheduler yet).
+
+See ``docs/serving.md`` for the full design and ``benchmarks/serve_bench.py``
+for the static-vs-continuous throughput comparison.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.models import apply as model_apply
+from repro.models import transformer as T
+from repro.serve.decode import serve_step
+from repro.serve.sampling import sample_logits_batched
+
+
+def padded_prompt_len(plen: int, chunk: int) -> int:
+    """Prompt length after left-padding to a multiple of ``chunk``.
+
+    The single source of truth for admission geometry — capacity
+    validation (``ServeEngine.submit``), the admission prefill itself,
+    and every caller sizing ``SchedulerConfig.max_len`` must agree.
+    """
+    return max(chunk, -(-plen // chunk) * chunk)
+
+
+def required_max_len(plen: int, max_new: int, chunk: int) -> int:
+    """Minimum ``SchedulerConfig.max_len`` for a (prompt, budget) pair."""
+    return padded_prompt_len(plen, chunk) + max_new
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``stop_tokens``: sampling any of these ends the request (the stop token
+    is kept in the output). ``greedy_first``: number of initial tokens
+    decoded greedily before temperature sampling (RGS/SGS strategies of
+    paper App. B.1). ``seed`` derives the request's private PRNG key —
+    generation is deterministic per request, independent of batch-mates.
+    """
+
+    uid: int
+    prompt: np.ndarray                 # [len] int32 token ids
+    max_new: int = 16
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    greedy_first: int = 0
+    stop_tokens: tuple = ()
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Static engine geometry (determines the two compiled executables).
+
+    ``num_slots``: in-flight request capacity (decode batch rows).
+    ``max_len``: per-slot cache length; a request needs
+    ``padded_prompt + max_new <= max_len``. ``prefill_chunk``: admission
+    prefill granularity — prompts are left-padded up to a multiple of this,
+    so one ``[1, chunk]`` executable serves every prompt length.
+    ``decode_block``: multi-step decode horizon — up to this many
+    decode+sample steps run inside one ``lax.scan`` dispatch (the block
+    length is clipped to the smallest remaining budget in flight and
+    quantized to powers of two, so per-step host overhead is amortized
+    without ever overshooting a request's ``max_new``; admission happens
+    at block boundaries).
+    """
+
+    num_slots: int = 4
+    max_len: int = 96
+    prefill_chunk: int = 16
+    decode_block: int = 8
+    cache_dtype: jnp.dtype = jnp.float32
+
+
+class _Slot:
+    """Host-side bookkeeping for one in-flight request."""
+
+    def __init__(self, req: Request):
+        """Fresh bookkeeping for ``req`` (no tokens emitted yet)."""
+        self.req = req
+        self.out: list[int] = []
+        self.count = 0                 # tokens sampled so far
+
+
+# ---------------------------------------------------------------------------
+# jitted engine steps — module level (static on the hashable cfg/acfg
+# dataclasses) so the compilation cache is shared across ServeEngine
+# instances: constructing an engine is free once its shapes have been seen.
+# The cache pytree is donated (the engine rebinds self.caches with the
+# result immediately, so the input buffers are dead): the slot caches are
+# updated in place instead of copied every decode block / prefill chunk.
+# CPU ignores donation, so skip it there to keep tests warning-free.
+# ---------------------------------------------------------------------------
+
+def _donate(*argnums):
+    """donate_argnums for jax.jit, disabled on CPU (donation unsupported)."""
+    return () if jax.default_backend() == "cpu" else argnums
+
+
+def _gather_slot(caches, slot, axes):
+    """Slice one request slot out of every cache leaf."""
+    return jax.tree.map(
+        lambda c, ax: jax.lax.dynamic_slice_in_dim(c, slot, 1, ax),
+        caches, axes)
+
+
+def _scatter_slot(caches, sub, slot, axes):
+    """Write a gathered slot subtree back into the full caches."""
+    return jax.tree.map(
+        lambda c, s, ax: jax.lax.dynamic_update_slice_in_dim(c, s, slot, ax),
+        caches, sub, axes)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnums=_donate(0))
+def _admit_jit(caches, slot, start, *, cfg):
+    """Zero slot ``slot``'s cache rows; set its ``start`` markers."""
+    axes, kinds = T.cache_slot_spec(cfg)
+
+    def upd(c, ax, kind):
+        shape = c.shape[:ax] + c.shape[ax + 1:]
+        val = (jnp.full(shape, start, c.dtype) if kind == "start"
+               else jnp.zeros(shape, c.dtype))
+        return jax.lax.dynamic_update_index_in_dim(c, val, slot, ax)
+
+    return jax.tree.map(upd, caches, axes, kinds)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg"),
+                   donate_argnums=_donate(1))
+def _prefill_jit(params, caches, slot, tokens, mask, off, *, cfg, acfg):
+    """One left-padded prefill chunk against slot ``slot``'s cache row."""
+    axes, _ = T.cache_slot_spec(cfg)
+    sub = _gather_slot(caches, slot, axes)
+    ctx = AnalogCtx(key=None, training=False)
+    logits, _, sub = model_apply(params, cfg, acfg, ctx, {"tokens": tokens},
+                                 caches=sub, pos_offset=off, seq_mask=mask)
+    return logits[:, -1], _scatter_slot(caches, sub, slot, axes)
+
+
+def _sample_tokens(logits, keys, counts, temp, topk, topp, gfirst,
+                   use_top_k, use_top_p):
+    """Fold each request key at its token count, then batched sampling."""
+    ks = jax.vmap(jax.random.fold_in)(keys, counts)
+    return sample_logits_batched(ks, logits, temp, topk, topp,
+                                 greedy=counts < gfirst,
+                                 use_top_k=use_top_k, use_top_p=use_top_p)
+
+
+_sample_jit = jax.jit(_sample_tokens,
+                      static_argnames=("use_top_k", "use_top_p"))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
+                                             "use_top_p", "k"),
+                   donate_argnums=_donate(1))
+def _step_jit(params, caches, toks, off, active, keys, counts, temp, topk,
+              topp, gfirst, *, cfg, acfg, use_top_k, use_top_p, k):
+    """``k`` decode + per-request-sampling steps fused into one executable
+    (``lax.scan`` over the step body): one host dispatch per decode block
+    regardless of slot count, amortizing dispatch exactly like the static
+    ``generate`` scan does — while slots still recycle at block
+    boundaries. Specialized per (use_top_k, use_top_p) so the full-vocab
+    sorts drop out of the step when no in-flight request filters (see
+    ``sampling`` module), and per block length ``k`` (powers of two).
+
+    Each scan step is row-independent and folds each request's own key at
+    its own token count, so the produced tokens are invariant to how the
+    host partitions decoding into blocks — the admission-parity contract
+    extends to multi-step decode. Returns (tokens [k, B], caches).
+    """
+    def body(carry, _):
+        toks, off, counts, caches = carry
+        logits, caches = serve_step(params, cfg, acfg, toks[:, None], caches,
+                                    off[:, None], seq_mask=active[:, None])
+        new = _sample_tokens(logits, keys, counts, temp, topk, topp, gfirst,
+                             use_top_k, use_top_p)
+        return (new, off + 1, counts + 1, caches), new
+
+    (_, _, _, caches), out = jax.lax.scan(
+        body, (toks, off, counts, caches), None, length=k)
+    return out, caches
+
+
+class ServeEngine:
+    """Continuous-batching engine over a slot cache.
+
+    Usage::
+
+        eng = ServeEngine(params, cfg, acfg, SchedulerConfig(num_slots=8))
+        results = eng.run([Request(uid=0, prompt=np.array([1, 2, 3]))])
+        results[0]                     # np.ndarray of generated ids
+
+    ``submit``/``step`` expose the loop for finer control (e.g. injecting
+    requests mid-decode, as the admission-parity tests do).
+    """
+
+    def __init__(self, params, cfg, acfg: AnalogConfig,
+                 scfg: SchedulerConfig = SchedulerConfig()):
+        """Allocate the slot caches and host-side request state."""
+        if cfg.family in ("audio", "vlm"):
+            raise NotImplementedError(
+                f"continuous batching not wired for family={cfg.family!r} "
+                "(multi-codebook tokens / patch-embed prefill)")
+        self.params = params
+        self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
+        b = scfg.num_slots
+        self.caches = T.init_caches(cfg, b, scfg.max_len, scfg.cache_dtype,
+                                    per_slot=True)
+        T.cache_slot_spec(cfg)         # fail fast on unsupported families
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Optional[_Slot]] = [None] * b
+        self.results: dict[int, np.ndarray] = {}
+        self.finished_at: dict[int, float] = {}
+        self.decode_steps = 0
+        # per-slot host mirrors of the device-side request state
+        self._pos = np.zeros(b, np.int32)       # cache write cursor
+        self._start = np.zeros(b, np.int32)     # left-pad count
+        self._last_tok = np.zeros(b, np.int32)
+        self._temp = np.ones(b, np.float32)
+        self._topk = np.zeros(b, np.int32)
+        self._topp = np.ones(b, np.float32)
+        self._gfirst = np.zeros(b, np.int32)
+        self._keys = np.zeros((b, 2), np.uint32)
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue a request (admitted at the next free slot)."""
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        need = required_max_len(len(req.prompt), req.max_new,
+                                self.scfg.prefill_chunk)
+        if need > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: padded prompt + max_new needs "
+                f"max_len >= {need}, engine has {self.scfg.max_len}")
+        self.queue.append(req)
+
+    def step(self) -> None:
+        """One engine iteration: admit into free slots, then decode once."""
+        for b in range(self.scfg.num_slots):
+            if self.slots[b] is None and self.queue:
+                self._admit_request(self.queue.popleft(), b)
+        if any(s is not None for s in self.slots):
+            self._decode_step()
+
+    def run(self, requests: Sequence[Request] = ()) -> dict[int, np.ndarray]:
+        """Drive until every queued/submitted request completes."""
+        for r in requests:
+            self.submit(r)
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+        return self.results
+
+    @property
+    def num_active(self) -> int:
+        """Slots currently decoding a request."""
+        return sum(s is not None for s in self.slots)
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _admit_request(self, req: Request, b: int) -> None:
+        """Reset slot ``b``, chunk-prefill the prompt, sample token 0."""
+        c = self.scfg.prefill_chunk
+        plen = len(req.prompt)
+        padded = padded_prompt_len(plen, c)
+        npad = padded - plen
+        toks = np.zeros(padded, np.int32)
+        toks[npad:] = np.asarray(req.prompt, np.int32)
+        mask = np.zeros(padded, np.float32)
+        mask[npad:] = 1.0
+
+        self.caches = _admit_jit(self.caches, jnp.int32(b), jnp.int32(npad),
+                                 cfg=self.cfg)
+        last = None
+        for j in range(padded // c):
+            last, self.caches = _prefill_jit(
+                self.params, self.caches, jnp.int32(b),
+                jnp.asarray(toks[None, j * c:(j + 1) * c]),
+                jnp.asarray(mask[None, j * c:(j + 1) * c]),
+                jnp.int32(j * c - npad), cfg=self.cfg, acfg=self.acfg)
+
+        self._pos[b], self._start[b] = padded, npad
+        self._temp[b], self._topp[b] = req.temperature, req.top_p
+        self._topk[b], self._gfirst[b] = req.top_k, req.greedy_first
+        self._keys[b] = np.asarray(jax.random.PRNGKey(req.seed))
+        slot = _Slot(req)
+        self.slots[b] = slot
+
+        tok = int(np.asarray(_sample_jit(
+            last, jnp.asarray(self._keys[b:b + 1]),
+            jnp.zeros((1,), jnp.int32), jnp.asarray(self._temp[b:b + 1]),
+            jnp.asarray(self._topk[b:b + 1]), jnp.asarray(self._topp[b:b + 1]),
+            jnp.asarray(self._gfirst[b:b + 1]),
+            use_top_k=req.top_k > 0, use_top_p=req.top_p < 1.0))[0])
+        self._append_token(b, tok)
+
+    def _decode_step(self) -> None:
+        """One multi-step decode block over all slots (see ``_step_jit``)."""
+        counts = np.array([s.count if s else 0 for s in self.slots], np.int32)
+        active = np.array([s is not None for s in self.slots], np.float32)
+        live = [s for s in self.slots if s is not None]
+        # largest power-of-two block that no in-flight budget can overshoot
+        k = 1
+        remaining = min(s.req.max_new - s.count for s in live)
+        while k * 2 <= min(remaining, self.scfg.decode_block):
+            k *= 2
+        toks, self.caches = _step_jit(
+            self.params, self.caches, jnp.asarray(self._last_tok),
+            jnp.asarray(self._pos - self._start), jnp.asarray(active),
+            jnp.asarray(self._keys), jnp.asarray(counts),
+            jnp.asarray(self._temp), jnp.asarray(self._topk),
+            jnp.asarray(self._topp), jnp.asarray(self._gfirst),
+            cfg=self.cfg, acfg=self.acfg,
+            use_top_k=any(s.req.top_k > 0 for s in live),
+            use_top_p=any(s.req.top_p < 1.0 for s in live), k=k)
+        toks = np.asarray(toks)                       # [k, B]
+        self._pos += k           # every row wrote one token per scan step
+        self.decode_steps += k
+        for i in range(k):
+            for b in range(self.scfg.num_slots):
+                # slots going None mid-block stop consuming their rows
+                # (tokens past a stop condition are discarded)
+                if self.slots[b] is not None:
+                    self._append_token(b, int(toks[i, b]))
+
+    def _append_token(self, b: int, tok: int) -> None:
+        """Record one sampled token; finish the request on stop/budget."""
+        slot = self.slots[b]
+        slot.out.append(tok)
+        slot.count += 1
+        self._last_tok[b] = tok
+        if tok in slot.req.stop_tokens or slot.count >= slot.req.max_new:
+            self.results[slot.req.uid] = np.array(slot.out, np.int32)
+            self.finished_at[slot.req.uid] = time.perf_counter()
+            self.slots[b] = None

@@ -33,6 +33,7 @@ from repro.train.trainer import Trainer
 
 
 def _teacher_logit_fn(teacher_params, cfg):
+    """Jitted teacher forward returning logits for KD targets."""
     @jax.jit
     def fn(tokens):
         return teacher_logits(teacher_params, cfg, tokens)
@@ -183,6 +184,7 @@ def _rotate_residual_stream(params, cfg, key):
 
 
 def _apply_rot(kern, r, side):
+    """Multiply a kernel by a rotation on its input or output side."""
     kf = kern.astype(jnp.float32)
     if side == "in":
         res = jnp.einsum("ij,...jk->...ik", r.T, kf)

@@ -33,6 +33,7 @@ from repro.train.distill import ce_loss, kd_loss
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
+    """Distillation/pretrain hyperparameters (paper App. B recipe)."""
     peak_lr: float = 1e-4
     total_steps: int = 1000
     warmup_ratio: float = 0.016
@@ -65,6 +66,7 @@ class TrainConfig:
 
 
 def init_train_state(params, grad_compression: bool = False) -> dict:
+    """Fresh train state: step counter, Adam moments, optional EF state."""
     state = {"step": jnp.zeros((), jnp.int32),
              "opt": init_opt_state(params)}
     if grad_compression:
@@ -73,6 +75,7 @@ def init_train_state(params, grad_compression: bool = False) -> dict:
 
 
 def _collect_aux_losses(stats) -> jax.Array:
+    """Sum aux_loss entries (MoE load balancing) from stacked stats."""
     total, n = jnp.zeros((), jnp.float32), 0
     def walk(node):
         nonlocal total, n
@@ -137,6 +140,7 @@ def _align_vlm_labels(cfg, batch):
 
 
 def make_loss_fn(cfg, acfg: AnalogConfig, tcfg: TrainConfig):
+    """Build the (chunked-vocab) KD/CE loss closure for one config."""
     from repro.models.transformer import apply_lm_head
 
     def loss_fn(params, batch, noise_key, teacher_params=None):

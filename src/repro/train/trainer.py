@@ -38,6 +38,7 @@ class StragglerMonitor:
     events: list = dataclasses.field(default_factory=list)
 
     def observe(self, step: int, dt: float) -> bool:
+        """Record one step time; True when it is straggler-slow."""
         self.times.append(dt)
         if len(self.times) > self.window:
             self.times.pop(0)
@@ -49,11 +50,13 @@ class StragglerMonitor:
 
 
 class Trainer:
+    """Checkpointing train loop: auto-resume, retention, straggler log."""
     def __init__(self, train_step: Callable, params, state, *,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 200,
                  keep: int = 3, log_every: int = 20,
                  data_state_fn: Optional[Callable[[], dict]] = None,
                  seed: int = 0):
+        """Wire a jitted train_step to params/state and a ckpt dir."""
         self.train_step = train_step
         self.params = params
         self.state = state
@@ -69,6 +72,7 @@ class Trainer:
 
     # -- fault tolerance ----------------------------------------------------
     def try_resume(self) -> Optional[dict]:
+        """Restore the newest valid checkpoint, if any. Returns its tag."""
         if not self.ckpt_dir or ckpt.latest_step(self.ckpt_dir) is None:
             return None
         tree = {"params": self.params, "state": self.state}
@@ -78,6 +82,7 @@ class Trainer:
         return extra
 
     def save(self, tag_extra: Optional[dict] = None):
+        """Write an atomic checkpoint of params/state/loader/rng."""
         if not self.ckpt_dir:
             return
         step = int(self.state["step"])
@@ -89,6 +94,7 @@ class Trainer:
 
     # -- the loop -------------------------------------------------------------
     def fit(self, batches: Iterable[Any], num_steps: int) -> list[dict]:
+        """Run ``num_steps`` steps, checkpointing on the save cadence."""
         it = iter(batches)
         try:
             for _ in range(num_steps):

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Markdown link checker for README + docs/.
+
+Validates every ``[text](target)`` link in the given files/directories:
+
+* relative file targets must exist (resolved against the linking file);
+* ``file#anchor`` / ``#anchor`` targets must match a heading slug in the
+  target (GitHub slugification: lowercase, spaces → dashes, punctuation
+  dropped);
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI).
+
+Exit code 1 and a per-link report when anything dangles.
+
+    python tools/check_links.py README.md docs
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\s-]", "", text)
+    return re.sub(r"\s+", "-", text).strip("-")
+
+
+def heading_slugs(path: pathlib.Path) -> set[str]:
+    return {slugify(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    """Returns a list of human-readable problems in ``path``."""
+    problems = []
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = (path if not file_part
+                else (path.parent / file_part).resolve())
+        if not dest.exists():
+            problems.append(f"{path}: broken link → {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if slugify(anchor) not in heading_slugs(dest):
+                problems.append(f"{path}: missing anchor → {target}")
+    return problems
+
+
+def gather(paths: list[str]) -> list[pathlib.Path]:
+    out = []
+    for p in paths:
+        pp = pathlib.Path(p)
+        out.extend(sorted(pp.rglob("*.md")) if pp.is_dir() else [pp])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+", help="markdown files or directories")
+    args = ap.parse_args(argv)
+    files = gather(args.paths)
+    problems = [p for f in files for p in check_file(f)]
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"[check_links] {len(files)} files, {len(problems)} problems")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Stdlib docstring-coverage checker (interrogate-compatible metric).
+
+Counts docstrings on modules, classes, and functions/methods under the
+given paths (AST-based, nothing is imported). Private helpers
+(leading ``_``), nested ``lambda``-like defs and ``__init__`` are counted
+like interrogate's defaults with ``ignore-init-method`` off and
+``ignore-private`` off, so the number tracks the CI `interrogate` lane
+configured in pyproject.toml.
+
+    python tools/docstring_coverage.py --fail-under 85 src/repro
+
+Exit code 1 when coverage is below the threshold. The threshold is a
+ratchet: raise it as coverage improves, never lower it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+
+def inspect_file(path: pathlib.Path,
+                 ignore_nested: bool = False) -> tuple[int, int, list[str]]:
+    """→ (documented, total, missing-names) for one python file.
+
+    ``ignore_nested`` skips functions defined inside other functions
+    (closures/local helpers), mirroring interrogate's
+    ``ignore-nested-functions`` switch so both tools report one number.
+    """
+    tree = ast.parse(path.read_text())
+    documented, total, missing = 0, 0, []
+
+    def visit(node, qual, in_function=False):
+        nonlocal documented, total
+        is_fn = isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        if not (ignore_nested and in_function and is_fn):
+            total += 1
+            if ast.get_docstring(node) is not None:
+                documented += 1
+            else:
+                missing.append(qual or str(path))
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                visit(child, f"{qual}:{child.name}" if qual
+                      else f"{path}:{child.name}",
+                      in_function=in_function or is_fn)
+
+    visit(tree, "")
+    return documented, total, missing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--fail-under", type=float, default=0.0,
+                    help="minimum coverage percent (ratchet)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="list undocumented definitions")
+    ap.add_argument("--ignore-nested-functions", action="store_true",
+                    help="skip functions nested inside functions")
+    args = ap.parse_args(argv)
+
+    files = []
+    for p in args.paths:
+        pp = pathlib.Path(p)
+        files.extend(sorted(pp.rglob("*.py")) if pp.is_dir() else [pp])
+
+    documented = total = 0
+    missing: list[str] = []
+    for f in files:
+        d, t, m = inspect_file(f, ignore_nested=args.ignore_nested_functions)
+        documented += d
+        total += t
+        missing.extend(m)
+    pct = 100.0 * documented / max(total, 1)
+    if args.verbose:
+        for name in missing:
+            print(f"missing: {name}", file=sys.stderr)
+    print(f"[docstring_coverage] {documented}/{total} documented "
+          f"({pct:.1f}%), threshold {args.fail_under:.1f}%")
+    return 1 if pct < args.fail_under else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
