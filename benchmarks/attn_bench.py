@@ -1,0 +1,123 @@
+"""Decode-attention microbench: full-buffer scoring vs paged flash-decode.
+
+Times one batched single-token GQA attention read at several cache fill
+ratios, holding the allocated geometry fixed:
+
+* **full** — the contiguous slot path (``_gqa_scores_softmax_v`` over the
+  whole ``[B, max_len]`` buffer): cost is O(max_len) regardless of how many
+  tokens are actually live — the pre-paging decode hot path.
+* **paged** — the paged flash-decode op as dispatched on this backend
+  (``kernels.dispatch.paged_decode_attention``: the ``lax.scan`` oracle
+  whose per-block ``lax.cond`` skips dead blocks at runtime on CPU, the
+  Pallas kernel on TPU): cost is O(live tokens).
+
+Emits ``BENCH_attn.json``: per-fill-ratio step times and the paged speedup
+— the acceptance gate is >= 1.5x at <= 25% fill. CI uploads it as an
+artifact next to ``BENCH_serve.json``.
+
+    PYTHONPATH=src:. python benchmarks/attn_bench.py [--quick] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch
+from repro.models.layers import _gqa_scores_softmax_v
+
+from benchmarks import common
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _full_step(q, k_buf, v_buf, pos, start, scale):
+    """Contiguous decode read: mask + dense softmax over the full buffer."""
+    t = k_buf.shape[1]
+    j = jnp.arange(t)[None, None, :]
+    mask = (j >= start[:, None, None]) & (j <= pos[:, None, None])
+    return _gqa_scores_softmax_v(q[:, None], k_buf, v_buf, mask, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _paged_step(q, kp, vp, tbl, pos, start, scale):
+    """Paged decode read through the dispatch layer."""
+    return dispatch.paged_decode_attention(q, kp, vp, tbl, pos, start, scale)
+
+
+def _time(fn, iters):
+    """Median wall time (us) of ``fn()`` over ``iters`` timed runs."""
+    fn().block_until_ready()                      # compile + warm
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def run(bsz=8, max_len=1024, nkv=4, group=4, hd=64, block=64, iters=20,
+        quick=False, out="BENCH_attn.json"):
+    """Run the fill-ratio sweep and write ``out``. Returns the result dict."""
+    if quick:
+        bsz, max_len, block, iters = 4, 512, 64, 10
+    nq = nkv * group
+    nb = max_len // block
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(bsz, nq, hd)).astype(np.float32))
+    k_buf = jnp.asarray(
+        rng.normal(size=(bsz, max_len, nkv, hd)).astype(np.float32))
+    v_buf = jnp.asarray(
+        rng.normal(size=(bsz, max_len, nkv, hd)).astype(np.float32))
+    kp = k_buf.reshape(bsz * nb, block, nkv, hd)
+    vp = v_buf.reshape(bsz * nb, block, nkv, hd)
+    tbl = jnp.arange(bsz * nb, dtype=jnp.int32).reshape(bsz, nb)
+    start = jnp.zeros((bsz,), jnp.int32)
+    scale = hd ** -0.5
+
+    rows = []
+    for fill in (0.125, 0.25, 0.5, 1.0):
+        pos = jnp.full((bsz,), int(max_len * fill) - 1, jnp.int32)
+        t_full = _time(
+            lambda: _full_step(q, k_buf, v_buf, pos, start, scale), iters)
+        t_paged = _time(
+            lambda: _paged_step(q, kp, vp, tbl, pos, start, scale), iters)
+        rows.append({"fill": fill, "live_tokens": int(max_len * fill),
+                     "full_us": round(t_full, 1),
+                     "paged_us": round(t_paged, 1),
+                     "speedup": round(t_full / t_paged, 2)})
+        common.bench_row(f"attn.decode.fill{int(fill * 100)}", t_paged,
+                         f"full={t_full:.0f}us speedup={t_full / t_paged:.2f}")
+
+    low_fill = [r for r in rows if r["fill"] <= 0.25]
+    result = {
+        "workload": {"batch": bsz, "max_len": max_len, "kv_heads": nkv,
+                     "q_heads": nq, "head_dim": hd, "block": block,
+                     "backend": jax.default_backend(),
+                     "paged_impl": "kernel" if dispatch.on_tpu() else "ref"},
+        "rows": rows,
+        "speedup_at_low_fill": min(r["speedup"] for r in low_fill),
+        "scales_with_live_tokens":
+            rows[0]["paged_us"] < rows[-1]["paged_us"],
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    common.bench_row(
+        "attn.claims", 0.0,
+        f"low_fill_speedup={result['speedup_at_low_fill']} "
+        f"scales={result['scales_with_live_tokens']}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sweep (~tens of seconds)")
+    ap.add_argument("--out", default="BENCH_attn.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)

@@ -9,7 +9,19 @@ per-request token budgets) through
   serving path), and
 * **continuous** — the request-level ``serve.scheduler.ServeEngine``: slots
   recycle the moment a request finishes, waiting requests are admitted
-  mid-decode via chunked left-padded prefill.
+  mid-decode via chunked left-padded prefill, and
+* **paged** — the same engine on the block-paged KV pool
+  (``SchedulerConfig(paged=True)``). CPU caveat: the paged decode read is
+  the sequential ``lax.scan`` oracle (rows via ``lax.map`` so dead-block
+  skipping is a real branch), so its end-to-end tokens/s on CPU understate
+  the TPU kernel, which parallelizes rows across the Pallas grid; the
+  isolated active-length win is what ``benchmarks/attn_bench.py``
+  measures.
+
+Also emits the ``kv_cache`` section: attention-KV bytes per slot measured
+from the engines' actual device buffers (contiguous fp32 vs paged int8,
+reduction must be >= 2x) and the int8 bounded-divergence eval (greedy
+first-token match + prefix agreement vs the fp32 paged engine).
 
 Both paths run once untimed (to compile every executable) and once timed.
 Emits ``BENCH_serve.json`` with useful-token throughput and p50/p99 request
@@ -23,6 +35,7 @@ start of the serving perf trajectory (ROADMAP: serve heavy mixed traffic).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -37,6 +50,9 @@ from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
                                    required_max_len)
 
 from benchmarks import common
+
+# attention KV leaves by cache layout (cache-bytes accounting)
+_KV_LEAVES = {False: ("k", "v"), True: ("kp", "vp", "ks", "vs", "tbl")}
 
 
 def bench_arch(d_model: int = 320, num_layers: int = 6) -> ArchConfig:
@@ -103,17 +119,54 @@ def run_static(params, cfg, acfg, reqs, num_slots):
     return time.perf_counter() - t0, lats, useful
 
 
-def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk):
+def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
+                   paged=False, kv_block_size=16):
     """Continuous batching. Returns (wall_s, latencies_s, tokens, steps)."""
     max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
                   for r in reqs)
     eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
-        num_slots=num_slots, max_len=max_len, prefill_chunk=prefill_chunk))
+        num_slots=num_slots, max_len=max_len, prefill_chunk=prefill_chunk,
+        paged=paged, kv_block_size=kv_block_size))
     t0 = time.perf_counter()
     results = eng.run(reqs)
     wall = time.perf_counter() - t0
     lats = [eng.finished_at[r.uid] - t0 for r in reqs]
     return wall, lats, sum(len(v) for v in results.values()), eng.decode_steps
+
+
+def kv_bytes_per_slot(params, cfg, acfg, scfg) -> int:
+    """Attention-KV cache bytes one slot costs under ``scfg``'s layout,
+    measured from the engine's actual device buffers (block tables and
+    int8 scale planes included for the paged pool)."""
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    names = _KV_LEAVES[scfg.paged]
+    total = sum(int(eng.caches[n].nbytes) for n in names
+                if n in eng.caches)
+    return total // scfg.num_slots
+
+
+def int8_divergence_check(params, cfg, reqs, num_slots, prefill_chunk):
+    """Bounded-divergence eval for the int8 KV pool: greedy tokens of the
+    int8-paged engine vs the fp32-paged engine on the same requests.
+    Returns (first_token_match_rate, mean_prefix_agreement)."""
+    greedy = [dataclasses.replace(r, temperature=0.0) for r in reqs]
+    max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
+                  for r in greedy)
+    scfg = SchedulerConfig(num_slots=num_slots, max_len=max_len,
+                           prefill_chunk=prefill_chunk, paged=True)
+    fp = ServeEngine(params, cfg, AnalogConfig(mode="off"), scfg).run(
+        list(greedy))
+    q8 = ServeEngine(params, cfg, AnalogConfig(mode="off", kv_bits=8),
+                     scfg).run(list(greedy))
+    first, prefix = [], []
+    for r in greedy:
+        a, b = np.asarray(fp[r.uid]), np.asarray(q8[r.uid])
+        n = min(len(a), len(b))
+        agree = np.flatnonzero(a[:n] != b[:n])
+        lcp = int(agree[0]) if len(agree) else n
+        first.append(lcp >= 1)
+        prefix.append(lcp / n)
+    return float(np.mean(first)), float(np.mean(prefix))
 
 
 def parity_check(params, cfg, acfg, num_slots, prefill_chunk) -> bool:
@@ -154,14 +207,31 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
     acfg = AnalogConfig(mode="off")
     reqs = make_workload(num_requests, max_prompt, max_new)
 
-    # untimed warm-up pass compiles every executable both paths use
+    # untimed warm-up pass compiles every executable all three paths use
     run_static(params, cfg, acfg, reqs, num_slots)
     run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk)
+    run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
+                   paged=True)
 
     s_wall, s_lats, s_tok = run_static(params, cfg, acfg, reqs, num_slots)
     c_wall, c_lats, c_tok, steps = run_continuous(
         params, cfg, acfg, reqs, num_slots, prefill_chunk)
+    p_wall, p_lats, p_tok, p_steps = run_continuous(
+        params, cfg, acfg, reqs, num_slots, prefill_chunk, paged=True)
     parity = parity_check(params, cfg, acfg, num_slots, prefill_chunk)
+
+    # cache-bytes accounting + int8 bounded-divergence eval
+    max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
+                  for r in reqs)
+    geo = dict(num_slots=num_slots, max_len=max_len,
+               prefill_chunk=prefill_chunk)
+    fp32_bytes = kv_bytes_per_slot(params, cfg, acfg,
+                                   SchedulerConfig(**geo))
+    int8_bytes = kv_bytes_per_slot(params, cfg,
+                                   AnalogConfig(mode="off", kv_bits=8),
+                                   SchedulerConfig(paged=True, **geo))
+    first_match, prefix_agree = int8_divergence_check(
+        params, cfg, reqs[:6], num_slots, prefill_chunk)
 
     result = {
         "workload": {"num_requests": num_requests, "max_prompt": max_prompt,
@@ -171,8 +241,21 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
         "static": summarize(s_wall, s_lats, s_tok),
         "continuous": {**summarize(c_wall, c_lats, c_tok),
                        "decode_steps": steps},
+        "paged": {**summarize(p_wall, p_lats, p_tok),
+                  "decode_steps": p_steps},
         "speedup_tokens_per_s": round((c_tok / c_wall) / (s_tok / s_wall), 3),
+        "paged_speedup_vs_static": round(
+            (p_tok / p_wall) / (s_tok / s_wall), 3),
         "admission_parity": parity,
+        "kv_cache": {
+            "contiguous_fp32_bytes_per_slot": fp32_bytes,
+            "paged_int8_bytes_per_slot": int8_bytes,
+            "bytes_reduction": round(fp32_bytes / int8_bytes, 2),
+            "int8_first_token_match": first_match,
+            "int8_prefix_agreement": round(prefix_agree, 3),
+            "int8_divergence_ok": bool(first_match >= 0.99
+                                       and prefix_agree >= 0.5),
+        },
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -181,10 +264,16 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
     common.bench_row("serve.continuous", c_wall * 1e6,
                      f"tok_s={result['continuous']['tokens_per_s']} "
                      f"steps={steps}")
+    common.bench_row("serve.paged", p_wall * 1e6,
+                     f"tok_s={result['paged']['tokens_per_s']} "
+                     f"steps={p_steps}")
+    kv = result["kv_cache"]
     common.bench_row(
         "serve.claims", 0.0,
         f"speedup={result['speedup_tokens_per_s']} parity={parity} "
-        f"continuous_wins={result['speedup_tokens_per_s'] > 1.0}")
+        f"continuous_wins={result['speedup_tokens_per_s'] > 1.0} "
+        f"kv_bytes_reduction={kv['bytes_reduction']} "
+        f"int8_ok={kv['int8_divergence_ok']}")
     return result
 
 

@@ -96,6 +96,18 @@ class AnalogConfig:
             from the packed-int4 kernel (two nibbles per byte, dequant in
             VMEM) — the Table 3 digital deployment at int4 weight
             bandwidth; pair with :func:`pack_int4_weights`.
+        kv_bits: Serving-time KV-cache precision for the block-paged slot
+            cache (``SchedulerConfig.paged``): 0 keeps the cache dtype as
+            allocated, 8 stores K/V as int8 with per-token/head scales
+            (``core.quant.kv_quantize``), quartering cache bytes vs fp32 —
+            the same "analog-trained models tolerate low-precision digital
+            inference" byproduct the paper demonstrates for weights (§4.3),
+            applied to the decode memory wall. Eval/serve only.
+        kv_splits: Split-K factor for the paged flash-decode kernel's
+            2-pass reduction: the block loop is partitioned into this many
+            independent partial reductions merged in a second pass — raise
+            above 1 for long contexts where the decode batch alone can't
+            fill the chip (kernel path; the CPU oracle ignores it).
     """
 
     mode: str = "off"                  # off | analog | qat | di8 | rtn
@@ -115,6 +127,8 @@ class AnalogConfig:
     use_pallas: bool = False           # fused kernels (Mosaic on TPU,
                                        # interpret-mode elsewhere)
     int4_serve: bool = False           # rtn serving: packed-int4 weight kernel
+    kv_bits: int = 0                   # paged KV cache: 0 = cache dtype, 8 = int8
+    kv_splits: int = 1                 # paged flash-decode split-K factor
 
     @property
     def is_analog(self) -> bool:

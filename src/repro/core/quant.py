@@ -180,6 +180,36 @@ def rtn_dequantize(w_int: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax
 
 
 # ---------------------------------------------------------------------------
+# KV-cache quantization (paged int8 cache, serving only)
+# ---------------------------------------------------------------------------
+
+def kv_quantize(x: jax.Array, bits: int = 8):
+    """Symmetric per-vector quantization for KV-cache storage.
+
+    ``x`` [..., hd] is one K or V head vector per leading index; the scale
+    is the absmax over the trailing head dim, so each cached token/head pair
+    carries its own scale (the paged pool stores them per block row —
+    "per-block-scaled" in the serving docs). Returns ``(x_int8, scale)``
+    with ``scale`` shaped ``x.shape[:-1]``. Eval/serve only — no STE rules;
+    the paper's byproduct claim (§4.3) is that analog-trained models
+    tolerate this digital low-precision inference unmodified.
+    """
+    q = qmax(bits)
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / q
+    x_int = jnp.clip(jnp.round(xf / scale[..., None]), -q, q).astype(jnp.int8)
+    return x_int, scale
+
+
+def kv_dequantize(x_int: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Invert :func:`kv_quantize`: ``x_int * scale`` with broadcast scales."""
+    return (x_int.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # Input-range state machinery (EMA init phase + decay rule)
 # ---------------------------------------------------------------------------
 

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the compute hot-spots (see EXAMPLE.md convention).
 
 
-- analog_matmul: fused DAC-quant x (noisy-W) MVM + per-column ADC quant
-- int4_matmul:   packed-int4 digital deployment matmul
-- ssd_scan:      chunked Mamba-2 SSD scan (state carried in VMEM scratch)
+- analog_matmul:    fused DAC-quant x (noisy-W) MVM + per-column ADC quant
+- int4_matmul:      packed-int4 digital deployment matmul
+- ssd_scan:         chunked Mamba-2 SSD scan (state carried in VMEM scratch)
+- paged_attention:  paged flash-decode attention over the block-paged KV
+                    pool (online softmax, split-K, int8 pool dequant)
 
 ``dispatch`` is the kernel-dispatch layer ``analog_linear`` routes through
 when ``AnalogConfig.use_pallas`` is set; ``ops`` holds the jit'd public

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.analog_matmul import analog_matmul
 from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.paged_attention import paged_flash_decode
 
 # Default tile sizes (see analog_matmul.py for the VMEM budget math) and the
 # decode-shape M block: single-token serving steps have M = batch ∈ [1, 8],
@@ -190,6 +191,38 @@ def int4_mvm_packed(x_q: jax.Array, w_packed: jax.Array, scale: jax.Array, *,
     y = int4_matmul(x2, w_packed, scale.reshape(-1), bm=bm, bn=bn, bk=bk,
                     interpret=not on_tpu())
     return y.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode attention (serving decode hot path)
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                           tbl: jax.Array, pos: jax.Array, start: jax.Array,
+                           scale: float, *, k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           num_splits: int = 1,
+                           impl: str | None = None) -> jax.Array:
+    """One paged GQA decode step: q [B, H, hd] vs a block-paged KV pool.
+
+    Routing mirrors the MVM ops: on TPU the Pallas flash-decode kernel
+    (``kernels.paged_attention``) compiles to Mosaic; elsewhere the
+    ``lax.scan`` oracle (``ref.paged_decode_ref``) runs — its per-block
+    ``lax.cond`` skips dead blocks at runtime, so active-length scaling
+    holds on CPU too. ``impl`` overrides: ``"kernel"`` forces the Pallas
+    kernel (interpret-mode off-TPU — how the parity suite exercises it),
+    ``"ref"`` forces the oracle. ``num_splits`` > 1 enables the 2-pass
+    split-K reduction for long contexts (kernel path only).
+    """
+    if impl is None:
+        impl = "kernel" if on_tpu() else "ref"
+    if impl == "kernel":
+        return paged_flash_decode(q, kp, vp, tbl, pos, start, scale=scale,
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  num_splits=num_splits,
+                                  interpret=not on_tpu())
+    return ref.paged_decode_ref(q, kp, vp, tbl, pos, start, scale,
+                                k_scale=k_scale, v_scale=v_scale)
 
 
 def int4_mvm(x_q: jax.Array, w_int: jax.Array, scale: jax.Array, *,

@@ -99,6 +99,76 @@ def pack_int4(w_int: jax.Array) -> jax.Array:
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
+def paged_decode_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                     tbl: jax.Array, pos: jax.Array, start: jax.Array,
+                     scale: float, k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None) -> jax.Array:
+    """Oracle for the paged flash-decode attention kernel.
+
+    One single-token GQA attention step per batch row against a block-paged
+    KV pool, with the online-softmax block loop the Pallas kernel uses:
+
+    q        [B, H, hd]       current-token queries (H = KV * group)
+    kp, vp   [P, bs, KV, hd]  physical KV block pool (fp, or int8 + scales)
+    tbl      [B, NB]          per-slot block table (logical → physical)
+    pos      [B]              logical index of the current token (inclusive)
+    start    [B]              first valid logical index (left-pad count)
+    k_scale, v_scale [P, bs, KV]  per-token/head dequant scales (int8 pool)
+
+    Row ``b`` attends logical positions ``start[b] <= j <= pos[b]`` only.
+    The block loop is a ``lax.scan`` whose step body sits behind a
+    ``lax.cond`` on block liveness, so dead blocks (before ``start`` or
+    after ``pos``) are *skipped at runtime*, not just masked — decode cost
+    scales with live tokens, which is the whole point of the paged layout
+    (and what ``benchmarks/attn_bench.py`` measures). Rows are processed
+    with ``lax.map`` (scan, not vmap) to keep the conds real branches.
+    """
+    bsz, nq, hd = q.shape
+    nb = tbl.shape[1]
+    bs, nkv = kp.shape[1], kp.shape[2]
+    group = nq // nkv
+
+    def one_row(args):
+        qb, tb, pb, sb = args                         # [H,hd], [NB], (), ()
+        qg = qb.reshape(nkv, group, hd).astype(jnp.float32)
+        first, last = sb // bs, pb // bs
+
+        def blk_step(carry, j):
+            def compute(c):
+                m, l, acc = c
+                phys = tb[j]
+                k_blk = kp[phys].astype(jnp.float32)  # [bs, KV, hd]
+                v_blk = vp[phys].astype(jnp.float32)
+                if k_scale is not None:
+                    k_blk = k_blk * k_scale[phys][..., None]
+                    v_blk = v_blk * v_scale[phys][..., None]
+                jpos = j * bs + jnp.arange(bs)
+                valid = (jpos >= sb) & (jpos <= pb)   # [bs]
+                logits = jnp.einsum("ngh,snh->ngs", qg,
+                                    k_blk) * scale    # [KV, group, bs]
+                logits = jnp.where(valid[None, None, :], logits, -1e30)
+                m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+                p = jnp.exp(logits - m_new[..., None])
+                p = jnp.where(valid[None, None, :], p, 0.0)
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "ngs,snh->ngh", p, v_blk)
+                return m_new, l_new, acc_new
+
+            live = (j >= first) & (j <= last)
+            return jax.lax.cond(live, compute, lambda c: c, carry), None
+
+        m0 = jnp.full((nkv, group), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((nkv, group), jnp.float32)
+        a0 = jnp.zeros((nkv, group, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(blk_step, (m0, l0, a0), jnp.arange(nb))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(nq, hd)
+
+    out = jax.lax.map(one_row, (q, tbl, pos, start))
+    return out.astype(q.dtype)
+
+
 def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
             c: jax.Array, h0: jax.Array | None = None) -> jax.Array:
     """Naive sequential Mamba-2 SSD recurrence (the slow-but-sure oracle).

@@ -18,9 +18,11 @@ legacy pad-to-max ``generate`` loop for comparison).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -81,6 +83,22 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-dtype", default="bf16",
+                    choices=["bf16", "f32"],
+                    help="KV-cache storage precision (bf16 halves cache "
+                         "bytes; scores/softmax stay fp32)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache: free-list block allocation "
+                         "+ paged flash-decode attention")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per physical KV block (paged mode)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="pool size in blocks (0 = full slot capacity; "
+                         "smaller oversubscribes with admission "
+                         "backpressure)")
+    ap.add_argument("--kv-bits", type=int, default=0, choices=[0, 8],
+                    help="8 = int8 KV pool with per-token/head scales "
+                         "(paged mode; 2-4x fewer cache bytes)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -89,6 +107,13 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     cfg, params, labels = build(cfg, key)
     params, acfg = deploy_model(args, cfg, params, labels, key)
+    cache_dtype = jnp.bfloat16 if args.cache_dtype == "bf16" else jnp.float32
+    if args.kv_bits:
+        acfg = dataclasses.replace(acfg, kv_bits=args.kv_bits)
+        if not args.paged:
+            print("[serve] --kv-bits implies the paged pool: enabling "
+                  "--paged")
+            args.paged = True
 
     if cfg.family in ("audio", "vlm") and args.engine == "continuous":
         # the scheduler does not serve multi-codebook / patch-embed
@@ -98,13 +123,16 @@ def main():
         args.engine = "static"
 
     if args.engine == "static":
+        if args.paged or args.kv_bits:
+            print("[serve] --paged/--kv-bits are continuous-engine "
+                  "options: ignored on the static path")
         prompts = jax.random.randint(key, (args.num_requests, 4), 0,
                                      cfg.vocab_size)
         if cfg.family == "audio":
             prompts = prompts[..., None].repeat(cfg.num_codebooks, -1)
         t0 = time.perf_counter()
         toks = generate(params, cfg, acfg, key, prompts, args.new_tokens,
-                        temperature=0.8, top_k=50)
+                        temperature=0.8, top_k=50, cache_dtype=cache_dtype)
         toks.block_until_ready()
         dt = time.perf_counter() - t0
         total = args.num_requests * args.new_tokens
@@ -118,13 +146,19 @@ def main():
     max_len = max(required_max_len(len(r.prompt), r.max_new, chunk)
                   for r in reqs)
     eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
-        num_slots=args.num_slots, max_len=max_len, prefill_chunk=chunk))
+        num_slots=args.num_slots, max_len=max_len, prefill_chunk=chunk,
+        cache_dtype=cache_dtype, paged=args.paged,
+        kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks))
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
     lats = sorted(eng.finished_at[r.uid] - t0 for r in reqs)
-    print(f"[serve] continuous: {total} tokens across {len(reqs)} "
+    # report what the engine actually runs (SSM stacks have no KV to page)
+    mode = ("paged" + ("-int8" if acfg.kv_bits == 8 else "")
+            if eng.pool is not None else "contiguous")
+    print(f"[serve] continuous ({mode} kv, {args.cache_dtype}): {total} "
+          f"tokens across {len(reqs)} "
           f"mixed-length requests in {dt:.2f}s ({total / dt:.1f} tok/s, "
           f"{eng.decode_steps} decode steps, "
           f"p50 latency {lats[len(lats) // 2] * 1e3:.0f}ms); "

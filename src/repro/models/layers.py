@@ -24,9 +24,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.core.analog import (AnalogConfig, AnalogCtx, analog_linear,
                                init_linear, linear_labels)
 from repro.distributed.sharding import shard_hint
+from repro.kernels import dispatch
 
 # ---------------------------------------------------------------------------
 # norms (digital)
@@ -156,22 +158,31 @@ def _chunked_causal_attention(q, k, v, scale, q_chunk=512, kv_chunk=1024):
     def q_block(qi, q_blk):
         # online softmax over kv chunks for one q chunk
         def kv_step(carry, inp):
-            m, l, acc = carry
             kj, (k_blk, v_blk) = inp
-            logits = jnp.einsum("bsngh,btnh->bnsgt", q_blk, k_blk) * scale
-            q_pos = qi * q_chunk + jnp.arange(q_chunk)
-            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
-            causal = q_pos[:, None] >= k_pos[None, :]
-            valid = (k_pos < t)[None, :]
-            logits = jnp.where((causal & valid)[None, None, :, None, :],
-                               logits, -1e30)
-            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
-            p = jnp.exp(logits - m_new[..., None])
-            corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
-            acc_new = acc * corr[..., None] + jnp.einsum(
-                "bnsgt,btnh->bnsgh", p, v_blk)
-            return (m_new, l_new, acc_new), None
+
+            def compute(c):
+                m, l, acc = c
+                logits = jnp.einsum("bsngh,btnh->bnsgt", q_blk, k_blk) * scale
+                q_pos = qi * q_chunk + jnp.arange(q_chunk)
+                k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+                causal = q_pos[:, None] >= k_pos[None, :]
+                valid = (k_pos < t)[None, :]
+                logits = jnp.where((causal & valid)[None, None, :, None, :],
+                                   logits, -1e30)
+                m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+                p = jnp.exp(logits - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bnsgt,btnh->bnsgh", p, v_blk)
+                return m_new, l_new, acc_new
+
+            # Fully-masked future chunks (first kv position past this q
+            # chunk's last position) are skipped at runtime: lax.cond is a
+            # real branch under scan, so causal prefill does ~half the
+            # chunk matmuls the full sweep did.
+            live = kj * kv_chunk <= qi * q_chunk + q_chunk - 1
+            return jax.lax.cond(live, compute, lambda c: c, carry), None
 
         m0 = jnp.full((b, nkv, q_chunk, group), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((b, nkv, q_chunk, group), jnp.float32)
@@ -205,6 +216,17 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
       left-pad rows (``j < start``) and unwritten rows are never attended.
       All index math is static-shape (gather/scatter), keeping the decode
       scan jittable with requests at heterogeneous positions.
+    * paged slot mode (``"kp"`` present): the block-paged pool layout —
+      ``{"kp", "vp": [P, bs, KV, hd], "tbl": [B, NB], "pos", "start": [B]}``
+      (+ ``"ks"``/``"vs"`` [P, bs, KV] scales when the pool is int8).
+      Logical cache index ``j`` lives at physical block ``tbl[b, j//bs]``,
+      offset ``j % bs``; the scheduler's free-list allocator
+      (``serve.kv_pool``) hands each slot exactly the blocks its request
+      needs. Writes scatter into the pool; the decode read routes through
+      the paged flash-decode op (``kernels.dispatch``), which only visits
+      each row's live blocks — decode cost and bytes scale with actual
+      fill, not ``max_len``. Chunked prefill gathers the slot's logical
+      view (one small gather per chunk) and reuses the dense mask path.
     """
     hd = cfg.head_dim
     if "qkv" in p:
@@ -226,7 +248,10 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     v = shard_hint(v, "batch", "seq", "heads", None)
     scale = cfg.head_dim ** -0.5
 
-    if cache is not None and jnp.ndim(cache["pos"]) == 1:   # slot mode
+    if cache is not None and "kp" in cache:          # paged slot mode
+        out, new_cache = _paged_slot_attention(cache, q, k, v, x, scale,
+                                               acfg.kv_splits)
+    elif cache is not None and jnp.ndim(cache["pos"]) == 1:   # slot mode
         pos, start = cache["pos"], cache["start"]
         bsz, s = x.shape[0], x.shape[1]
         t = cache["k"].shape[1]
@@ -247,7 +272,8 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
         v_buf = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
         t = k_buf.shape[1]
-        mask = (jnp.arange(t)[None, :] <= pos)[None].repeat(x.shape[0], 0)
+        mask = jnp.broadcast_to((jnp.arange(t) <= pos)[None, None, :],
+                                (x.shape[0], 1, t))
         out = _gqa_scores_softmax_v(q, k_buf, v_buf, mask, scale)
         new_cache = {"k": k_buf, "v": v_buf, "pos": pos + 1}
     else:                                            # train / prefill
@@ -276,13 +302,97 @@ def _fill_cache(buf, new):
         buf, new.astype(buf.dtype), (0, 0, 0, 0))
 
 
+def _paged_slot_attention(cache, q, k, v, x, scale, kv_splits=1):
+    """Paged-pool branch of :func:`attention`: scatter-write the current
+    chunk into the block pool, then score against the live range only.
+
+    Decode (S=1) routes through the paged flash-decode op; chunked prefill
+    gathers the slot's logical view and reuses the dense masked path (the
+    gathered values are bit-identical to the contiguous layout's buffer,
+    so prefill stays bitwise on the non-quantized pool)."""
+    pos, start, tbl = cache["pos"], cache["start"], cache["tbl"]
+    bsz, s = x.shape[0], x.shape[1]
+    bs = cache["kp"].shape[1]
+    quantized = "ks" in cache
+    idx = pos[:, None] + jnp.arange(s)[None, :]              # [B, S] logical
+    blk = jnp.take_along_axis(tbl, idx // bs, axis=1)        # [B, S] physical
+    off = idx % bs
+    new_cache = dict(cache)
+    if quantized:
+        kq, ks = quant.kv_quantize(k, 8)
+        vq, vs = quant.kv_quantize(v, 8)
+        new_cache["kp"] = cache["kp"].at[blk, off].set(kq, mode="drop")
+        new_cache["vp"] = cache["vp"].at[blk, off].set(vq, mode="drop")
+        new_cache["ks"] = cache["ks"].at[blk, off].set(
+            ks.astype(cache["ks"].dtype), mode="drop")
+        new_cache["vs"] = cache["vs"].at[blk, off].set(
+            vs.astype(cache["vs"].dtype), mode="drop")
+    else:
+        new_cache["kp"] = cache["kp"].at[blk, off].set(
+            k.astype(cache["kp"].dtype), mode="drop")
+        new_cache["vp"] = cache["vp"].at[blk, off].set(
+            v.astype(cache["vp"].dtype), mode="drop")
+    new_cache["pos"] = pos + s
+
+    if s == 1:                                    # decode: flash over blocks
+        out = dispatch.paged_decode_attention(
+            q[:, 0], new_cache["kp"], new_cache["vp"], tbl, pos, start,
+            scale, k_scale=new_cache.get("ks"),
+            v_scale=new_cache.get("vs"), num_splits=kv_splits)
+        return out[:, None].astype(q.dtype), new_cache
+
+    # chunked prefill: gather the logical view (small: one slot's blocks)
+    def logical(name, sc):
+        g = new_cache[name][tbl]                  # [B, NB, bs, KV, hd]
+        g = g.reshape(bsz, -1, *g.shape[3:])
+        if quantized:
+            scl = new_cache[sc][tbl].reshape(bsz, -1, g.shape[2])
+            g = quant.kv_dequantize(g, scl)
+        return g
+
+    k_buf, v_buf = logical("kp", "ks"), logical("vp", "vs")
+    t = k_buf.shape[1]
+    j = jnp.arange(t)[None, None, :]
+    mask = (j >= start[:, None, None]) & (j <= idx[:, :, None])
+    return _gqa_scores_softmax_v(q, k_buf, v_buf, mask, scale), new_cache
+
+
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32,
-               per_slot: bool = False) -> dict:
+               per_slot: bool = False, paged: bool = False,
+               kv_block_size: int = 16, kv_blocks: int | None = None,
+               kv_bits: int = 0) -> dict:
     """Attention KV cache. ``per_slot=True`` selects the continuous-batching
     slot layout: per-row write cursors (``pos`` [B]) and first-valid-index
     markers (``start`` [B], the number of left-pad rows) instead of one
-    shared scalar position."""
+    shared scalar position.
+
+    ``paged=True`` (implies per-slot) replaces the per-slot ``max_len``
+    buffers with a block-paged pool: ``kv_blocks`` usable physical blocks
+    of ``kv_block_size`` tokens (default: enough for every slot at
+    ``max_len`` — size it smaller to oversubscribe; the scheduler's
+    free-list backpressures admission) plus one reserved write-sink block
+    at physical index 0 (``serve.kv_pool.SINK_BLOCK`` — where retired
+    slots' dead writes land) and a per-slot block table. ``kv_bits=8``
+    stores the pool as int8 with per-token/head scales
+    (``core.quant.kv_quantize``)."""
     hd = cfg.head_dim
+    if paged:
+        nb = -(-max_len // kv_block_size)
+        npool = 1 + (kv_blocks if kv_blocks else batch * nb)
+        kv_dtype = jnp.int8 if kv_bits == 8 else dtype
+        c = {"kp": jnp.zeros((npool, kv_block_size, cfg.num_kv_heads, hd),
+                             kv_dtype),
+             "vp": jnp.zeros((npool, kv_block_size, cfg.num_kv_heads, hd),
+                             kv_dtype),
+             "tbl": jnp.zeros((batch, nb), jnp.int32),
+             "pos": jnp.zeros((batch,), jnp.int32),
+             "start": jnp.zeros((batch,), jnp.int32)}
+        if kv_bits == 8:
+            c["ks"] = jnp.zeros((npool, kv_block_size, cfg.num_kv_heads),
+                                jnp.float32)
+            c["vs"] = jnp.zeros((npool, kv_block_size, cfg.num_kv_heads),
+                                jnp.float32)
+        return c
     c = {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
          "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype)}
     if per_slot:

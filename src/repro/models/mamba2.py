@@ -123,6 +123,10 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     bg = b.reshape(bsz, s, g, n)
     cg = c.reshape(bsz, s, g, n)
 
+    # the conv tail is stored at the cache's dtype (bf16 caches hand the
+    # model a bf16 state and must get one back — scatter requires it)
+    conv_cast = (None if cache is None
+                 else new_conv.astype(cache["conv"].dtype))
     if cache is not None and s == 1:                              # decode
         rep = heads // g
         to_bh = lambda t: t[:, 0].repeat(rep, axis=1).reshape(bsz * heads, -1)
@@ -132,12 +136,13 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
             dt[:, 0].reshape(bsz * heads), jnp.tile(a, bsz),
             to_bh(bg), to_bh(cg))
         y = y_t.reshape(bsz, 1, heads, pdim)
-        new_cache = {"conv": new_conv, "ssm": h.reshape(bsz, heads, n, pdim)}
+        new_cache = {"conv": conv_cast,
+                     "ssm": h.reshape(bsz, heads, n, pdim)}
     else:
         h0 = (cache["ssm"].reshape(bsz * heads, n, pdim)
               if cache is not None else None)
         y, h_final = _ssd_with_state(xh, dt, a, bg, cg, h0)
-        new_cache = ({"conv": new_conv,
+        new_cache = ({"conv": conv_cast,
                       "ssm": h_final.reshape(bsz, heads, n, pdim)}
                      if cache is not None else None)
 

@@ -451,7 +451,9 @@ def forward(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx, inputs,
 # ---------------------------------------------------------------------------
 
 def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32,
-                per_slot: bool = False):
+                per_slot: bool = False, paged: bool = False,
+                kv_block_size: int = 16, kv_blocks: int | None = None,
+                kv_bits: int = 0):
     """Stacked per-layer decoding caches matching ``apply_blocks`` scan xs.
 
     ``per_slot=True`` builds the continuous-batching slot layout: the
@@ -459,41 +461,64 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32,
     instead of one shared scalar position, and every leaf keeps the slot
     dimension at a fixed, known axis so one request's state can be
     gathered/scattered by the scheduler (see :func:`cache_slot_spec`).
+
+    ``paged=True`` swaps the attention leaves for the block-paged pool
+    layout of ``layers.init_cache``: per-layer pools of ``kv_blocks``
+    physical ``kv_block_size``-token blocks (int8 + scales when
+    ``kv_bits=8``) and a per-slot block table; every layer shares the same
+    logical→physical mapping, so one host-side allocation covers the
+    stack. SSM leaves are untouched (their state is O(1) per slot already).
     """
     fam = cfg.family
+    attn_kw = dict(paged=paged, kv_block_size=kv_block_size,
+                   kv_blocks=kv_blocks, kv_bits=kv_bits)
 
     def stack(tree, n):
         return jax.tree.map(lambda t: jnp.broadcast_to(t, (n,) + t.shape), tree)
 
     if fam in ("dense", "vlm", "audio", "moe"):
-        return stack(L.init_cache(cfg, batch, max_len, dtype, per_slot),
-                     cfg.num_layers)
+        return stack(L.init_cache(cfg, batch, max_len, dtype, per_slot,
+                                  **attn_kw), cfg.num_layers)
     if fam == "ssm":
         return stack(M.init_mamba_cache(cfg, batch, dtype), cfg.num_layers)
     if fam == "hybrid":
         n_sb = cfg.num_layers // cfg.attn_every
-        sb = {"attn": L.init_cache(cfg, batch, max_len, dtype, per_slot),
+        sb = {"attn": L.init_cache(cfg, batch, max_len, dtype, per_slot,
+                                   **attn_kw),
               "mamba": stack(M.init_mamba_cache(cfg, batch, dtype),
                              cfg.attn_every - 1)}
         return stack(sb, n_sb)
     raise ValueError(fam)
 
 
-def cache_slot_spec(cfg):
+def cache_slot_spec(cfg, paged: bool = False, kv_bits: int = 0):
     """Companion trees for the slot cache: ``(axes, kinds)``.
 
     ``axes`` mirrors the ``init_caches(per_slot=True)`` structure with the
-    integer axis of the slot (request) dimension at each leaf; ``kinds``
-    labels each leaf ``"start"`` (per-slot first-valid index, set to the
-    left-pad count at admission) or ``"state"`` (zeroed at admission).
-    The scheduler uses these to gather one slot's cache row, run a prefill
-    chunk on it, and scatter it back — without hard-coding the pytree
-    layout of any model family.
+    integer axis of the slot (request) dimension at each leaf — ``-1``
+    marks pool-wide leaves that have *no* slot dimension and are passed
+    through whole (the paged KV pools). ``kinds`` labels each leaf:
+    ``"start"`` (per-slot first-valid index, set to the left-pad count at
+    admission), ``"state"`` (zeroed at admission), ``"table"`` (the slot's
+    block-table row, written from the free-list allocation at admission)
+    or ``"pool"`` (shared physical storage — left untouched at admission;
+    stale blocks are never attended because the ``start <= j <= pos`` mask
+    bounds every read). The scheduler uses these to gather one slot's
+    cache row, run a prefill chunk on it, and scatter it back — without
+    hard-coding the pytree layout of any model family.
     """
     fam = cfg.family
-    attn_axes = {"k": 1, "v": 1, "pos": 1, "start": 1}
-    attn_kinds = {"k": "state", "v": "state", "pos": "state",
-                  "start": "start"}
+    if paged:
+        attn_axes = {"kp": -1, "vp": -1, "tbl": 1, "pos": 1, "start": 1}
+        attn_kinds = {"kp": "pool", "vp": "pool", "tbl": "table",
+                      "pos": "state", "start": "start"}
+        if kv_bits == 8:
+            attn_axes.update(ks=-1, vs=-1)
+            attn_kinds.update(ks="pool", vs="pool")
+    else:
+        attn_axes = {"k": 1, "v": 1, "pos": 1, "start": 1}
+        attn_kinds = {"k": "state", "v": "state", "pos": "state",
+                      "start": "start"}
     mamba_axes = {"conv": 1, "ssm": 1}
     mamba_kinds = {"conv": "state", "ssm": "state"}
     if fam in ("dense", "vlm", "audio", "moe"):

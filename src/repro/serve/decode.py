@@ -41,13 +41,17 @@ def digital_int4_config(acfg: AnalogConfig) -> AnalogConfig:
 
 def prefill(params, cfg, acfg: AnalogConfig, tokens: jax.Array,
             max_len: int, extra_inputs: Optional[dict] = None,
-            dtype=jnp.float32):
+            cache_dtype=jnp.float32):
     """Run the prompt through the model, filling a fresh cache.
 
+    ``cache_dtype`` sets the KV-buffer storage precision (the SSM state
+    keeps its own dtypes): fp32 is the bit-exactness default the parity
+    suites rely on; serving entry points pass bf16 (half the cache bytes,
+    the scores/softmax still run in fp32 — see ``launch/serve.py``).
     Returns (last_logits [B, V...], caches, next_pos).
     """
     bsz = tokens.shape[0]
-    caches = T.init_caches(cfg, bsz, max_len, dtype)
+    caches = T.init_caches(cfg, bsz, max_len, cache_dtype)
     ctx = AnalogCtx(key=None, training=False)
     inputs = {"tokens": tokens, **(extra_inputs or {})}
     logits, _, caches = model_apply(params, cfg, acfg, ctx, inputs,
@@ -85,16 +89,17 @@ def serve_step(params, cfg, acfg: AnalogConfig, token: jax.Array,
 def generate(params, cfg, acfg: AnalogConfig, key: jax.Array,
              prompt: jax.Array, num_new: int, *, temperature: float = 1.0,
              top_k: int = 0, top_p: float = 1.0, greedy_first: int = 0,
-             extra_inputs: Optional[dict] = None):
+             extra_inputs: Optional[dict] = None, cache_dtype=jnp.float32):
     """Batched ancestral sampling. Returns tokens [B, num_new(, K)].
 
     ``greedy_first``: number of initial tokens decoded greedily (the RGS/SGS
-    data-generation strategies of paper App. B.1).
+    data-generation strategies of paper App. B.1). ``cache_dtype``: KV
+    storage precision (see :func:`prefill`).
     """
     max_len = prompt.shape[1] + num_new + (
         cfg.vit_tokens if cfg.family == "vlm" else 0)
     last_logits, caches, pos = prefill(params, cfg, acfg, prompt, max_len,
-                                       extra_inputs)
+                                       extra_inputs, cache_dtype=cache_dtype)
 
     def step(carry, i):
         key, logits, caches, pos = carry

@@ -1,0 +1,90 @@
+"""Host-side free-list allocator for the block-paged KV cache.
+
+The paged slot cache (``models.layers.init_cache(paged=True)``) stores KV
+state in a pool of fixed-size physical blocks shared by every slot; this
+module owns the logical→physical bookkeeping on the host:
+
+* **admission** — a request needs ``blocks_for(prompt, budget)`` blocks for
+  its whole lifetime (left-padded prompt + decode budget; allocating the
+  worst case up front keeps every device-side structure static — no
+  mid-decode reallocation, no jit retrace). ``alloc`` pops them off the
+  free list and returns the slot's block-table row.
+* **retirement** — ``release`` returns the blocks the moment the request
+  finishes, so cache memory scales with *live* tokens across the workload,
+  not ``num_slots * max_len`` worst case.
+* **backpressure** — when the pool is undersized relative to slot capacity
+  (the oversubscription that lifts slot count for the same HBM),
+  ``can_alloc`` gates admission: the scheduler leaves the queue head
+  waiting until enough blocks free up (strict FIFO — no small-request
+  overtaking, so no starvation).
+
+Physical block 0 is reserved as the **write sink**: a retired slot's block
+table is reset to all-zeros, so the decode batch's inactive rows (which
+still execute their scatter-writes — the jitted step is static-shape) land
+in the sink instead of corrupting blocks that were freed and re-allocated
+to a newly admitted request. The allocator therefore hands out indices
+``1 .. num_blocks`` and the device pool is sized ``num_blocks + 1``.
+
+Pure host-side Python (deque + dict); the device only ever sees the block
+table rows this hands out.
+"""
+
+from __future__ import annotations
+
+import collections
+
+#: Physical index of the reserved write-sink block (see module docstring).
+SINK_BLOCK = 0
+
+
+class OutOfBlocksError(RuntimeError):
+    """Raised when ``alloc`` is asked for more blocks than are free."""
+
+
+class KVPool:
+    """Free-list allocator over ``num_blocks`` usable physical KV blocks
+    (device pool additionally carries the reserved sink block 0)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        """All blocks start free; allocation order is LIFO (hot blocks)."""
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("num_blocks and block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: collections.deque[int] = collections.deque(
+            range(1, num_blocks + 1))
+        self._owned: dict[int, list[int]] = {}    # owner uid -> blocks
+
+    @property
+    def num_free(self) -> int:
+        """Blocks currently on the free list."""
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        """Blocks currently owned by in-flight requests."""
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, padded_prompt: int, max_new: int) -> int:
+        """Blocks a request holds for its lifetime (worst-case fill)."""
+        return -(-(padded_prompt + max_new) // self.block_size)
+
+    def can_alloc(self, n: int) -> bool:
+        """True when ``n`` blocks are free right now."""
+        return n <= len(self._free)
+
+    def alloc(self, uid: int, n: int) -> list[int]:
+        """Pop ``n`` blocks for request ``uid``; returns physical indices."""
+        if not self.can_alloc(n):
+            raise OutOfBlocksError(
+                f"request {uid}: needs {n} blocks, {len(self._free)} free")
+        if uid in self._owned:
+            raise ValueError(f"request {uid} already holds blocks")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._owned[uid] = blocks
+        return blocks
+
+    def release(self, uid: int) -> None:
+        """Return request ``uid``'s blocks to the free list."""
+        for b in self._owned.pop(uid):
+            self._free.append(b)

@@ -21,6 +21,15 @@ replaces it for serving:
   ``seq_mask`` → ``dt = 0`` rule in ``models.mamba2``), so only two
   executables exist per engine: one ``[1, chunk]`` prefill and one
   ``[num_slots, 1]`` decode.
+* **Block-paged KV cache** (``SchedulerConfig.paged``) — the per-slot
+  ``max_len`` KV buffers become a pool of fixed-size physical blocks
+  (``serve.kv_pool``: free-list alloc at admission, release at
+  retirement, FIFO backpressure when undersized), and the decode read
+  routes through the paged flash-decode attention op
+  (``kernels.dispatch.paged_decode_attention``) so each slot only touches
+  its ``ceil(live/block)`` blocks — decode cost and cache bytes scale
+  with actual fill, not worst case. ``AnalogConfig.kv_bits = 8`` stores
+  the pool as int8 with per-token/head scales (2–4× fewer cache bytes).
 * **Per-request sampling and stop conditions** — temperature / top-k /
   top-p / ``greedy_first`` ride along each request as traced per-row
   arrays (``sampling.sample_logits_batched``), and every request carries
@@ -57,6 +66,7 @@ from repro.core.analog import AnalogConfig, AnalogCtx
 from repro.models import apply as model_apply
 from repro.models import transformer as T
 from repro.serve.decode import serve_step
+from repro.serve.kv_pool import KVPool
 from repro.serve.sampling import sample_logits_batched
 
 
@@ -112,6 +122,15 @@ class SchedulerConfig:
     quantized to powers of two, so per-step host overhead is amortized
     without ever overshooting a request's ``max_new``; admission happens
     at block boundaries).
+
+    ``paged=True`` swaps the per-slot ``max_len`` KV buffers for the
+    block-paged pool (``serve.kv_pool``): ``kv_blocks`` physical blocks of
+    ``kv_block_size`` tokens, allocated per request at admission and
+    released at retirement. ``kv_blocks=0`` sizes the pool for every slot
+    at ``max_len`` (no oversubscription); smaller values trade worst-case
+    headroom for more slots per byte of HBM, with free-list backpressure
+    gating admission. The pool dtype follows ``cache_dtype`` unless
+    ``AnalogConfig.kv_bits == 8`` selects the int8 pool.
     """
 
     num_slots: int = 4
@@ -119,6 +138,9 @@ class SchedulerConfig:
     prefill_chunk: int = 16
     decode_block: int = 8
     cache_dtype: jnp.dtype = jnp.float32
+    paged: bool = False
+    kv_block_size: int = 16
+    kv_blocks: int = 0
 
 
 class _Slot:
@@ -147,39 +169,52 @@ def _donate(*argnums):
 
 
 def _gather_slot(caches, slot, axes):
-    """Slice one request slot out of every cache leaf."""
+    """Slice one request slot out of every cache leaf (``-1``: pool-wide
+    leaf with no slot dimension — passed through whole)."""
     return jax.tree.map(
-        lambda c, ax: jax.lax.dynamic_slice_in_dim(c, slot, 1, ax),
+        lambda c, ax: c if ax < 0
+        else jax.lax.dynamic_slice_in_dim(c, slot, 1, ax),
         caches, axes)
 
 
 def _scatter_slot(caches, sub, slot, axes):
-    """Write a gathered slot subtree back into the full caches."""
+    """Write a gathered slot subtree back into the full caches (pool-wide
+    leaves replace the old leaf — the prefill updated them in place)."""
     return jax.tree.map(
-        lambda c, s, ax: jax.lax.dynamic_update_slice_in_dim(c, s, slot, ax),
+        lambda c, s, ax: s if ax < 0
+        else jax.lax.dynamic_update_slice_in_dim(c, s, slot, ax),
         caches, sub, axes)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",),
+@functools.partial(jax.jit, static_argnames=("cfg", "paged", "kv_bits"),
                    donate_argnums=_donate(0))
-def _admit_jit(caches, slot, start, *, cfg):
-    """Zero slot ``slot``'s cache rows; set its ``start`` markers."""
-    axes, kinds = T.cache_slot_spec(cfg)
+def _admit_jit(caches, slot, start, tbl_row, *, cfg, paged=False, kv_bits=0):
+    """Reset slot ``slot``: zero its state rows, set its ``start`` markers,
+    and (paged) write its block-table row from the free-list allocation.
+    Pool leaves are untouched — stale blocks are masked, never attended."""
+    axes, kinds = T.cache_slot_spec(cfg, paged=paged, kv_bits=kv_bits)
 
     def upd(c, ax, kind):
+        if kind == "pool":
+            return c
         shape = c.shape[:ax] + c.shape[ax + 1:]
-        val = (jnp.full(shape, start, c.dtype) if kind == "start"
-               else jnp.zeros(shape, c.dtype))
+        if kind == "table":
+            val = jnp.broadcast_to(tbl_row, shape).astype(c.dtype)
+        elif kind == "start":
+            val = jnp.full(shape, start, c.dtype)
+        else:
+            val = jnp.zeros(shape, c.dtype)
         return jax.lax.dynamic_update_index_in_dim(c, val, slot, ax)
 
     return jax.tree.map(upd, caches, axes, kinds)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "acfg"),
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "paged"),
                    donate_argnums=_donate(1))
-def _prefill_jit(params, caches, slot, tokens, mask, off, *, cfg, acfg):
+def _prefill_jit(params, caches, slot, tokens, mask, off, *, cfg, acfg,
+                 paged=False):
     """One left-padded prefill chunk against slot ``slot``'s cache row."""
-    axes, _ = T.cache_slot_spec(cfg)
+    axes, _ = T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits)
     sub = _gather_slot(caches, slot, axes)
     ctx = AnalogCtx(key=None, training=False)
     logits, _, sub = model_apply(params, cfg, acfg, ctx, {"tokens": tokens},
@@ -254,9 +289,23 @@ class ServeEngine:
         self.params = params
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
         b = scfg.num_slots
+        # paged mode: block-paged pool + host-side free-list allocator
+        # (attention-free SSM stacks have no KV to page — pool stays None
+        # and the cache layout is identical either way)
+        self.pool: Optional[KVPool] = None
+        paged = scfg.paged and cfg.family != "ssm"
+        if paged:
+            nb_slot = -(-scfg.max_len // scfg.kv_block_size)
+            n_pool = scfg.kv_blocks or b * nb_slot
+            self.pool = KVPool(n_pool, scfg.kv_block_size)
         self.caches = T.init_caches(cfg, b, scfg.max_len, scfg.cache_dtype,
-                                    per_slot=True)
-        T.cache_slot_spec(cfg)         # fail fast on unsupported families
+                                    per_slot=True, paged=paged,
+                                    kv_block_size=scfg.kv_block_size,
+                                    kv_blocks=scfg.kv_blocks or None,
+                                    kv_bits=acfg.kv_bits if paged else 0)
+        self._paged = paged
+        # fail fast on unsupported families
+        T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Optional[_Slot]] = [None] * b
         self.results: dict[int, np.ndarray] = {}
@@ -286,15 +335,39 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.uid}: padded prompt + max_new needs "
                 f"max_len >= {need}, engine has {self.scfg.max_len}")
+        if self.pool is not None:
+            nblk = self._blocks_needed(req)
+            if nblk > self.pool.num_blocks:
+                # backpressure can only wait for blocks that exist: a
+                # request larger than the whole pool would stall the FIFO
+                # head forever
+                raise ValueError(
+                    f"request {req.uid}: needs {nblk} KV blocks, pool has "
+                    f"{self.pool.num_blocks} total")
         self.queue.append(req)
 
     def step(self) -> None:
-        """One engine iteration: admit into free slots, then decode once."""
+        """One engine iteration: admit into free slots, then decode once.
+
+        Paged mode adds free-list backpressure: the queue head is admitted
+        only when the pool can cover its worst-case block count. Admission
+        stays strict FIFO — a blocked head is *not* overtaken by smaller
+        requests behind it, so no request can starve.
+        """
         for b in range(self.scfg.num_slots):
             if self.slots[b] is None and self.queue:
+                if self.pool is not None and not self.pool.can_alloc(
+                        self._blocks_needed(self.queue[0])):
+                    break                      # out of blocks: head waits
                 self._admit_request(self.queue.popleft(), b)
         if any(s is not None for s in self.slots):
             self._decode_step()
+
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case pool blocks a request holds (padded prompt + budget)."""
+        return self.pool.blocks_for(
+            padded_prompt_len(len(req.prompt), self.scfg.prefill_chunk),
+            req.max_new)
 
     def run(self, requests: Sequence[Request] = ()) -> dict[int, np.ndarray]:
         """Drive until every queued/submitted request completes."""
@@ -308,6 +381,11 @@ class ServeEngine:
     def num_active(self) -> int:
         """Slots currently decoding a request."""
         return sum(s is not None for s in self.slots)
+
+    @property
+    def caches_tbl_width(self) -> int:
+        """Block-table row width (logical blocks per slot) in paged mode."""
+        return -(-self.scfg.max_len // self.scfg.kv_block_size)
 
     # ------------------------------------------------------------------
     # internals
@@ -324,15 +402,24 @@ class ServeEngine:
         mask = np.zeros(padded, np.float32)
         mask[npad:] = 1.0
 
+        tbl_row = None
+        if self.pool is not None:
+            blocks = self.pool.alloc(req.uid, self._blocks_needed(req))
+            nb_slot = self.caches_tbl_width
+            row = np.zeros(nb_slot, np.int32)
+            row[:len(blocks)] = blocks
+            tbl_row = jnp.asarray(row)
         self.caches = _admit_jit(self.caches, jnp.int32(b), jnp.int32(npad),
-                                 cfg=self.cfg)
+                                 tbl_row, cfg=self.cfg, paged=self._paged,
+                                 kv_bits=self.acfg.kv_bits)
         last = None
         for j in range(padded // c):
             last, self.caches = _prefill_jit(
                 self.params, self.caches, jnp.int32(b),
                 jnp.asarray(toks[None, j * c:(j + 1) * c]),
                 jnp.asarray(mask[None, j * c:(j + 1) * c]),
-                jnp.int32(j * c - npad), cfg=self.cfg, acfg=self.acfg)
+                jnp.int32(j * c - npad), cfg=self.cfg, acfg=self.acfg,
+                paged=self._paged)
 
         self._pos[b], self._start[b] = padded, npad
         self._temp[b], self._topp[b] = req.temperature, req.top_p
@@ -388,3 +475,15 @@ class ServeEngine:
             self.results[slot.req.uid] = np.array(slot.out, np.int32)
             self.finished_at[slot.req.uid] = time.perf_counter()
             self.slots[b] = None
+            if self.pool is not None:
+                # Blocks go back to the free list, and the slot's block
+                # table is pointed at the reserved sink block: the retired
+                # row keeps executing its static-shape scatter-writes in
+                # subsequent decode blocks, and those must not land in
+                # blocks the free list may hand to the next admission.
+                self.pool.release(slot.req.uid)
+                self.caches = _admit_jit(
+                    self.caches, jnp.int32(b), jnp.int32(0),
+                    jnp.zeros(self.caches_tbl_width, jnp.int32),
+                    cfg=self.cfg, paged=self._paged,
+                    kv_bits=self.acfg.kv_bits)

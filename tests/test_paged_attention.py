@@ -1,0 +1,162 @@
+"""Paged flash-decode attention: kernel/oracle/dense differential suite.
+
+Three-way parity at the decode seam: the Pallas flash-decode kernel
+(interpret-mode on CPU) vs the ``lax.scan`` oracle
+(``kernels.ref.paged_decode_ref``) vs a dense full-buffer softmax over the
+gathered logical view — across fill ratios, GQA group sizes, split-K
+factors, and the int8-quantized pool. Plus the KV quantization helpers and
+the host-side free-list allocator.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels import dispatch, ref
+from repro.kernels.paged_attention import paged_flash_decode
+from repro.serve.kv_pool import SINK_BLOCK, KVPool, OutOfBlocksError
+
+
+def _setup(seed, bsz, nq, nkv, hd, bs, nb, max_pos=None):
+    """Random pool + block tables + ragged live ranges for ``bsz`` rows."""
+    rng = np.random.default_rng(seed)
+    npool = bsz * nb + 1
+    q = jnp.asarray(rng.normal(size=(bsz, nq, hd)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(npool, bs, nkv, hd)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(npool, bs, nkv, hd)).astype(np.float32))
+    # every row gets a disjoint shuffled set of physical blocks (sink at 0)
+    tbl = jnp.asarray(
+        (1 + rng.permutation(bsz * nb)).reshape(bsz, nb).astype(np.int32))
+    hi = max_pos if max_pos is not None else nb * bs - 1
+    pos = jnp.asarray(rng.integers(0, hi + 1, bsz).astype(np.int32))
+    start = jnp.asarray((np.asarray(pos) * rng.random(bsz) * 0.7)
+                        .astype(np.int32))
+    return q, kp, vp, tbl, pos, start
+
+
+def _dense_reference(q, kp, vp, tbl, pos, start, scale):
+    """Full-buffer softmax over the gathered logical view (numpy)."""
+    bsz, nq, hd = q.shape
+    bs, nkv = kp.shape[1], kp.shape[2]
+    out = np.zeros((bsz, nq, hd), np.float32)
+    for b in range(bsz):
+        kk = np.asarray(kp)[np.asarray(tbl)[b]].reshape(-1, nkv, hd)
+        vv = np.asarray(vp)[np.asarray(tbl)[b]].reshape(-1, nkv, hd)
+        j = np.arange(kk.shape[0])
+        live = (j >= int(start[b])) & (j <= int(pos[b]))
+        qg = np.asarray(q)[b].reshape(nkv, nq // nkv, hd)
+        lo = np.einsum("ngh,tnh->ngt", qg, kk) * scale
+        lo[:, :, ~live] = -1e30
+        p = np.exp(lo - lo.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        out[b] = np.einsum("ngt,tnh->ngh", p, vv).reshape(nq, hd)
+    return out
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, H, KV, hd, block, num_blocks)
+    (1, 4, 4, 8, 4, 3),        # MHA, single row
+    (3, 8, 2, 16, 4, 6),       # GQA group 4
+    (5, 6, 1, 32, 8, 5),       # MQA, wider head
+    (2, 8, 8, 16, 16, 2),      # big blocks, few of them
+])
+def test_ref_matches_dense_full_buffer(shape):
+    """The online-softmax block oracle must reproduce the dense softmax
+    over the gathered logical view at every ragged (start, pos)."""
+    bsz, nq, nkv, hd, bs, nb = shape
+    q, kp, vp, tbl, pos, start = _setup(0, bsz, nq, nkv, hd, bs, nb)
+    scale = hd ** -0.5
+    got = ref.paged_decode_ref(q, kp, vp, tbl, pos, start, scale)
+    want = _dense_reference(q, kp, vp, tbl, pos, start, scale)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+@pytest.mark.parametrize("shape", [
+    (3, 8, 2, 16, 4, 6),
+    (2, 4, 4, 8, 4, 8),
+])
+def test_kernel_matches_ref(shape, num_splits):
+    """Pallas kernel (interpret) ≡ scan oracle, incl. the 2-pass split-K
+    reduction at several split factors."""
+    bsz, nq, nkv, hd, bs, nb = shape
+    q, kp, vp, tbl, pos, start = _setup(1, bsz, nq, nkv, hd, bs, nb)
+    scale = hd ** -0.5
+    want = ref.paged_decode_ref(q, kp, vp, tbl, pos, start, scale)
+    got = paged_flash_decode(q, kp, vp, tbl, pos, start, scale=scale,
+                             num_splits=num_splits, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_kernel_matches_ref_int8():
+    """Quantized-pool parity: kernel and oracle dequantize identically, and
+    the int8 result stays within quantization distance of the fp path."""
+    bsz, nq, nkv, hd, bs, nb = 3, 8, 2, 16, 4, 6
+    q, kp, vp, tbl, pos, start = _setup(2, bsz, nq, nkv, hd, bs, nb)
+    scale = hd ** -0.5
+    kq, ks = quant.kv_quantize(kp, 8)
+    vq, vs = quant.kv_quantize(vp, 8)
+    want = ref.paged_decode_ref(q, kq, vq, tbl, pos, start, scale,
+                                k_scale=ks, v_scale=vs)
+    got = paged_flash_decode(q, kq, vq, tbl, pos, start, scale=scale,
+                             k_scale=ks, v_scale=vs, num_splits=2,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+    fp = ref.paged_decode_ref(q, kp, vp, tbl, pos, start, scale)
+    assert float(jnp.max(jnp.abs(want - fp))) < 0.1   # bounded divergence
+
+
+def test_dispatch_routing():
+    """impl overrides force either implementation; auto picks the oracle
+    off-TPU. Results agree regardless of route."""
+    q, kp, vp, tbl, pos, start = _setup(3, 2, 4, 2, 8, 4, 3)
+    scale = 8 ** -0.5
+    auto = dispatch.paged_decode_attention(q, kp, vp, tbl, pos, start, scale)
+    forced_ref = dispatch.paged_decode_attention(
+        q, kp, vp, tbl, pos, start, scale, impl="ref")
+    forced_kernel = dispatch.paged_decode_attention(
+        q, kp, vp, tbl, pos, start, scale, impl="kernel")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(forced_ref))
+    np.testing.assert_allclose(np.asarray(forced_kernel), np.asarray(auto),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_kv_quantize_roundtrip():
+    """Per-vector int8 KV quantization: bounded error, exact absmax scale."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(7, 3, 16)).astype(np.float32)) * 4.0
+    xq, scale = quant.kv_quantize(x, 8)
+    assert xq.dtype == jnp.int8 and scale.shape == x.shape[:-1]
+    back = quant.kv_dequantize(xq, scale)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    # max error is half a quantization step per vector
+    step = np.asarray(scale)[..., None]
+    assert np.all(err <= 0.5 * step + 1e-6)
+    assert int(jnp.max(jnp.abs(xq))) <= 127
+
+
+def test_kv_pool_alloc_release_churn():
+    """Free-list invariants across admission/retirement churn: LIFO reuse,
+    disjoint ownership, full recovery after release."""
+    pool = KVPool(num_blocks=8, block_size=4)
+    assert pool.num_free == 8 and pool.blocks_for(9, 4) == 4
+    a = pool.alloc(0, 3)
+    b = pool.alloc(1, 4)
+    assert SINK_BLOCK not in a + b          # sink is never handed out
+    assert set(a).isdisjoint(b) and pool.num_free == 1
+    assert not pool.can_alloc(2)
+    with pytest.raises(OutOfBlocksError):
+        pool.alloc(2, 2)
+    with pytest.raises(ValueError):
+        pool.alloc(0, 1)                    # double-alloc same uid
+    pool.release(0)
+    assert pool.num_free == 4 and pool.can_alloc(4)
+    c = pool.alloc(3, 4)
+    assert set(c).isdisjoint(b)
+    pool.release(1)
+    pool.release(3)
+    assert pool.num_free == 8 and pool.num_live == 0

@@ -1,0 +1,125 @@
+"""CI perf-regression guard over the serving benchmark JSON.
+
+Compares a freshly produced ``benchmarks/serve_bench.py`` result against
+the committed baseline and fails (exit 1) when serving throughput
+regressed by more than ``--threshold`` (default 15%):
+
+* ``speedup_tokens_per_s`` — the continuous/static ratio measured inside
+  the *same* fresh run, which normalizes out machine speed and catches
+  scheduling regressions even when the runner class changes
+  (``--threshold``, default 15%);
+* ``continuous.tokens_per_s`` and ``paged.tokens_per_s`` — absolute
+  useful-token throughput. Baseline and fresh run must come from the same
+  workload size (quick-vs-quick or full-vs-full), and the committed
+  baseline was produced on a different machine than a CI runner — so the
+  absolute floor gets its own, looser ``--abs-threshold`` (default 50%):
+  wide enough to absorb runner-class variance, tight enough to catch a
+  real order-of-magnitude regression;
+* hard invariants: ``admission_parity`` must hold, and (when present)
+  ``kv_cache.int8_divergence_ok`` and the >= 2x ``bytes_reduction``;
+* with ``--attn BENCH_attn.json``, the decode-attention microbench
+  invariants too: paged cost must scale with live tokens and beat
+  full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
+  fill — the guard that catches the paged read silently degrading back
+  to O(max_len).
+
+    python tools/check_perf_regression.py BASELINE.json FRESH.json \
+        [--threshold 0.15] [--abs-threshold 0.5] [--attn BENCH_attn.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _get(d: dict, dotted: str):
+    """Fetch a dotted path from nested dicts; None when absent."""
+    for k in dotted.split("."):
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def check(baseline: dict, fresh: dict, threshold: float,
+          abs_threshold: float) -> list[str]:
+    """Return a list of failure strings (empty = pass)."""
+    fails = []
+    metrics = {"speedup_tokens_per_s": threshold,
+               "continuous.tokens_per_s": abs_threshold,
+               "paged.tokens_per_s": abs_threshold}
+    for metric, thr in metrics.items():
+        base, now = _get(baseline, metric), _get(fresh, metric)
+        if base is None or now is None:
+            continue                    # metric not in both files: skip
+        floor = base * (1.0 - thr)
+        status = "OK" if now >= floor else "REGRESSED"
+        print(f"[perf] {metric}: baseline={base} fresh={now} "
+              f"floor={floor:.2f} -> {status}")
+        if now < floor:
+            fails.append(f"{metric} regressed: {now} < {floor:.2f} "
+                         f"(baseline {base}, threshold {thr:.0%})")
+    if not _get(fresh, "admission_parity"):
+        fails.append("admission_parity is false in the fresh run")
+    kv = _get(fresh, "kv_cache")
+    if kv is not None:
+        if not kv.get("int8_divergence_ok"):
+            fails.append("int8 KV bounded-divergence check failed: "
+                         f"{kv}")
+        if kv.get("bytes_reduction", 0) < 2.0:
+            fails.append("paged-int8 cache-bytes reduction < 2x: "
+                         f"{kv.get('bytes_reduction')}")
+    return fails
+
+
+def check_attn(attn: dict, floor: float) -> list[str]:
+    """Gate the decode-attention microbench invariants (see module doc)."""
+    fails = []
+    got = attn.get("speedup_at_low_fill", 0.0)
+    print(f"[perf] attn.speedup_at_low_fill: {got} (floor {floor})")
+    if got < floor:
+        fails.append(f"paged decode-attention speedup at <=25% fill is "
+                     f"{got}, below the {floor}x floor")
+    if not attn.get("scales_with_live_tokens"):
+        fails.append("paged decode-attention cost no longer scales with "
+                     "live tokens (lowest fill not cheaper than full)")
+    return fails
+
+
+def main() -> int:
+    """CLI entry point; exit 1 on any regression or broken invariant."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_serve JSON")
+    ap.add_argument("fresh", help="freshly generated BENCH_serve JSON")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max allowed regression of the machine-normalized "
+                         "speedup ratio")
+    ap.add_argument("--abs-threshold", type=float, default=0.5,
+                    help="max allowed regression of absolute tokens/s "
+                         "(loose: the baseline machine differs from CI)")
+    ap.add_argument("--attn", default=None,
+                    help="fresh BENCH_attn.json to gate the paged "
+                         "decode-attention invariants on")
+    ap.add_argument("--attn-floor", type=float, default=1.5,
+                    help="min paged speedup over full-buffer scoring at "
+                         "<=25%% cache fill")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    fails = check(baseline, fresh, args.threshold, args.abs_threshold)
+    if args.attn:
+        with open(args.attn) as f:
+            fails += check_attn(json.load(f), args.attn_floor)
+    for msg in fails:
+        print(f"[perf] FAIL: {msg}")
+    if not fails:
+        print("[perf] all throughput metrics within threshold")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""Regenerate the KV-cache memory-math table in ``docs/serving.md``.
+
+Computes attention-KV bytes per request slot for real configs under the
+serving cache layouts:
+
+* contiguous fp32 — ``2 * L_attn * max_len * KV * hd * 4`` (the pre-paging
+  slot cache: every slot pays ``max_len`` regardless of fill),
+* contiguous bf16 — same at 2 bytes (the ``cache_dtype`` lever),
+* paged int8 — ``2 * L_attn * ceil(max_len/bs) * bs * KV * (hd + 4)`` plus
+  the block-table row (int8 payload + one fp32 scale per token/head; still
+  worst-case allocation — the free-list returns a *finished* request's
+  blocks, so fleet-level memory additionally scales with live tokens).
+
+    PYTHONPATH=src python tools/kv_memory_table.py [--max-len 4096]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+
+ARCHS = ["phi-3-mini-4k", "llama-3.2-1b", "granite-3-8b", "jamba-v0.1-52b"]
+
+
+def attn_layers(cfg) -> int:
+    """Attention layers in the stack (hybrid: one per super-block)."""
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    return 0 if cfg.is_attention_free else cfg.num_layers
+
+
+def bytes_per_slot(cfg, max_len: int, block: int = 16):
+    """(contiguous fp32, contiguous bf16, paged int8) bytes per slot."""
+    la, kv, hd = attn_layers(cfg), cfg.num_kv_heads, cfg.head_dim
+    fp32 = 2 * la * max_len * kv * hd * 4
+    bf16 = fp32 // 2
+    nb = -(-max_len // block)
+    int8 = 2 * la * nb * block * kv * (hd + 4) + la * nb * 4
+    return fp32, bf16, int8
+
+
+def _fmt(n: int) -> str:
+    """Human MiB with 1 decimal."""
+    return f"{n / 2**20:.1f}"
+
+
+def main() -> None:
+    """Print the markdown table docs/serving.md embeds."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-len", type=int, default=4096)
+    ap.add_argument("--block", type=int, default=16)
+    args = ap.parse_args()
+    print(f"| arch | attn layers | KV x hd | contiguous fp32 (MiB/slot) "
+          f"| bf16 | paged int8 | reduction |")
+    print("|---|---|---|---|---|---|---|")
+    for name in ARCHS:
+        cfg = get_config(name)
+        f32, b16, i8 = bytes_per_slot(cfg, args.max_len, args.block)
+        print(f"| {cfg.name} | {attn_layers(cfg)} "
+              f"| {cfg.num_kv_heads}x{cfg.head_dim} | {_fmt(f32)} "
+              f"| {_fmt(b16)} | {_fmt(i8)} | {f32 / i8:.1f}x |")
+
+
+if __name__ == "__main__":
+    main()
