@@ -1,19 +1,28 @@
-"""Decode-attention microbench: full-buffer scoring vs paged flash-decode.
+"""Paged-attention microbench: decode and prefill reads vs their
+full-buffer baselines.
 
-Times one batched single-token GQA attention read at several cache fill
-ratios, holding the allocated geometry fixed:
+Times batched GQA attention reads at several cache fill ratios, holding
+the allocated geometry fixed:
 
-* **full** — the contiguous slot path (``_gqa_scores_softmax_v`` over the
-  whole ``[B, max_len]`` buffer): cost is O(max_len) regardless of how many
-  tokens are actually live — the pre-paging decode hot path.
-* **paged** — the paged flash-decode op as dispatched on this backend
-  (``kernels.dispatch.paged_decode_attention``: the ``lax.scan`` oracle
-  whose per-block ``lax.cond`` skips dead blocks at runtime on CPU, the
-  Pallas kernel on TPU): cost is O(live tokens).
+* **decode / full** — the contiguous slot path (``_gqa_scores_softmax_v``
+  over the whole ``[B, max_len]`` buffer): cost is O(max_len) regardless
+  of how many tokens are actually live — the pre-paging decode hot path.
+* **decode / paged** — the paged flash-decode op as dispatched on this
+  backend (``kernels.dispatch.paged_decode_attention``: the ``lax.scan``
+  oracle whose per-block ``lax.cond`` skips dead blocks at runtime on CPU,
+  the Pallas kernel on TPU): cost is O(live tokens).
+* **prefill / gather** — the PR 3 chunked-prefill path: gather each row's
+  logical view out of the block pool (``pool[tbl]``), then a dense masked
+  softmax of the ``[B, S]`` chunk against the full ``[B, max_len]`` view —
+  O(max_len) compute *plus* the pool-sized gather per chunk (the
+  paged-prefill tax that made the paged engine slower end-to-end).
+* **prefill / paged** — the paged flash-prefill op
+  (``kernels.dispatch.paged_prefill_attention``): the chunk scores against
+  the pool in place, visiting live blocks only.
 
-Emits ``BENCH_attn.json``: per-fill-ratio step times and the paged speedup
-— the acceptance gate is >= 1.5x at <= 25% fill. CI uploads it as an
-artifact next to ``BENCH_serve.json``.
+Emits ``BENCH_attn.json``: per-fill-ratio step times and the paged
+speedups — the acceptance gates are >= 1.5x decode and >= 1.1x prefill at
+<= 25% fill. CI uploads it as an artifact next to ``BENCH_serve.json``.
 
     PYTHONPATH=src:. python benchmarks/attn_bench.py [--quick] [--out PATH]
 """
@@ -50,6 +59,26 @@ def _paged_step(q, kp, vp, tbl, pos, start, scale):
     return dispatch.paged_decode_attention(q, kp, vp, tbl, pos, start, scale)
 
 
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _gather_prefill_step(q, kp, vp, tbl, pos, start, scale):
+    """PR 3's prefill read: gather the logical view, dense masked softmax."""
+    bsz, s = q.shape[:2]
+    k_buf = kp[tbl].reshape(bsz, -1, *kp.shape[2:])
+    v_buf = vp[tbl].reshape(bsz, -1, *vp.shape[2:])
+    t = k_buf.shape[1]
+    idx = pos[:, None] + jnp.arange(s)[None, :]
+    j = jnp.arange(t)[None, None, :]
+    mask = (j >= start[:, None, None]) & (j <= idx[:, :, None])
+    return _gqa_scores_softmax_v(q, k_buf, v_buf, mask, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _paged_prefill_step(q, kp, vp, tbl, pos, start, scale):
+    """Paged prefill chunk read through the dispatch layer."""
+    return dispatch.paged_prefill_attention(q, kp, vp, tbl, pos, start,
+                                            scale)
+
+
 def _time(fn, iters):
     """Median wall time (us) of ``fn()`` over ``iters`` timed runs."""
     fn().block_until_ready()                      # compile + warm
@@ -80,7 +109,11 @@ def run(bsz=8, max_len=1024, nkv=4, group=4, hd=64, block=64, iters=20,
     start = jnp.zeros((bsz,), jnp.int32)
     scale = hd ** -0.5
 
-    rows = []
+    chunk = 16
+    q_pf = jnp.asarray(
+        rng.normal(size=(bsz, chunk, nq, hd)).astype(np.float32))
+
+    rows, pf_rows = [], []
     for fill in (0.125, 0.25, 0.5, 1.0):
         pos = jnp.full((bsz,), int(max_len * fill) - 1, jnp.int32)
         t_full = _time(
@@ -94,23 +127,48 @@ def run(bsz=8, max_len=1024, nkv=4, group=4, hd=64, block=64, iters=20,
         common.bench_row(f"attn.decode.fill{int(fill * 100)}", t_paged,
                          f"full={t_full:.0f}us speedup={t_full / t_paged:.2f}")
 
+        # prefill seam: the chunk's last column sits at the fill boundary
+        pos_pf = jnp.full((bsz,), int(max_len * fill) - chunk, jnp.int32)
+        t_gather = _time(
+            lambda: _gather_prefill_step(q_pf, kp, vp, tbl, pos_pf, start,
+                                         scale), iters)
+        t_pf = _time(
+            lambda: _paged_prefill_step(q_pf, kp, vp, tbl, pos_pf, start,
+                                        scale), iters)
+        pf_rows.append({"fill": fill, "live_tokens": int(max_len * fill),
+                        "gather_us": round(t_gather, 1),
+                        "paged_us": round(t_pf, 1),
+                        "speedup": round(t_gather / t_pf, 2)})
+        common.bench_row(f"attn.prefill.fill{int(fill * 100)}", t_pf,
+                         f"gather={t_gather:.0f}us "
+                         f"speedup={t_gather / t_pf:.2f}")
+
     low_fill = [r for r in rows if r["fill"] <= 0.25]
+    pf_low = [r for r in pf_rows if r["fill"] <= 0.25]
     result = {
         "workload": {"batch": bsz, "max_len": max_len, "kv_heads": nkv,
                      "q_heads": nq, "head_dim": hd, "block": block,
+                     "prefill_chunk": chunk,
                      "backend": jax.default_backend(),
                      "paged_impl": "kernel" if dispatch.on_tpu() else "ref"},
         "rows": rows,
         "speedup_at_low_fill": min(r["speedup"] for r in low_fill),
         "scales_with_live_tokens":
             rows[0]["paged_us"] < rows[-1]["paged_us"],
+        "prefill_rows": pf_rows,
+        "prefill_speedup_at_low_fill": min(r["speedup"] for r in pf_low),
+        "prefill_scales_with_live_tokens":
+            pf_rows[0]["paged_us"] < pf_rows[-1]["paged_us"],
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     common.bench_row(
         "attn.claims", 0.0,
         f"low_fill_speedup={result['speedup_at_low_fill']} "
-        f"scales={result['scales_with_live_tokens']}")
+        f"scales={result['scales_with_live_tokens']} "
+        f"prefill_low_fill_speedup="
+        f"{result['prefill_speedup_at_low_fill']} "
+        f"prefill_scales={result['prefill_scales_with_live_tokens']}")
     return result
 
 

@@ -8,15 +8,25 @@ per-request token budgets) through
   group decoding until its *largest* budget is exhausted (the pre-scheduler
   serving path), and
 * **continuous** — the request-level ``serve.scheduler.ServeEngine``: slots
-  recycle the moment a request finishes, waiting requests are admitted
-  mid-decode via chunked left-padded prefill, and
+  recycle the moment a request finishes, waiting prompts stream in as
+  prefill chunks piggybacked on the decode batch (fused mixed steps), and
 * **paged** — the same engine on the block-paged KV pool
-  (``SchedulerConfig(paged=True)``). CPU caveat: the paged decode read is
-  the sequential ``lax.scan`` oracle (rows via ``lax.map`` so dead-block
-  skipping is a real branch), so its end-to-end tokens/s on CPU understate
-  the TPU kernel, which parallelizes rows across the Pallas grid; the
-  isolated active-length win is what ``benchmarks/attn_bench.py``
-  measures.
+  (``SchedulerConfig(paged=True)``): paged flash-decode reads plus paged
+  flash-prefill chunk scoring, both in place on the pool. CPU caveat: both
+  paged reads are the sequential ``lax.scan`` oracles (rows via ``lax.map``
+  so dead-block skipping is a real branch), so end-to-end tokens/s on CPU
+  understate the TPU kernels, which parallelize rows across the Pallas
+  grid; the isolated active-length wins are what
+  ``benchmarks/attn_bench.py`` measures.
+
+Every continuous engine row also reports a **prefill/decode phase-time
+split** (wall-clock attribution over the engine's step kinds: pure-decode
+blocks, fused mixed steps, prefill-only steps) and the fused-admission
+telemetry (``mixed_steps``, ``prefill_chunks``,
+``decode_tokens_during_admission`` — the last must be nonzero: decode no
+longer stalls while prompts stream in). Regressions like PR 3's
+paged-prefill tax show up directly in the phase split instead of hiding in
+totals.
 
 Also emits the ``kv_cache`` section: attention-KV bytes per slot measured
 from the engines' actual device buffers (contiguous fp32 vs paged int8,
@@ -121,7 +131,7 @@ def run_static(params, cfg, acfg, reqs, num_slots):
 
 def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
                    paged=False, kv_block_size=16):
-    """Continuous batching. Returns (wall_s, latencies_s, tokens, steps)."""
+    """Continuous batching. Returns (wall_s, latencies_s, tokens, engine)."""
     max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
                   for r in reqs)
     eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
@@ -131,7 +141,20 @@ def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
     results = eng.run(reqs)
     wall = time.perf_counter() - t0
     lats = [eng.finished_at[r.uid] - t0 for r in reqs]
-    return wall, lats, sum(len(v) for v in results.values()), eng.decode_steps
+    return wall, lats, sum(len(v) for v in results.values()), eng
+
+
+def engine_phase_stats(eng) -> dict:
+    """Wall-clock phase attribution + fused-admission telemetry of one
+    finished engine run (the per-row split the CI guard inspects)."""
+    return {
+        "decode_steps": eng.decode_steps,
+        "phase_s": {k: round(v, 3) for k, v in eng.phase_time.items()},
+        "mixed_steps": eng.mixed_steps,
+        "prefill_chunks": eng.prefill_chunks,
+        "decode_tokens_during_admission":
+            eng.decode_tokens_during_admission,
+    }
 
 
 def kv_bytes_per_slot(params, cfg, acfg, scfg) -> int:
@@ -214,9 +237,9 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                    paged=True)
 
     s_wall, s_lats, s_tok = run_static(params, cfg, acfg, reqs, num_slots)
-    c_wall, c_lats, c_tok, steps = run_continuous(
+    c_wall, c_lats, c_tok, c_eng = run_continuous(
         params, cfg, acfg, reqs, num_slots, prefill_chunk)
-    p_wall, p_lats, p_tok, p_steps = run_continuous(
+    p_wall, p_lats, p_tok, p_eng = run_continuous(
         params, cfg, acfg, reqs, num_slots, prefill_chunk, paged=True)
     parity = parity_check(params, cfg, acfg, num_slots, prefill_chunk)
 
@@ -238,11 +261,14 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                      "max_new": max_new, "num_slots": num_slots,
                      "prefill_chunk": prefill_chunk,
                      "arch": f"d{cfg.d_model}xL{cfg.num_layers}"},
-        "static": summarize(s_wall, s_lats, s_tok),
+        "static": {**summarize(s_wall, s_lats, s_tok),
+                   # prefill+decode fused in one jitted generate() call per
+                   # group — not separable without instrumenting the jit
+                   "phase_s": None},
         "continuous": {**summarize(c_wall, c_lats, c_tok),
-                       "decode_steps": steps},
+                       **engine_phase_stats(c_eng)},
         "paged": {**summarize(p_wall, p_lats, p_tok),
-                  "decode_steps": p_steps},
+                  **engine_phase_stats(p_eng)},
         "speedup_tokens_per_s": round((c_tok / c_wall) / (s_tok / s_wall), 3),
         "paged_speedup_vs_static": round(
             (p_tok / p_wall) / (s_tok / s_wall), 3),
@@ -263,15 +289,20 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                      f"tok_s={result['static']['tokens_per_s']}")
     common.bench_row("serve.continuous", c_wall * 1e6,
                      f"tok_s={result['continuous']['tokens_per_s']} "
-                     f"steps={steps}")
+                     f"steps={c_eng.decode_steps} "
+                     f"phase={result['continuous']['phase_s']}")
     common.bench_row("serve.paged", p_wall * 1e6,
                      f"tok_s={result['paged']['tokens_per_s']} "
-                     f"steps={p_steps}")
+                     f"steps={p_eng.decode_steps} "
+                     f"phase={result['paged']['phase_s']}")
     kv = result["kv_cache"]
     common.bench_row(
         "serve.claims", 0.0,
         f"speedup={result['speedup_tokens_per_s']} parity={parity} "
         f"continuous_wins={result['speedup_tokens_per_s'] > 1.0} "
+        f"paged_wins={result['paged_speedup_vs_static'] > 1.0} "
+        f"decode_during_admission="
+        f"{result['paged']['decode_tokens_during_admission']} "
         f"kv_bytes_reduction={kv['bytes_reduction']} "
         f"int8_ok={kv['int8_divergence_ok']}")
     return result

@@ -6,6 +6,9 @@
 - ssd_scan:         chunked Mamba-2 SSD scan (state carried in VMEM scratch)
 - paged_attention:  paged flash-decode attention over the block-paged KV
                     pool (online softmax, split-K, int8 pool dequant)
+- paged_prefill:    paged flash-prefill attention — a query chunk scored
+                    in place against the same pool (causal window per row,
+                    dead/future blocks skipped)
 
 ``dispatch`` is the kernel-dispatch layer ``analog_linear`` routes through
 when ``AnalogConfig.use_pallas`` is set; ``ops`` holds the jit'd public

@@ -42,6 +42,7 @@ from repro.kernels import ref
 from repro.kernels.analog_matmul import analog_matmul
 from repro.kernels.int4_matmul import int4_matmul
 from repro.kernels.paged_attention import paged_flash_decode
+from repro.kernels.paged_prefill import paged_flash_prefill
 
 # Default tile sizes (see analog_matmul.py for the VMEM budget math) and the
 # decode-shape M block: single-token serving steps have M = batch ∈ [1, 8],
@@ -223,6 +224,34 @@ def paged_decode_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
                                   interpret=not on_tpu())
     return ref.paged_decode_ref(q, kp, vp, tbl, pos, start, scale,
                                 k_scale=k_scale, v_scale=v_scale)
+
+
+def paged_prefill_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                            tbl: jax.Array, pos: jax.Array,
+                            start: jax.Array, scale: float, *,
+                            k_scale: jax.Array | None = None,
+                            v_scale: jax.Array | None = None,
+                            impl: str | None = None) -> jax.Array:
+    """One paged GQA prefill chunk: q [B, S, H, hd] vs the block-paged pool.
+
+    The prefill counterpart of :func:`paged_decode_attention`: the chunk's
+    K/V have already been scattered into the pool; this scores the chunk's
+    queries against each row's live blocks *in place* (no host-side gather
+    of the logical view). Column ``i`` of row ``b`` attends logical
+    positions ``start[b] <= j <= pos[b] + i``. Routing is identical to the
+    decode op: Pallas kernel on TPU, ``lax.scan`` oracle elsewhere (its
+    per-block ``lax.cond`` skips dead blocks at runtime, so active-length
+    scaling holds on CPU too); ``impl`` = ``"kernel"`` / ``"ref"``
+    overrides (interpret-mode off-TPU for the parity suite).
+    """
+    if impl is None:
+        impl = "kernel" if on_tpu() else "ref"
+    if impl == "kernel":
+        return paged_flash_prefill(q, kp, vp, tbl, pos, start, scale=scale,
+                                   k_scale=k_scale, v_scale=v_scale,
+                                   interpret=not on_tpu())
+    return ref.paged_prefill_ref(q, kp, vp, tbl, pos, start, scale,
+                                 k_scale=k_scale, v_scale=v_scale)
 
 
 def int4_mvm(x_q: jax.Array, w_int: jax.Array, scale: jax.Array, *,

@@ -1,0 +1,188 @@
+"""Paged flash-prefill attention Pallas TPU kernel.
+
+One *query chunk* of GQA attention per batch row against the same
+block-paged KV pool the flash-decode kernel reads (physical blocks of
+``block_size`` tokens in one ``[P, bs, KV, hd]`` pool tensor, per-slot block
+table, per-slot ``pos``/``start`` cursors). This is the prefill half of the
+paged attention story: the serving engine's chunked prefill scatter-writes a
+``[B, S]`` token chunk into the pool and then scores it here — **in place**
+— instead of gathering each slot's logical view back out of the pool on the
+host (the per-chunk ``pool[tbl]`` gather + dense ``[S, max_len]`` softmax
+that made paged prefill slower than the contiguous layout in PR 3's
+``BENCH_serve.json``).
+
+Shape/masking contract (mirrors ``layers._paged_slot_attention``):
+
+* ``q [B, S, H, hd]`` — the current chunk's queries; query column ``i`` of
+  row ``b`` sits at logical cache position ``pos[b] + i`` (``pos`` is the
+  slot's write cursor *before* the chunk — the chunk's own K/V have already
+  been scattered into the pool when the kernel runs);
+* row ``b``'s column ``i`` attends logical positions
+  ``start[b] <= j <= pos[b] + i`` only — the causal window against per-row
+  cursors, so left-pad positions (``j < start``) and future in-chunk tokens
+  are never read;
+* the grid visits KV blocks with an online softmax (flash forward): blocks
+  before ``start[b] // bs`` or after ``(pos[b] + S - 1) // bs`` clamp their
+  scalar-prefetch index map to the nearest live block (consecutive identical
+  physical indices make the pipeline skip the re-fetch) and skip all compute
+  via ``pl.when`` — prefill attention cost scales with the slot's *live*
+  tokens, not ``max_len``;
+* the int8 pool (``k_scale``/``v_scale`` per token/head row) dequantizes in
+  VMEM right after the block load, exactly like the decode kernel.
+
+``kernels.ref.paged_prefill_ref`` is the ground-truth ``lax.scan`` oracle
+(same block-loop accumulation order, so interpret-mode parity is tight);
+``kernels.dispatch.paged_prefill_attention`` routes between the two. No
+split-K dimension: a chunk already gives each row ``S * H`` independent
+softmax lanes, so rows alone fill the chip at serving batch sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_prefill_kernel(tbl_ref, pos_ref, start_ref, q_ref, k_ref, v_ref,
+                          ks_ref, vs_ref, o_ref, acc_scr, m_scr, l_scr, *,
+                          bs: int, nkv: int, group: int, hd: int, s: int,
+                          scale: float, nb: int, quantized: bool):
+    """Tile body: online-softmax update for one (row, block) step."""
+    b, j = pl.program_id(0), pl.program_id(1)
+    nq = nkv * group
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    p_b, s_b = pos_ref[b], start_ref[b]
+    live = (j >= s_b // bs) & (j <= (p_b + s - 1) // bs)
+
+    @pl.when(live)
+    def _compute():
+        k_blk = k_ref[0].reshape(bs, nkv, hd).astype(jnp.float32)
+        v_blk = v_ref[0].reshape(bs, nkv, hd).astype(jnp.float32)
+        if quantized:
+            k_blk = k_blk * ks_ref[0].reshape(bs, nkv)[..., None]
+            v_blk = v_blk * vs_ref[0].reshape(bs, nkv)[..., None]
+        # chunk queries, GQA-grouped with the kv-head dim leading so the
+        # MXU sees one batched [S*group, hd] x [hd, bs] dot per kv head
+        qg = jnp.swapaxes(
+            q_ref[0].reshape(s, nkv, group, hd), 0, 1
+        ).reshape(nkv, s * group, hd).astype(jnp.float32)
+
+        kt = jnp.swapaxes(k_blk, 0, 1)          # [KV, bs, hd]
+        logits = jax.lax.dot_general(
+            qg, kt, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        logits = logits.reshape(nkv, s, group, bs)
+
+        # causal window against the per-row cursors: query column i (at
+        # logical pos p_b + i) sees KV positions start <= jpos <= p_b + i
+        jpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, bs), 3)
+        qpos = p_b + jax.lax.broadcasted_iota(jnp.int32, (1, s, 1, 1), 1)
+        valid = (jpos >= s_b) & (jpos <= qpos)
+        logits = jnp.where(valid, logits, -1e30)
+
+        m_prev = m_scr[...].reshape(nkv, s, group)
+        l_prev = l_scr[...].reshape(nkv, s, group)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        vt = jnp.swapaxes(v_blk, 0, 1)          # [KV, bs, hd]
+        acc = acc_scr[...].reshape(nkv, s, group, hd)
+        pv = jax.lax.dot_general(
+            p.reshape(nkv, s * group, bs), vt,
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(nkv, s, group, hd)
+        acc_new = acc * corr[..., None] + pv
+        m_scr[...] = m_new.reshape(1, s * nq)
+        l_scr[...] = l_new.reshape(1, s * nq)
+        acc_scr[...] = acc_new.reshape(s * nq, hd)
+
+    @pl.when(j == nb - 1)
+    def _store():
+        acc = acc_scr[...].reshape(nkv, s, group, hd)
+        l = l_scr[...].reshape(nkv, s, group)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # back to the [S, H, hd] head order of the q operand
+        o_ref[0] = jnp.swapaxes(out, 0, 1).reshape(s * nq * hd)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_prefill(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                        tbl: jax.Array, pos: jax.Array, start: jax.Array, *,
+                        scale: float, k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """Paged flash-prefill attention (see module docstring).
+
+    q [B, S, H, hd], kp/vp [P, bs, KV, hd] (+ optional [P, bs, KV] scales
+    for the int8 pool), tbl [B, NB], pos/start [B]. ``pos[b]`` is the
+    logical position of row ``b``'s *first* query column (the pre-chunk
+    write cursor). Returns [B, S, H, hd] in q.dtype.
+    """
+    bsz, s, nq, hd = q.shape
+    npool, bs, nkv = kp.shape[:3]
+    nb = tbl.shape[1]
+    group = nq // nkv
+    quantized = k_scale is not None
+
+    q2 = q.reshape(bsz, s * nq * hd)
+    kp2 = kp.reshape(npool, bs, nkv * hd)
+    vp2 = vp.reshape(npool, bs, nkv * hd)
+    if quantized:
+        ks2 = k_scale.reshape(npool, bs * nkv).astype(jnp.float32)
+        vs2 = v_scale.reshape(npool, bs * nkv).astype(jnp.float32)
+    else:  # dummy 1-block operands so the kernel signature is static
+        ks2 = jnp.zeros((1, bs * nkv), jnp.float32)
+        vs2 = jnp.zeros((1, bs * nkv), jnp.float32)
+
+    def _phys(b, j, tbl_ref, pos_ref, start_ref):
+        # Dead steps clamp to the nearest live block: consecutive identical
+        # block indices let the pipeline skip the redundant fetch.
+        jj = jnp.clip(j, start_ref[b] // bs, (pos_ref[b] + s - 1) // bs)
+        return tbl_ref[b, jj]
+
+    kv_spec = pl.BlockSpec(
+        (1, bs, nkv * hd), lambda b, j, *pf: (_phys(b, j, *pf), 0, 0))
+    sc_spec = pl.BlockSpec(
+        (1, bs * nkv),
+        (lambda b, j, *pf: (_phys(b, j, *pf), 0)) if quantized
+        else (lambda b, j, *pf: (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bsz, nb),
+        in_specs=[
+            pl.BlockSpec((1, s * nq * hd), lambda b, j, *pf: (b, 0)),   # q
+            kv_spec, kv_spec, sc_spec, sc_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s * nq * hd), lambda b, j, *pf: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((s * nq, hd), jnp.float32),       # acc
+            pltpu.VMEM((1, s * nq), jnp.float32),        # m
+            pltpu.VMEM((1, s * nq), jnp.float32),        # l
+        ],
+    )
+
+    (o,) = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, bs=bs, nkv=nkv, group=group,
+                          hd=hd, s=s, scale=scale, nb=nb,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bsz, s * nq * hd), jnp.float32)],
+        interpret=interpret,
+    )(tbl, pos, start, q2, kp2, vp2, ks2, vs2)
+
+    return o.reshape(bsz, s, nq, hd).astype(q.dtype)

@@ -169,6 +169,85 @@ def paged_decode_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_prefill_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                      tbl: jax.Array, pos: jax.Array, start: jax.Array,
+                      scale: float, k_scale: jax.Array | None = None,
+                      v_scale: jax.Array | None = None) -> jax.Array:
+    """Oracle for the paged flash-prefill attention kernel.
+
+    One query *chunk* of GQA attention per batch row against the block-paged
+    KV pool, with the same online-softmax block loop the Pallas kernel uses:
+
+    q        [B, S, H, hd]     chunk queries (H = KV * group); column ``i``
+                               of row ``b`` sits at logical position
+                               ``pos[b] + i``
+    kp, vp   [P, bs, KV, hd]   physical KV block pool (fp, or int8 + scales)
+    tbl      [B, NB]           per-slot block table (logical → physical)
+    pos      [B]               logical position of the chunk's first column
+                               (the slot's pre-chunk write cursor; the
+                               chunk's own K/V are already in the pool)
+    start    [B]               first valid logical index (left-pad count)
+    k_scale, v_scale [P, bs, KV]  per-token/head dequant scales (int8 pool)
+
+    Row ``b``'s column ``i`` attends ``start[b] <= j <= pos[b] + i`` only —
+    the causal window against per-row cursors. The block loop is a
+    ``lax.scan`` whose step body sits behind a ``lax.cond`` on block
+    liveness, so blocks before ``start`` or after the chunk's last column
+    are *skipped at runtime*: prefill attention cost scales with live
+    tokens on CPU too (the win ``benchmarks/attn_bench.py`` measures
+    against the gathered-logical-view dense path). Rows go through
+    ``lax.map`` to keep the conds real branches.
+    """
+    bsz, s, nq, hd = q.shape
+    nb = tbl.shape[1]
+    bs, nkv = kp.shape[1], kp.shape[2]
+    group = nq // nkv
+
+    def one_row(args):
+        qb, tb, pb, sb = args                     # [S,H,hd], [NB], (), ()
+        qg = jnp.swapaxes(qb.reshape(s, nkv, group, hd), 0, 1
+                          ).astype(jnp.float32)   # [KV, S, group, hd]
+        first, last = sb // bs, (pb + s - 1) // bs
+
+        def blk_step(carry, j):
+            def compute(c):
+                m, l, acc = c
+                phys = tb[j]
+                k_blk = kp[phys].astype(jnp.float32)  # [bs, KV, hd]
+                v_blk = vp[phys].astype(jnp.float32)
+                if k_scale is not None:
+                    k_blk = k_blk * k_scale[phys][..., None]
+                    v_blk = v_blk * v_scale[phys][..., None]
+                jpos = j * bs + jnp.arange(bs)
+                qpos = pb + jnp.arange(s)
+                valid = ((jpos[None, :] >= sb)
+                         & (jpos[None, :] <= qpos[:, None]))      # [S, bs]
+                logits = jnp.einsum("nsgh,tnh->nsgt", qg,
+                                    k_blk) * scale  # [KV, S, group, bs]
+                logits = jnp.where(valid[None, :, None, :], logits, -1e30)
+                m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+                p = jnp.exp(logits - m_new[..., None])
+                p = jnp.where(valid[None, :, None, :], p, 0.0)
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "nsgt,tnh->nsgh", p, v_blk)
+                return m_new, l_new, acc_new
+
+            live = (j >= first) & (j <= last)
+            return jax.lax.cond(live, compute, lambda c: c, carry), None
+
+        m0 = jnp.full((nkv, s, group), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((nkv, s, group), jnp.float32)
+        a0 = jnp.zeros((nkv, s, group, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(blk_step, (m0, l0, a0), jnp.arange(nb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.swapaxes(out, 0, 1).reshape(s, nq, hd)
+
+    out = jax.lax.map(one_row, (q, tbl, pos, start))
+    return out.astype(q.dtype)
+
+
 def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
             c: jax.Array, h0: jax.Array | None = None) -> jax.Array:
     """Naive sequential Mamba-2 SSD recurrence (the slow-but-sure oracle).

@@ -81,6 +81,11 @@ def main():
     ap.add_argument("--num-slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--step-tokens", type=int, default=0,
+                    help="token budget of the fused mixed prefill/decode "
+                         "step: one token per decode slot + prefill chunks "
+                         "of admitting slots up to the budget (0 = auto: "
+                         "num_slots + 2 * prefill_chunk)")
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cache-dtype", default="bf16",
@@ -147,8 +152,9 @@ def main():
                   for r in reqs)
     eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
         num_slots=args.num_slots, max_len=max_len, prefill_chunk=chunk,
-        cache_dtype=cache_dtype, paged=args.paged,
-        kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks))
+        step_tokens=args.step_tokens, cache_dtype=cache_dtype,
+        paged=args.paged, kv_block_size=args.kv_block_size,
+        kv_blocks=args.kv_blocks))
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt = time.perf_counter() - t0
@@ -160,7 +166,9 @@ def main():
     print(f"[serve] continuous ({mode} kv, {args.cache_dtype}): {total} "
           f"tokens across {len(reqs)} "
           f"mixed-length requests in {dt:.2f}s ({total / dt:.1f} tok/s, "
-          f"{eng.decode_steps} decode steps, "
+          f"{eng.decode_steps} decode steps, {eng.mixed_steps} fused "
+          f"mixed steps, {eng.decode_tokens_during_admission} decode "
+          f"tokens emitted during admission, "
           f"p50 latency {lats[len(lats) // 2] * 1e3:.0f}ms); "
           f"sample: {results[0][:8]}")
 

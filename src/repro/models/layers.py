@@ -200,8 +200,20 @@ def _chunked_causal_attention(q, k, v, scale, q_chunk=512, kv_chunk=1024):
 
 
 def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
-              positions: jax.Array, cache: dict | None = None):
+              positions: jax.Array, cache: dict | None = None,
+              seq_mask: jax.Array | None = None):
     """GQA attention block. Returns (y, stats, new_cache).
+
+    ``seq_mask`` [B, S] (1 = real token) applies to the slot-cache layouts
+    only and makes *fully-masked rows* cache-transparent: their K/V writes
+    are dropped (contiguous: out-of-range index + ``mode="drop"``; paged:
+    redirected to the reserved sink block) and their ``pos`` cursor does
+    not advance — the contract the serving engine's fused mixed
+    prefill/decode step relies on, where a decode substep must not touch
+    rows that are mid-prefill and vice versa. Rows with at least one real
+    token behave exactly as before (left-pad columns still write; the
+    ``start`` marker keeps them unattended), so all-active callers are
+    bit-identical to the unmasked path.
 
     Two cache layouts (see ``init_cache``):
 
@@ -250,21 +262,24 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
 
     if cache is not None and "kp" in cache:          # paged slot mode
         out, new_cache = _paged_slot_attention(cache, q, k, v, x, scale,
-                                               acfg.kv_splits)
+                                               acfg.kv_splits, seq_mask)
     elif cache is not None and jnp.ndim(cache["pos"]) == 1:   # slot mode
         pos, start = cache["pos"], cache["start"]
         bsz, s = x.shape[0], x.shape[1]
         t = cache["k"].shape[1]
+        row_on = _row_active(seq_mask, bsz)                  # [B] 0/1
         idx = pos[:, None] + jnp.arange(s)[None, :]          # [B, S] writes
+        idx_w = jnp.where(row_on[:, None] > 0, idx, t)       # drop if inactive
         b_idx = jnp.arange(bsz)[:, None]
-        k_buf = cache["k"].at[b_idx, idx].set(
+        k_buf = cache["k"].at[b_idx, idx_w].set(
             k.astype(cache["k"].dtype), mode="drop")
-        v_buf = cache["v"].at[b_idx, idx].set(
+        v_buf = cache["v"].at[b_idx, idx_w].set(
             v.astype(cache["v"].dtype), mode="drop")
         j = jnp.arange(t)[None, None, :]
         mask = (j >= start[:, None, None]) & (j <= idx[:, :, None])
         out = _gqa_scores_softmax_v(q, k_buf, v_buf, mask, scale)
-        new_cache = {"k": k_buf, "v": v_buf, "pos": pos + s, "start": start}
+        new_cache = {"k": k_buf, "v": v_buf, "pos": pos + s * row_on,
+                     "start": start}
     elif cache is not None and x.shape[1] == 1:     # legacy decode step
         pos = cache["pos"]
         k_buf = jax.lax.dynamic_update_slice(
@@ -302,20 +317,35 @@ def _fill_cache(buf, new):
         buf, new.astype(buf.dtype), (0, 0, 0, 0))
 
 
-def _paged_slot_attention(cache, q, k, v, x, scale, kv_splits=1):
+def _row_active(seq_mask, bsz):
+    """Per-row activity flag for the slot-cache branches: 1 when the row's
+    chunk carries at least one real token (left-padded prefill, decode),
+    0 when the whole row is masked (a slot the current fused substep must
+    leave untouched). No mask ⇒ every row active."""
+    if seq_mask is None:
+        return jnp.ones((bsz,), jnp.int32)
+    return (jnp.max(seq_mask, axis=1) > 0).astype(jnp.int32)
+
+
+def _paged_slot_attention(cache, q, k, v, x, scale, kv_splits=1,
+                          seq_mask=None):
     """Paged-pool branch of :func:`attention`: scatter-write the current
     chunk into the block pool, then score against the live range only.
 
     Decode (S=1) routes through the paged flash-decode op; chunked prefill
-    gathers the slot's logical view and reuses the dense masked path (the
-    gathered values are bit-identical to the contiguous layout's buffer,
-    so prefill stays bitwise on the non-quantized pool)."""
+    routes through the paged flash-prefill op — the chunk's queries score
+    against the pool *in place* (online softmax over each row's live
+    blocks, causal window ``start[b] <= j <= pos[b] + i``), so no logical
+    view is ever gathered out of the pool. Fully-masked rows (``seq_mask``
+    all zero) write to the reserved sink block and keep their cursor."""
     pos, start, tbl = cache["pos"], cache["start"], cache["tbl"]
     bsz, s = x.shape[0], x.shape[1]
     bs = cache["kp"].shape[1]
     quantized = "ks" in cache
+    row_on = _row_active(seq_mask, bsz)                      # [B] 0/1
     idx = pos[:, None] + jnp.arange(s)[None, :]              # [B, S] logical
     blk = jnp.take_along_axis(tbl, idx // bs, axis=1)        # [B, S] physical
+    blk = jnp.where(row_on[:, None] > 0, blk, 0)             # sink if inactive
     off = idx % bs
     new_cache = dict(cache)
     if quantized:
@@ -332,7 +362,7 @@ def _paged_slot_attention(cache, q, k, v, x, scale, kv_splits=1):
             k.astype(cache["kp"].dtype), mode="drop")
         new_cache["vp"] = cache["vp"].at[blk, off].set(
             v.astype(cache["vp"].dtype), mode="drop")
-    new_cache["pos"] = pos + s
+    new_cache["pos"] = pos + s * row_on
 
     if s == 1:                                    # decode: flash over blocks
         out = dispatch.paged_decode_attention(
@@ -341,20 +371,11 @@ def _paged_slot_attention(cache, q, k, v, x, scale, kv_splits=1):
             v_scale=new_cache.get("vs"), num_splits=kv_splits)
         return out[:, None].astype(q.dtype), new_cache
 
-    # chunked prefill: gather the logical view (small: one slot's blocks)
-    def logical(name, sc):
-        g = new_cache[name][tbl]                  # [B, NB, bs, KV, hd]
-        g = g.reshape(bsz, -1, *g.shape[3:])
-        if quantized:
-            scl = new_cache[sc][tbl].reshape(bsz, -1, g.shape[2])
-            g = quant.kv_dequantize(g, scl)
-        return g
-
-    k_buf, v_buf = logical("kp", "ks"), logical("vp", "vs")
-    t = k_buf.shape[1]
-    j = jnp.arange(t)[None, None, :]
-    mask = (j >= start[:, None, None]) & (j <= idx[:, :, None])
-    return _gqa_scores_softmax_v(q, k_buf, v_buf, mask, scale), new_cache
+    # chunked prefill: flash over blocks, in place on the pool
+    out = dispatch.paged_prefill_attention(
+        q, new_cache["kp"], new_cache["vp"], tbl, pos, start, scale,
+        k_scale=new_cache.get("ks"), v_scale=new_cache.get("vs"))
+    return out.astype(q.dtype), new_cache
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32,

@@ -124,9 +124,17 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     cg = c.reshape(bsz, s, g, n)
 
     # the conv tail is stored at the cache's dtype (bf16 caches hand the
-    # model a bf16 state and must get one back — scatter requires it)
+    # model a bf16 state and must get one back — scatter requires it).
+    # Fully-masked rows keep their old tail exactly: the trailing-window
+    # update would otherwise shift zeros into a row the current fused
+    # substep must leave untouched (the SSM state is already transparent
+    # through dt = 0; the conv state needs this explicit freeze).
     conv_cast = (None if cache is None
                  else new_conv.astype(cache["conv"].dtype))
+    if cache is not None and seq_mask is not None:
+        row_on = jnp.max(seq_mask, axis=1) > 0                # [B]
+        conv_cast = jnp.where(row_on[:, None, None], conv_cast,
+                              cache["conv"])
     if cache is not None and s == 1:                              # decode
         rep = heads // g
         to_bh = lambda t: t[:, 0].repeat(rep, axis=1).reshape(bsz * heads, -1)

@@ -75,11 +75,12 @@ def attn_layer_labels(p, ffn_kind: str):
             "ffn": _ffn_labels(p["ffn"], ffn_kind)}
 
 
-def apply_attn_layer(p, x, cfg, acfg, ctx, positions, cache, ffn_kind: str):
+def apply_attn_layer(p, x, cfg, acfg, ctx, positions, cache, ffn_kind: str,
+                     seq_mask=None):
     """One attention block with residuals. Returns (x, stats, cache)."""
     h, st_a, new_cache = L.attention(
         p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg, acfg, ctx,
-        positions, cache)
+        positions, cache, seq_mask)
     x = x + h
     h, st_f = _apply_ffn(p["ffn"], L.apply_norm(p["ln2"], x, cfg.norm),
                          cfg, acfg, ctx, ffn_kind)
@@ -220,7 +221,8 @@ def _hybrid_sb_apply(p_sb, x, cfg, acfg, ctx, positions, cache_sb,
         if j == half:
             c = None if cache_sb is None else cache_sb["attn"]
             x, st_attn, nc = apply_attn_layer(p_sb["attn"], x, cfg, acfg,
-                                              ctx_j, positions, c, "dense")
+                                              ctx_j, positions, c, "dense",
+                                              seq_mask)
             new_cache["attn"] = nc
         else:
             mp = take(p_sb["mamba"], m_idx)
@@ -257,8 +259,12 @@ def apply_blocks(params_blocks, x, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
 
     ``seq_mask`` [B, S] marks valid (non-pad) positions; it is forwarded to
     the stateful mamba mixers so masked tokens leave the SSM/conv state
-    untouched (attention handles padding through the slot cache's ``start``
-    markers instead — see ``layers.attention``).
+    untouched, and to the attention layers, where *fully-masked rows* drop
+    their cache writes and freeze their cursor (left-pad columns of active
+    rows are still handled by the slot cache's ``start`` markers — see
+    ``layers.attention``). The serving engine's fused mixed step leans on
+    the fully-masked-row contract to advance decode slots and prefill
+    chunks of admitting slots in one dispatch.
     """
     fam = cfg.family
     with_cache = caches is not None
@@ -289,7 +295,8 @@ def apply_blocks(params_blocks, x, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
                                                  cache_l, ffn_kind, seq_mask)
             else:
                 x, stats, nc = apply_attn_layer(p_l, x, cfg, acfg, ctx_l,
-                                                positions, cache_l, ffn_kind)
+                                                positions, cache_l, ffn_kind,
+                                                seq_mask)
             out = (stats, nc) if with_cache else stats
             return (x, idx + 1), out
 

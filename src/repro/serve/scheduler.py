@@ -13,32 +13,47 @@ replaces it for serving:
   releases its slot immediately and a waiting request is admitted
   mid-decode; the decode step itself stays one jitted static-shape call
   regardless of which subset of slots is live.
-* **Chunked, left-padded prefill** — an admitted prompt is left-padded to
-  a multiple of ``prefill_chunk`` and driven through the model chunk by
-  chunk against the slot's cache row (gather → run → scatter, via
-  ``models.transformer.cache_slot_spec``). Left-pad positions are masked
-  state-transparent (attention: the cache's ``start`` marker; SSM: the
-  ``seq_mask`` → ``dt = 0`` rule in ``models.mamba2``), so only two
-  executables exist per engine: one ``[1, chunk]`` prefill and one
-  ``[num_slots, 1]`` decode.
+* **Fused chunked-prefill scheduling** (Sarathi/vLLM-style) — an admitted
+  prompt is left-padded to a multiple of ``prefill_chunk`` and its chunks
+  *piggyback on the decode batch*: each engine step carries a token
+  budget (``SchedulerConfig.step_tokens``) split between one decode token
+  per decode-phase slot and the prefill chunks of admitting slots, and a
+  single jitted dispatch (``_mixed_step_jit``) advances both — decode
+  throughput never drops to zero while a prompt streams in, and prefill
+  chunks batch *across* admitting slots in one ``[num_slots, chunk]``
+  forward instead of running B=1 per request. The chunk rows of
+  non-admitting slots are fully masked, which the model layers treat as
+  cache-transparent (attention drops their writes and freezes their
+  cursors; the SSM state passes through via ``dt = 0`` and the conv tail
+  is frozen — see ``layers.attention`` / ``mamba2.mamba``). The first
+  generated token of a finishing prompt is sampled *inside* the fused
+  step, batched across rows — admission makes no per-request host round
+  trip. With no admissions pending, the engine falls back to the
+  multi-step decode block (up to ``decode_block`` decode+sample steps in
+  one ``lax.scan`` dispatch).
+* **Device-resident step state** — the per-slot sampling parameters,
+  PRNG keys, cursors and token counters live on device between steps and
+  are re-uploaded only when the slot set changes (admission, phase flip,
+  retirement); steady-state decode blocks dispatch with zero host→device
+  transfers.
 * **Block-paged KV cache** (``SchedulerConfig.paged``) — the per-slot
   ``max_len`` KV buffers become a pool of fixed-size physical blocks
   (``serve.kv_pool``: free-list alloc at admission, release at
-  retirement, FIFO backpressure when undersized), and the decode read
-  routes through the paged flash-decode attention op
-  (``kernels.dispatch.paged_decode_attention``) so each slot only touches
-  its ``ceil(live/block)`` blocks — decode cost and cache bytes scale
-  with actual fill, not worst case. ``AnalogConfig.kv_bits = 8`` stores
-  the pool as int8 with per-token/head scales (2–4× fewer cache bytes).
+  retirement, FIFO backpressure when undersized). The decode read routes
+  through the paged flash-decode op and the prefill chunk through the
+  paged flash-prefill op (``kernels.dispatch``), both scoring the pool
+  *in place* — no logical view is ever gathered back to the host, and
+  cost scales with each slot's live tokens. ``AnalogConfig.kv_bits = 8``
+  stores the pool as int8 with per-token/head scales.
 * **Per-request sampling and stop conditions** — temperature / top-k /
   top-p / ``greedy_first`` ride along each request as traced per-row
   arrays (``sampling.sample_logits_batched``), and every request carries
   its own PRNG key folded per generated token. Sampling and the model
   math are row-independent, which yields the engine's *admission-parity
   contract*: a request produces bit-identical tokens whether it runs solo
-  or is admitted into a half-full batch mid-decode (verified in
-  ``tests/test_scheduler.py``; MoE capacity dropping is the one documented
-  exception — token dropping is chunk-shape dependent).
+  or its prefill chunks piggyback on a half-full decoding batch (verified
+  in ``tests/test_scheduler.py``; MoE capacity dropping is the one
+  documented exception — token dropping is chunk-shape dependent).
 
 Works in every serving mode of ``AnalogConfig`` — ``off``, ``analog``
 (optionally after ``perturb_analog_weights``), ``rtn``, and packed-int4
@@ -47,7 +62,8 @@ Families: dense / moe / ssm / hybrid (audio's multi-codebook tokens and
 vlm's patch-embed prefill are not wired into the scheduler yet).
 
 See ``docs/serving.md`` for the full design and ``benchmarks/serve_bench.py``
-for the static-vs-continuous throughput comparison.
+for the static-vs-continuous throughput comparison (with per-phase
+wall-clock attribution).
 """
 
 from __future__ import annotations
@@ -109,19 +125,33 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Static engine geometry (determines the two compiled executables).
+    """Static engine geometry (determines the compiled executables).
 
     ``num_slots``: in-flight request capacity (decode batch rows).
     ``max_len``: per-slot cache length; a request needs
     ``padded_prompt + max_new <= max_len``. ``prefill_chunk``: admission
     prefill granularity — prompts are left-padded up to a multiple of this,
-    so one ``[1, chunk]`` executable serves every prompt length.
-    ``decode_block``: multi-step decode horizon — up to this many
-    decode+sample steps run inside one ``lax.scan`` dispatch (the block
-    length is clipped to the smallest remaining budget in flight and
-    quantized to powers of two, so per-step host overhead is amortized
-    without ever overshooting a request's ``max_new``; admission happens
-    at block boundaries).
+    so one ``[num_slots, chunk]`` executable serves every prompt length.
+    ``decode_block``: multi-step decode horizon — with no admissions in
+    flight, up to this many decode+sample steps run inside one ``lax.scan``
+    dispatch (the block length is clipped to the smallest remaining budget
+    in flight and quantized to powers of two, so per-step host overhead is
+    amortized without ever overshooting a request's ``max_new``).
+
+    ``step_tokens``: the per-step token budget of the fused mixed
+    prefill/decode step (0 = auto: ``num_slots + 2 * prefill_chunk``).
+    While any slot is mid-prefill, each engine step spends one token per
+    decode-phase slot and fills the remainder with prefill chunks of
+    admitting slots, oldest admission first:
+    ``n_chunks = clip((step_tokens - n_decode) // prefill_chunk, 1,
+    min(n_admitting, prefill_batch))``
+    — the floor of one chunk per step means prefill can never starve, and
+    the one-decode-token-per-slot term means decode can't either. The
+    budget also fixes the *compact prefill width* the fused executable
+    compiles at (``ServeEngine.prefill_batch`` =
+    ``max(1, (budget - num_slots) // prefill_chunk)`` capped at
+    ``num_slots``): only that many cache rows are gathered into the chunk
+    forward, so masked filler rows never burn a full batch of compute.
 
     ``paged=True`` swaps the per-slot ``max_len`` KV buffers for the
     block-paged pool (``serve.kv_pool``): ``kv_blocks`` physical blocks of
@@ -137,6 +167,7 @@ class SchedulerConfig:
     max_len: int = 96
     prefill_chunk: int = 16
     decode_block: int = 8
+    step_tokens: int = 0
     cache_dtype: jnp.dtype = jnp.float32
     paged: bool = False
     kv_block_size: int = 16
@@ -146,11 +177,24 @@ class SchedulerConfig:
 class _Slot:
     """Host-side bookkeeping for one in-flight request."""
 
-    def __init__(self, req: Request):
-        """Fresh bookkeeping for ``req`` (no tokens emitted yet)."""
+    def __init__(self, req: Request, toks: np.ndarray, mask: np.ndarray,
+                 npad: int, chunk: int, seq: int):
+        """Fresh bookkeeping for ``req``: the left-padded prompt split into
+        ``prefill_chunk``-sized pieces, none consumed yet."""
         self.req = req
         self.out: list[int] = []
         self.count = 0                 # tokens sampled so far
+        self.toks = toks               # [padded] left-padded prompt
+        self.mask = mask               # [padded] 1 = real token
+        self.npad = npad               # left-pad count
+        self.nchunks = len(toks) // chunk
+        self.chunk = 0                 # next prefill chunk to run
+        self.seq = seq                 # admission order (prefill FIFO)
+
+    @property
+    def prefilling(self) -> bool:
+        """True while prompt chunks remain to be streamed in."""
+        return self.chunk < self.nchunks
 
 
 # ---------------------------------------------------------------------------
@@ -159,31 +203,13 @@ class _Slot:
 # instances: constructing an engine is free once its shapes have been seen.
 # The cache pytree is donated (the engine rebinds self.caches with the
 # result immediately, so the input buffers are dead): the slot caches are
-# updated in place instead of copied every decode block / prefill chunk.
+# updated in place instead of copied every decode block / mixed step.
 # CPU ignores donation, so skip it there to keep tests warning-free.
 # ---------------------------------------------------------------------------
 
 def _donate(*argnums):
     """donate_argnums for jax.jit, disabled on CPU (donation unsupported)."""
     return () if jax.default_backend() == "cpu" else argnums
-
-
-def _gather_slot(caches, slot, axes):
-    """Slice one request slot out of every cache leaf (``-1``: pool-wide
-    leaf with no slot dimension — passed through whole)."""
-    return jax.tree.map(
-        lambda c, ax: c if ax < 0
-        else jax.lax.dynamic_slice_in_dim(c, slot, 1, ax),
-        caches, axes)
-
-
-def _scatter_slot(caches, sub, slot, axes):
-    """Write a gathered slot subtree back into the full caches (pool-wide
-    leaves replace the old leaf — the prefill updated them in place)."""
-    return jax.tree.map(
-        lambda c, s, ax: s if ax < 0
-        else jax.lax.dynamic_update_slice_in_dim(c, s, slot, ax),
-        caches, sub, axes)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "paged", "kv_bits"),
@@ -209,19 +235,6 @@ def _admit_jit(caches, slot, start, tbl_row, *, cfg, paged=False, kv_bits=0):
     return jax.tree.map(upd, caches, axes, kinds)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "paged"),
-                   donate_argnums=_donate(1))
-def _prefill_jit(params, caches, slot, tokens, mask, off, *, cfg, acfg,
-                 paged=False):
-    """One left-padded prefill chunk against slot ``slot``'s cache row."""
-    axes, _ = T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits)
-    sub = _gather_slot(caches, slot, axes)
-    ctx = AnalogCtx(key=None, training=False)
-    logits, _, sub = model_apply(params, cfg, acfg, ctx, {"tokens": tokens},
-                                 caches=sub, pos_offset=off, seq_mask=mask)
-    return logits[:, -1], _scatter_slot(caches, sub, slot, axes)
-
-
 def _sample_tokens(logits, keys, counts, temp, topk, topp, gfirst,
                    use_top_k, use_top_p):
     """Fold each request key at its token count, then batched sampling."""
@@ -231,27 +244,17 @@ def _sample_tokens(logits, keys, counts, temp, topk, topp, gfirst,
                                  use_top_k=use_top_k, use_top_p=use_top_p)
 
 
-_sample_jit = jax.jit(_sample_tokens,
-                      static_argnames=("use_top_k", "use_top_p"))
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
-                                             "use_top_p", "k"),
-                   donate_argnums=_donate(1))
-def _step_jit(params, caches, toks, off, active, keys, counts, temp, topk,
-              topp, gfirst, *, cfg, acfg, use_top_k, use_top_p, k):
-    """``k`` decode + per-request-sampling steps fused into one executable
-    (``lax.scan`` over the step body): one host dispatch per decode block
-    regardless of slot count, amortizing dispatch exactly like the static
-    ``generate`` scan does — while slots still recycle at block
-    boundaries. Specialized per (use_top_k, use_top_p) so the full-vocab
-    sorts drop out of the step when no in-flight request filters (see
-    ``sampling`` module), and per block length ``k`` (powers of two).
+def _decode_scan(params, caches, toks, off, active, keys, counts, temp,
+                 topk, topp, gfirst, cfg, acfg, use_top_k, use_top_p, k):
+    """``k`` decode + per-request-sampling steps in one ``lax.scan``.
 
     Each scan step is row-independent and folds each request's own key at
     its own token count, so the produced tokens are invariant to how the
     host partitions decoding into blocks — the admission-parity contract
-    extends to multi-step decode. Returns (tokens [k, B], caches).
+    extends to multi-step decode and to the fused mixed step's single
+    decode substep alike. Rows with ``active = 0`` are cache-transparent
+    (the attention/SSM layers drop their writes and freeze their cursors).
+    Returns (tokens [k, B], last toks, off, counts, caches).
     """
     def body(carry, _):
         toks, off, counts, caches = carry
@@ -261,9 +264,98 @@ def _step_jit(params, caches, toks, off, active, keys, counts, temp, topk,
                              use_top_k, use_top_p)
         return (new, off + 1, counts + 1, caches), new
 
-    (_, _, _, caches), out = jax.lax.scan(
+    (toks, off, counts, caches), out = jax.lax.scan(
         body, (toks, off, counts, caches), None, length=k)
-    return out, caches
+    return out, toks, off, counts, caches
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
+                                             "use_top_p", "k"),
+                   donate_argnums=_donate(1))
+def _step_jit(params, caches, toks, off, active, keys, counts, temp, topk,
+              topp, gfirst, *, cfg, acfg, use_top_k, use_top_p, k):
+    """Pure-decode engine step: one dispatch per ``k``-step decode block,
+    amortizing dispatch exactly like the static ``generate`` scan does —
+    while slots still recycle at block boundaries. Specialized per
+    (use_top_k, use_top_p) so the full-vocab sorts drop out of the step
+    when no in-flight request filters (see ``sampling`` module), and per
+    block length ``k`` (powers of two). Returns the updated device-resident
+    step state alongside the sampled tokens: (tokens [k, B], last toks,
+    off, counts, caches).
+    """
+    return _decode_scan(params, caches, toks, off, active, keys, counts,
+                        temp, topk, topp, gfirst, cfg, acfg, use_top_k,
+                        use_top_p, k)
+
+
+def _gather_rows(caches, idx, axes):
+    """Gather the cache rows of slots ``idx`` into a compact batch
+    (``-1``-axis pool leaves pass through whole)."""
+    return jax.tree.map(
+        lambda c, ax: c if ax < 0 else jnp.take(c, idx, axis=ax),
+        caches, axes)
+
+
+def _scatter_rows(caches, sub, idx, axes):
+    """Write a compact gathered batch back to its slots (``idx`` rows are
+    distinct by construction, so the scatter is order-independent; pool
+    leaves replace the old leaf — the prefill updated them in place)."""
+    def scat(c, s, ax):
+        if ax < 0:
+            return s
+        cm = jnp.moveaxis(c, ax, 0).at[idx].set(jnp.moveaxis(s, ax, 0))
+        return jnp.moveaxis(cm, 0, ax)
+
+    return jax.tree.map(scat, caches, sub, axes)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
+                                             "use_top_p", "k", "paged"),
+                   donate_argnums=_donate(1))
+def _mixed_step_jit(params, caches, toks, off, active, keys, counts, temp,
+                    topk, topp, gfirst, pf_idx, pf_toks, pf_mask, pf_off, *,
+                    cfg, acfg, use_top_k, use_top_p, k, paged):
+    """Fused mixed prefill/decode step: one dispatch advances the decode
+    slots *and* a compact batched prefill chunk of the admitting slots.
+
+    Substep 1 — ``k`` decode steps (``k = 0`` when no slot is in decode
+    phase, e.g. cold start) over the rows flagged ``active``; admitting
+    rows are fully masked and stay untouched. Substep 2 — the cache rows
+    of the ``pf_idx`` slots are gathered into a compact
+    ``[prefill_batch, chunk]`` forward of ``pf_toks`` with per-row
+    position offsets ``pf_off`` and mask ``pf_mask``, then scattered
+    back: each admitting row's chunk scatter-writes into its own
+    cache/pool row and continues its recurrences exactly as a solo
+    prefill would — row independence is what keeps piggybacked prefill
+    bit-identical to solo prefill. ``pf_idx`` rows beyond the admitting
+    count are distinct filler slots with all-zero masks: the model layers
+    leave them untouched, so scattering them back is a no-op write of
+    their own values. The last-position logits are sampled for every
+    compact row at token count 0 (one batched sample across admitting
+    slots); the host consumes row ``i``'s sample only when its slot
+    finished the prompt this step — admission makes no per-request B=1
+    dispatch or host round trip.
+
+    Returns (decode tokens [k, B], first-token samples [prefill_batch],
+    last toks, off, counts, caches).
+    """
+    dec_out, toks, off, counts, caches = _decode_scan(
+        params, caches, toks, off, active, keys, counts, temp, topk, topp,
+        gfirst, cfg, acfg, use_top_k, use_top_p, k)
+
+    axes, _ = T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits)
+    sub = _gather_rows(caches, pf_idx, axes)
+    ctx = AnalogCtx(key=None, training=False)
+    logits, _, sub = model_apply(params, cfg, acfg, ctx,
+                                 {"tokens": pf_toks}, caches=sub,
+                                 pos_offset=pf_off[:, None],
+                                 seq_mask=pf_mask, last_only=True)
+    caches = _scatter_rows(caches, sub, pf_idx, axes)
+    first = _sample_tokens(logits[:, -1], keys[pf_idx],
+                           jnp.zeros_like(pf_idx), temp[pf_idx],
+                           topk[pf_idx], topp[pf_idx], gfirst[pf_idx],
+                           use_top_k, use_top_p)
+    return dec_out, first, toks, off, counts, caches
 
 
 class ServeEngine:
@@ -311,6 +403,18 @@ class ServeEngine:
         self.results: dict[int, np.ndarray] = {}
         self.finished_at: dict[int, float] = {}
         self.decode_steps = 0
+        # wall-clock phase attribution + fused-admission telemetry
+        # (benchmarks/serve_bench.py reports these per engine row;
+        # mixed_steps counts only steps that carried BOTH phases). The
+        # per-step (decode, prefill) token log is bounded — telemetry for
+        # the budget-invariant tests, not an unbounded history.
+        self.phase_time = {"decode": 0.0, "mixed": 0.0, "prefill": 0.0}
+        self.mixed_steps = 0
+        self.prefill_chunks = 0
+        self.decode_tokens_during_admission = 0
+        self.step_token_log: collections.deque[tuple[int, int]] = (
+            collections.deque(maxlen=4096))
+        self._admit_seq = 0
         # per-slot host mirrors of the device-side request state
         self._pos = np.zeros(b, np.int32)       # cache write cursor
         self._start = np.zeros(b, np.int32)     # left-pad count
@@ -320,6 +424,11 @@ class ServeEngine:
         self._topp = np.ones(b, np.float32)
         self._gfirst = np.zeros(b, np.int32)
         self._keys = np.zeros((b, 2), np.uint32)
+        # device-resident step state, re-uploaded only when dirty
+        # (admission / phase flip / retirement) — steady-state decode
+        # blocks dispatch with zero host→device transfers
+        self._dev: dict[str, jax.Array] = {}
+        self._dirty = True
 
     # ------------------------------------------------------------------
     # public API
@@ -347,10 +456,13 @@ class ServeEngine:
         self.queue.append(req)
 
     def step(self) -> None:
-        """One engine iteration: admit into free slots, then decode once.
+        """One engine iteration: admit into free slots, then advance.
 
-        Paged mode adds free-list backpressure: the queue head is admitted
-        only when the pool can cover its worst-case block count. Admission
+        Admission only binds a slot and plans the prompt's chunks — the
+        chunks themselves piggyback on subsequent fused steps, so decode
+        slots keep emitting tokens throughout the admission window. Paged
+        mode adds free-list backpressure: the queue head is admitted only
+        when the pool can cover its worst-case block count. Admission
         stays strict FIFO — a blocked head is *not* overtaken by smaller
         requests behind it, so no request can starve.
         """
@@ -360,8 +472,20 @@ class ServeEngine:
                         self._blocks_needed(self.queue[0])):
                     break                      # out of blocks: head waits
                 self._admit_request(self.queue.popleft(), b)
-        if any(s is not None for s in self.slots):
-            self._decode_step()
+        decode_rows = [b for b, s in enumerate(self.slots)
+                       if s is not None and not s.prefilling]
+        prefill_rows = [b for b, s in enumerate(self.slots)
+                        if s is not None and s.prefilling]
+        t0 = time.perf_counter()
+        if prefill_rows:
+            self._mixed_step(decode_rows, prefill_rows)
+            kind = "mixed" if decode_rows else "prefill"
+        elif decode_rows:
+            self._decode_step(decode_rows)
+            kind = "decode"
+        else:
+            return
+        self.phase_time[kind] += time.perf_counter() - t0
 
     def _blocks_needed(self, req: Request) -> int:
         """Worst-case pool blocks a request holds (padded prompt + budget)."""
@@ -379,8 +503,23 @@ class ServeEngine:
 
     @property
     def num_active(self) -> int:
-        """Slots currently decoding a request."""
+        """Slots currently holding a request (prefilling or decoding)."""
         return sum(s is not None for s in self.slots)
+
+    @property
+    def step_budget(self) -> int:
+        """Per-step token budget of the fused mixed step (see config)."""
+        return (self.scfg.step_tokens
+                or self.scfg.num_slots + 2 * self.scfg.prefill_chunk)
+
+    @property
+    def prefill_batch(self) -> int:
+        """Compact width of the fused step's chunk forward: the most
+        admitting slots one step's budget can carry (static — it shapes
+        the compiled executable)."""
+        return max(1, min(self.scfg.num_slots,
+                          (self.step_budget - self.scfg.num_slots)
+                          // self.scfg.prefill_chunk))
 
     @property
     def caches_tbl_width(self) -> int:
@@ -392,7 +531,9 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def _admit_request(self, req: Request, b: int) -> None:
-        """Reset slot ``b``, chunk-prefill the prompt, sample token 0."""
+        """Bind slot ``b`` to ``req``: reset its cache rows, plan the
+        left-padded prompt chunks, set the host mirrors. No model math —
+        the chunks stream through subsequent fused steps."""
         c = self.scfg.prefill_chunk
         plen = len(req.prompt)
         padded = padded_prompt_len(plen, c)
@@ -412,57 +553,140 @@ class ServeEngine:
         self.caches = _admit_jit(self.caches, jnp.int32(b), jnp.int32(npad),
                                  tbl_row, cfg=self.cfg, paged=self._paged,
                                  kv_bits=self.acfg.kv_bits)
-        last = None
-        for j in range(padded // c):
-            last, self.caches = _prefill_jit(
-                self.params, self.caches, jnp.int32(b),
-                jnp.asarray(toks[None, j * c:(j + 1) * c]),
-                jnp.asarray(mask[None, j * c:(j + 1) * c]),
-                jnp.int32(j * c - npad), cfg=self.cfg, acfg=self.acfg,
-                paged=self._paged)
-
-        self._pos[b], self._start[b] = padded, npad
+        self._pos[b], self._start[b] = 0, npad
         self._temp[b], self._topp[b] = req.temperature, req.top_p
         self._topk[b], self._gfirst[b] = req.top_k, req.greedy_first
         self._keys[b] = np.asarray(jax.random.PRNGKey(req.seed))
-        slot = _Slot(req)
-        self.slots[b] = slot
+        self.slots[b] = _Slot(req, toks, mask, npad, c, self._admit_seq)
+        self._admit_seq += 1
+        self._dirty = True
 
-        tok = int(np.asarray(_sample_jit(
-            last, jnp.asarray(self._keys[b:b + 1]),
-            jnp.zeros((1,), jnp.int32), jnp.asarray(self._temp[b:b + 1]),
-            jnp.asarray(self._topk[b:b + 1]), jnp.asarray(self._topp[b:b + 1]),
-            jnp.asarray(self._gfirst[b:b + 1]),
-            use_top_k=req.top_k > 0, use_top_p=req.top_p < 1.0))[0])
-        self._append_token(b, tok)
+    def _sample_flags(self) -> tuple[bool, bool]:
+        """Static sampler specialization over every in-flight request."""
+        live = [s.req for s in self.slots if s is not None]
+        return (any(r.top_k > 0 for r in live),
+                any(r.top_p < 1.0 for r in live))
 
-    def _decode_step(self) -> None:
-        """One multi-step decode block over all slots (see ``_step_jit``)."""
-        counts = np.array([s.count if s else 0 for s in self.slots], np.int32)
-        active = np.array([s is not None for s in self.slots], np.float32)
-        live = [s for s in self.slots if s is not None]
-        # largest power-of-two block that no in-flight budget can overshoot
+    def _refresh_device_state(self) -> None:
+        """Re-upload the per-slot step state from the host mirrors (only
+        called when the slot set changed since the last dispatch)."""
+        counts = np.array([s.count if s else 0 for s in self.slots],
+                          np.int32)
+        active = np.array([s is not None and not s.prefilling
+                           for s in self.slots], np.float32)
+        self._dev = {
+            "toks": jnp.asarray(self._last_tok),
+            "off": jnp.asarray(self._pos - self._start),
+            "active": jnp.asarray(active),
+            "keys": jnp.asarray(self._keys),
+            "counts": jnp.asarray(counts),
+            "temp": jnp.asarray(self._temp),
+            "topk": jnp.asarray(self._topk),
+            "topp": jnp.asarray(self._topp),
+            "gfirst": jnp.asarray(self._gfirst),
+        }
+        self._dirty = False
+
+    def _decode_args(self):
+        """The device-resident positional args shared by both step jits."""
+        d = self._dev
+        return (d["toks"], d["off"], d["active"], d["keys"], d["counts"],
+                d["temp"], d["topk"], d["topp"], d["gfirst"])
+
+    def _stash(self, toks, off, counts) -> None:
+        """Keep the updated step state device-resident for the next step."""
+        self._dev.update(toks=toks, off=off, counts=counts)
+
+    def _mixed_step(self, decode_rows: list[int],
+                    prefill_rows: list[int]) -> None:
+        """One fused step: a decode token for every decode-phase slot plus
+        as many admitting slots' prefill chunks as the token budget allows
+        (oldest admission first, floor of one chunk — see config). The
+        chunk forward runs at the compact ``prefill_batch`` width; unused
+        compact rows point at distinct filler slots with all-zero masks
+        (cache-transparent by the layers' fully-masked-row contract)."""
+        if self._dirty:
+            self._refresh_device_state()
+        c, pbw = self.scfg.prefill_chunk, self.prefill_batch
+        n_dec = len(decode_rows)
+        n_pf = int(np.clip((self.step_budget - n_dec) // c, 1,
+                           min(len(prefill_rows), pbw)))
+        pf_rows = sorted(prefill_rows,
+                         key=lambda b: self.slots[b].seq)[:n_pf]
+        # distinct filler slot ids for the unused compact rows
+        filler = [b for b in range(self.scfg.num_slots) if b not in pf_rows]
+        pf_idx = np.asarray(pf_rows + filler[:pbw - n_pf], np.int32)
+
+        pf_toks = np.zeros((pbw, c), np.int32)
+        pf_mask = np.zeros((pbw, c), np.float32)
+        pf_off = np.zeros(pbw, np.int32)
+        for i, b in enumerate(pf_rows):
+            s = self.slots[b]
+            j = s.chunk
+            pf_toks[i] = s.toks[j * c:(j + 1) * c]
+            pf_mask[i] = s.mask[j * c:(j + 1) * c]
+            pf_off[i] = j * c - s.npad
+        k = 1 if n_dec else 0
+
+        use_top_k, use_top_p = self._sample_flags()
+        dec_toks, first, toks, off, counts, self.caches = _mixed_step_jit(
+            self.params, self.caches, *self._decode_args(),
+            pf_idx=jnp.asarray(pf_idx), pf_toks=jnp.asarray(pf_toks),
+            pf_mask=jnp.asarray(pf_mask), pf_off=jnp.asarray(pf_off),
+            cfg=self.cfg, acfg=self.acfg, use_top_k=use_top_k,
+            use_top_p=use_top_p, k=k, paged=self._paged)
+        self._stash(toks, off, counts)
+
+        # host bookkeeping: chunk cursors, phase flips, decode tokens
+        if k:
+            self.mixed_steps += 1          # steps that fused both phases
+        self.prefill_chunks += len(pf_rows)
+        self.step_token_log.append((n_dec * k, len(pf_rows) * c))
+        first_host = None
+        for i, b in enumerate(pf_rows):
+            s = self.slots[b]
+            s.chunk += 1
+            self._pos[b] += c                  # the chunk advanced the row
+            if not s.prefilling:               # prompt done: first token
+                if first_host is None:
+                    first_host = np.asarray(first)
+                self._dirty = True             # row flips to decode phase
+                self._append_token(b, int(first_host[i]))
+        if k:
+            self.decode_steps += k
+            self.decode_tokens_during_admission += n_dec * k
+            self._consume_decode_tokens(np.asarray(dec_toks), decode_rows)
+
+    def _decode_step(self, decode_rows: list[int]) -> None:
+        """One multi-step decode block over all slots (no admissions in
+        flight): the largest power-of-two ``k <= decode_block`` that no
+        in-flight budget can overshoot, in a single dispatch."""
+        if self._dirty:
+            self._refresh_device_state()
+        live = [self.slots[b] for b in decode_rows]
         k = 1
         remaining = min(s.req.max_new - s.count for s in live)
         while k * 2 <= min(remaining, self.scfg.decode_block):
             k *= 2
-        toks, self.caches = _step_jit(
-            self.params, self.caches, jnp.asarray(self._last_tok),
-            jnp.asarray(self._pos - self._start), jnp.asarray(active),
-            jnp.asarray(self._keys), jnp.asarray(counts),
-            jnp.asarray(self._temp), jnp.asarray(self._topk),
-            jnp.asarray(self._topp), jnp.asarray(self._gfirst),
+        use_top_k, use_top_p = self._sample_flags()
+        dec_toks, toks, off, counts, self.caches = _step_jit(
+            self.params, self.caches, *self._decode_args(),
             cfg=self.cfg, acfg=self.acfg,
-            use_top_k=any(s.req.top_k > 0 for s in live),
-            use_top_p=any(s.req.top_p < 1.0 for s in live), k=k)
-        toks = np.asarray(toks)                       # [k, B]
-        self._pos += k           # every row wrote one token per scan step
+            use_top_k=use_top_k, use_top_p=use_top_p, k=k)
+        self._stash(toks, off, counts)
         self.decode_steps += k
-        for i in range(k):
-            for b in range(self.scfg.num_slots):
-                # slots going None mid-block stop consuming their rows
-                # (tokens past a stop condition are discarded)
+        self.step_token_log.append((len(decode_rows) * k, 0))
+        self._consume_decode_tokens(np.asarray(dec_toks), decode_rows)
+
+    def _consume_decode_tokens(self, toks: np.ndarray,
+                               decode_rows: list[int]) -> None:
+        """Append a ``[k, B]`` decode block's tokens to their requests.
+        Slots going None mid-block stop consuming their rows (tokens past
+        a stop condition are discarded)."""
+        for i in range(toks.shape[0]):
+            for b in decode_rows:
                 if self.slots[b] is not None:
+                    self._pos[b] += 1
                     self._append_token(b, int(toks[i, b]))
 
     def _append_token(self, b: int, tok: int) -> None:
@@ -475,6 +699,7 @@ class ServeEngine:
             self.results[slot.req.uid] = np.array(slot.out, np.int32)
             self.finished_at[slot.req.uid] = time.perf_counter()
             self.slots[b] = None
+            self._dirty = True
             if self.pool is not None:
                 # Blocks go back to the free list, and the slot's block
                 # table is pointed at the reserved sink block: the retired

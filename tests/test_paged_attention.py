@@ -1,11 +1,12 @@
-"""Paged flash-decode attention: kernel/oracle/dense differential suite.
+"""Paged attention: kernel/oracle/dense differential suites.
 
-Three-way parity at the decode seam: the Pallas flash-decode kernel
-(interpret-mode on CPU) vs the ``lax.scan`` oracle
-(``kernels.ref.paged_decode_ref``) vs a dense full-buffer softmax over the
-gathered logical view — across fill ratios, GQA group sizes, split-K
-factors, and the int8-quantized pool. Plus the KV quantization helpers and
-the host-side free-list allocator.
+Three-way parity at both serving seams: the Pallas flash-decode and
+flash-prefill kernels (interpret-mode on CPU) vs their ``lax.scan`` oracles
+(``kernels.ref.paged_decode_ref`` / ``paged_prefill_ref``) vs a dense
+full-buffer softmax over the gathered logical view — across fill ratios,
+GQA group sizes, chunk lengths, split-K factors, and the int8-quantized
+pool. Plus the KV quantization helpers and the host-side free-list
+allocator.
 """
 
 import jax
@@ -16,6 +17,7 @@ import pytest
 from repro.core import quant
 from repro.kernels import dispatch, ref
 from repro.kernels.paged_attention import paged_flash_decode
+from repro.kernels.paged_prefill import paged_flash_prefill
 from repro.serve.kv_pool import SINK_BLOCK, KVPool, OutOfBlocksError
 
 
@@ -122,6 +124,133 @@ def test_dispatch_routing():
         q, kp, vp, tbl, pos, start, scale, impl="kernel")
     np.testing.assert_array_equal(np.asarray(auto), np.asarray(forced_ref))
     np.testing.assert_allclose(np.asarray(forced_kernel), np.asarray(auto),
+                               atol=2e-6, rtol=2e-6)
+
+
+def _setup_prefill(seed, bsz, s, nq, nkv, hd, bs, nb):
+    """Random pool + tables + ragged chunk cursors for the prefill seam.
+
+    ``pos`` is the logical position of each row's *first* query column;
+    the chunk's own K/V are assumed already in the pool (the engine
+    scatter-writes before scoring), so ``pos + s - 1`` stays in range."""
+    rng = np.random.default_rng(seed)
+    npool = bsz * nb + 1
+    q = jnp.asarray(rng.normal(size=(bsz, s, nq, hd)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(npool, bs, nkv, hd)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(npool, bs, nkv, hd)).astype(np.float32))
+    tbl = jnp.asarray(
+        (1 + rng.permutation(bsz * nb)).reshape(bsz, nb).astype(np.int32))
+    pos = jnp.asarray(rng.integers(0, nb * bs - s + 1, bsz).astype(np.int32))
+    start = jnp.asarray((np.asarray(pos) * rng.random(bsz) * 0.7)
+                        .astype(np.int32))
+    return q, kp, vp, tbl, pos, start
+
+
+def _dense_prefill_reference(q, kp, vp, tbl, pos, start, scale):
+    """Per-column dense softmax over the gathered logical view (numpy):
+    column ``i`` of row ``b`` attends ``start[b] <= j <= pos[b] + i``."""
+    bsz, s, nq, hd = q.shape
+    bs, nkv = kp.shape[1], kp.shape[2]
+    out = np.zeros((bsz, s, nq, hd), np.float32)
+    for b in range(bsz):
+        kk = np.asarray(kp)[np.asarray(tbl)[b]].reshape(-1, nkv, hd)
+        vv = np.asarray(vp)[np.asarray(tbl)[b]].reshape(-1, nkv, hd)
+        j = np.arange(kk.shape[0])
+        for i in range(s):
+            live = (j >= int(start[b])) & (j <= int(pos[b]) + i)
+            qg = np.asarray(q)[b, i].reshape(nkv, nq // nkv, hd)
+            lo = np.einsum("ngh,tnh->ngt", qg, kk) * scale
+            lo[:, :, ~live] = -1e30
+            p = np.exp(lo - lo.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[b, i] = np.einsum("ngt,tnh->ngh", p, vv).reshape(nq, hd)
+    return out
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, S, H, KV, hd, block, num_blocks)
+    (1, 4, 4, 4, 8, 4, 3),      # MHA, single row
+    (3, 5, 8, 2, 16, 4, 6),     # GQA group 4, odd chunk
+    (2, 8, 6, 1, 32, 8, 4),     # MQA, chunk spanning 2 blocks
+    (2, 16, 8, 4, 16, 16, 3),   # chunk == block
+])
+def test_prefill_ref_matches_dense(shape):
+    """The online-softmax prefill oracle must reproduce the per-column
+    dense softmax over the gathered view at every ragged (start, pos)."""
+    bsz, s, nq, nkv, hd, bs, nb = shape
+    q, kp, vp, tbl, pos, start = _setup_prefill(10, bsz, s, nq, nkv, hd,
+                                                bs, nb)
+    scale = hd ** -0.5
+    got = ref.paged_prefill_ref(q, kp, vp, tbl, pos, start, scale)
+    want = _dense_prefill_reference(q, kp, vp, tbl, pos, start, scale)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    (3, 5, 8, 2, 16, 4, 6),
+    (2, 4, 4, 4, 8, 4, 8),
+    (1, 16, 8, 4, 16, 8, 4),
+])
+def test_prefill_kernel_matches_ref(shape):
+    """Pallas flash-prefill kernel (interpret) ≡ scan oracle — identical
+    block-loop accumulation order, so the comparison is bitwise."""
+    bsz, s, nq, nkv, hd, bs, nb = shape
+    q, kp, vp, tbl, pos, start = _setup_prefill(11, bsz, s, nq, nkv, hd,
+                                                bs, nb)
+    scale = hd ** -0.5
+    want = ref.paged_prefill_ref(q, kp, vp, tbl, pos, start, scale)
+    got = paged_flash_prefill(q, kp, vp, tbl, pos, start, scale=scale,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_prefill_kernel_matches_ref_int8():
+    """Quantized-pool prefill parity: kernel and oracle dequantize
+    identically; the int8 result stays near the fp path."""
+    bsz, s, nq, nkv, hd, bs, nb = 3, 5, 8, 2, 16, 4, 6
+    q, kp, vp, tbl, pos, start = _setup_prefill(12, bsz, s, nq, nkv, hd,
+                                                bs, nb)
+    scale = hd ** -0.5
+    kq, ks = quant.kv_quantize(kp, 8)
+    vq, vs = quant.kv_quantize(vp, 8)
+    want = ref.paged_prefill_ref(q, kq, vq, tbl, pos, start, scale,
+                                 k_scale=ks, v_scale=vs)
+    got = paged_flash_prefill(q, kq, vq, tbl, pos, start, scale=scale,
+                              k_scale=ks, v_scale=vs, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+    fp = ref.paged_prefill_ref(q, kp, vp, tbl, pos, start, scale)
+    assert float(jnp.max(jnp.abs(want - fp))) < 0.1   # bounded divergence
+
+
+def test_prefill_dispatch_routing():
+    """impl overrides force either implementation; auto picks the oracle
+    off-TPU. Results agree regardless of route."""
+    q, kp, vp, tbl, pos, start = _setup_prefill(13, 2, 4, 4, 2, 8, 4, 3)
+    scale = 8 ** -0.5
+    auto = dispatch.paged_prefill_attention(q, kp, vp, tbl, pos, start,
+                                            scale)
+    forced_ref = dispatch.paged_prefill_attention(
+        q, kp, vp, tbl, pos, start, scale, impl="ref")
+    forced_kernel = dispatch.paged_prefill_attention(
+        q, kp, vp, tbl, pos, start, scale, impl="kernel")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(forced_ref))
+    np.testing.assert_allclose(np.asarray(forced_kernel), np.asarray(auto),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_prefill_last_column_matches_decode():
+    """Seam consistency: a chunk's last column must score exactly like a
+    decode step at the same cursor (same pool, pos' = pos + S - 1)."""
+    bsz, s, nq, nkv, hd, bs, nb = 2, 4, 8, 2, 16, 4, 6
+    q, kp, vp, tbl, pos, start = _setup_prefill(14, bsz, s, nq, nkv, hd,
+                                                bs, nb)
+    scale = hd ** -0.5
+    chunk = ref.paged_prefill_ref(q, kp, vp, tbl, pos, start, scale)
+    dec = ref.paged_decode_ref(q[:, -1], kp, vp, tbl, pos + s - 1, start,
+                               scale)
+    np.testing.assert_allclose(np.asarray(chunk[:, -1]), np.asarray(dec),
                                atol=2e-6, rtol=2e-6)
 
 

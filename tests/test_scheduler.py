@@ -271,6 +271,103 @@ def test_paged_int8_kv_engine():
         assert out[i][0] == fp[i][0]
 
 
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_piggybacked_prefill_parity(arch, paged):
+    """A request whose multi-chunk prompt streams in via fused mixed steps
+    (other slots decoding throughout) must produce bit-identical greedy
+    tokens to the same request run solo — across all four families, on
+    both cache layouts — and decode tokens must keep flowing during the
+    admission window (decode never fully stalls on prefill)."""
+    cfg, params, labels = _build(arch, seed=2)
+    acfg = AnalogConfig(mode="off")
+    scfg = SchedulerConfig(num_slots=3, max_len=48, prefill_chunk=4,
+                           decode_block=4, paged=paged, kv_block_size=4)
+    # prompt spans 3 chunks -> at least 3 mixed steps of piggybacking
+    target = Request(uid=99, prompt=_prompt(cfg, 11), max_new=6,
+                     temperature=0.0)
+    solo = ServeEngine(params, cfg, acfg, scfg).run([target])[99]
+
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    for i in range(2):
+        eng.submit(Request(uid=i, prompt=_prompt(cfg, 3 + i, seed=i),
+                           max_new=12, temperature=0.0))
+    for _ in range(3):
+        eng.step()                    # fillers prefilled + decoding
+    assert eng.decode_steps > 0
+    eng.submit(target)                # chunks piggyback on the decode batch
+    out = eng.run()
+    np.testing.assert_array_equal(solo, out[99])
+    assert sorted(out.keys()) == [0, 1, 99]
+    # the admission window overlapped decode: mixed steps carried both
+    # phases and emitted decode tokens while the target was mid-prefill
+    assert eng.mixed_steps >= 3
+    assert eng.decode_tokens_during_admission > 0
+
+
+def test_token_budget_split_and_no_starvation():
+    """The fused step must respect ``step_tokens`` — one decode token per
+    decode slot plus at most ``(budget - n_dec) // chunk`` prefill chunks
+    — while guaranteeing both phases progress every step (floor of one
+    chunk; decode rows always advance)."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    chunk = 4
+    # budget of 8: with 4 decode slots only one 4-token chunk fits per step
+    scfg = SchedulerConfig(num_slots=4, max_len=48, prefill_chunk=chunk,
+                           step_tokens=8)
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=_prompt(cfg, 3 + i, seed=i),
+                           max_new=10, temperature=0.0))
+    eng.run()
+    # follow-up wave admitted while the first four decode
+    eng2 = ServeEngine(params, cfg, acfg, scfg)
+    for i in range(4):
+        eng2.submit(Request(uid=i, prompt=_prompt(cfg, 3, seed=i),
+                            max_new=14, temperature=0.0))
+    for _ in range(4):
+        eng2.step()
+    for i in range(4, 8):             # two admitting while four decode
+        eng2.submit(Request(uid=i, prompt=_prompt(cfg, 9, seed=i),
+                            max_new=4, temperature=0.0))
+    eng2.run()
+    assert sorted(eng2.results.keys()) == list(range(8))
+    mixed = [(d, p) for d, p in eng2.step_token_log if d and p]
+    assert mixed, "no step carried both phases"
+    for d, p in eng2.step_token_log:
+        # budget respected up to the no-starvation floor of one chunk
+        assert d + p <= max(scfg.step_tokens, d + chunk)
+        if p:
+            assert p % chunk == 0 and p // chunk <= max(
+                1, (scfg.step_tokens - d) // chunk)
+
+
+def test_device_state_refresh_only_on_slot_changes():
+    """Steady-state decode blocks must not re-upload the per-slot sampling
+    state: the device-state dict is rebuilt only when the slot set
+    changes (admission / phase flip / retirement)."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    scfg = SchedulerConfig(num_slots=2, max_len=32, prefill_chunk=4,
+                           decode_block=2)
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    eng.submit(Request(uid=0, prompt=_prompt(cfg, 3), max_new=12,
+                       temperature=0.0))
+    eng.step()                         # prefill chunk (admission: dirty)
+    eng.step()                         # first decode block: refresh
+    assert not eng._dirty
+    sticky = eng._dev["temp"]
+    eng.step()                         # steady-state: no rebuild
+    assert eng._dev["temp"] is sticky  # same device buffer, not re-uploaded
+    out = eng.run()
+    np.testing.assert_array_equal(
+        out[0],
+        ServeEngine(params, cfg, acfg, scfg).run(
+            [Request(uid=0, prompt=_prompt(cfg, 3), max_new=12,
+                     temperature=0.0)])[0])
+
+
 def test_sample_candidates_multi_token_extraction():
     """sample_candidates on the engine: multi-token generation with a
     task-level extraction hook yields [num_prompts, n] answers."""

@@ -15,16 +15,25 @@ regressed by more than ``--threshold`` (default 15%):
   absolute floor gets its own, looser ``--abs-threshold`` (default 50%):
   wide enough to absorb runner-class variance, tight enough to catch a
   real order-of-magnitude regression;
-* hard invariants: ``admission_parity`` must hold, and (when present)
-  ``kv_cache.int8_divergence_ok`` and the >= 2x ``bytes_reduction``;
-* with ``--attn BENCH_attn.json``, the decode-attention microbench
-  invariants too: paged cost must scale with live tokens and beat
+* hard invariants: ``admission_parity`` must hold; the fresh run's
+  ``paged_speedup_vs_static`` must be >= ``--paged-floor`` (default 1.0 —
+  the paged engine must beat the static baseline end-to-end, prefill
+  included); every continuous engine row reporting
+  ``decode_tokens_during_admission`` must show it nonzero (decode kept
+  flowing while prompts streamed in — the fused-chunked-prefill
+  contract); and (when present) ``kv_cache.int8_divergence_ok`` and the
+  >= 2x ``bytes_reduction``;
+* with ``--attn BENCH_attn.json``, the paged-attention microbench
+  invariants too: paged decode cost must scale with live tokens and beat
   full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
-  fill — the guard that catches the paged read silently degrading back
-  to O(max_len).
+  fill, and the paged flash-prefill read must likewise scale and beat
+  the gathered-logical-view path by >= ``--attn-prefill-floor`` (default
+  1.1x) — the guards that catch either paged read silently degrading
+  back to O(max_len).
 
     python tools/check_perf_regression.py BASELINE.json FRESH.json \
-        [--threshold 0.15] [--abs-threshold 0.5] [--attn BENCH_attn.json]
+        [--threshold 0.15] [--abs-threshold 0.5] [--paged-floor 1.0] \
+        [--attn BENCH_attn.json]
 """
 
 from __future__ import annotations
@@ -44,7 +53,7 @@ def _get(d: dict, dotted: str):
 
 
 def check(baseline: dict, fresh: dict, threshold: float,
-          abs_threshold: float) -> list[str]:
+          abs_threshold: float, paged_floor: float = 1.0) -> list[str]:
     """Return a list of failure strings (empty = pass)."""
     fails = []
     metrics = {"speedup_tokens_per_s": threshold,
@@ -63,6 +72,29 @@ def check(baseline: dict, fresh: dict, threshold: float,
                          f"(baseline {base}, threshold {thr:.0%})")
     if not _get(fresh, "admission_parity"):
         fails.append("admission_parity is false in the fresh run")
+    pvs = _get(fresh, "paged_speedup_vs_static")
+    if pvs is not None:
+        print(f"[perf] paged_speedup_vs_static: {pvs} "
+              f"(floor {paged_floor})")
+        if pvs < paged_floor:
+            fails.append(f"paged engine slower than the static baseline: "
+                         f"paged_speedup_vs_static {pvs} < {paged_floor}")
+    for row in ("continuous", "paged"):
+        dta = _get(fresh, f"{row}.decode_tokens_during_admission")
+        chunks = _get(fresh, f"{row}.prefill_chunks")
+        # gate on admission having happened at all (prefill chunks ran),
+        # NOT on mixed_steps — a regressed engine that stalls decode and
+        # runs prefill-only steps reports mixed_steps == 0, exactly the
+        # case this invariant exists to catch (the bench workloads queue
+        # more requests than slots, so admission always overlaps decode
+        # on a healthy fused engine)
+        if dta is not None and chunks:
+            print(f"[perf] {row}.decode_tokens_during_admission: {dta} "
+                  f"({chunks} prefill chunks)")
+            if dta <= 0:
+                fails.append(f"{row} engine stalled decode during "
+                             f"admission windows (0 decode tokens across "
+                             f"{chunks} prefill chunks)")
     kv = _get(fresh, "kv_cache")
     if kv is not None:
         if not kv.get("int8_divergence_ok"):
@@ -74,8 +106,9 @@ def check(baseline: dict, fresh: dict, threshold: float,
     return fails
 
 
-def check_attn(attn: dict, floor: float) -> list[str]:
-    """Gate the decode-attention microbench invariants (see module doc)."""
+def check_attn(attn: dict, floor: float,
+               prefill_floor: float = 1.1) -> list[str]:
+    """Gate the paged-attention microbench invariants (see module doc)."""
     fails = []
     got = attn.get("speedup_at_low_fill", 0.0)
     print(f"[perf] attn.speedup_at_low_fill: {got} (floor {floor})")
@@ -85,6 +118,17 @@ def check_attn(attn: dict, floor: float) -> list[str]:
     if not attn.get("scales_with_live_tokens"):
         fails.append("paged decode-attention cost no longer scales with "
                      "live tokens (lowest fill not cheaper than full)")
+    pf = attn.get("prefill_speedup_at_low_fill")
+    if pf is not None:
+        print(f"[perf] attn.prefill_speedup_at_low_fill: {pf} "
+              f"(floor {prefill_floor})")
+        if pf < prefill_floor:
+            fails.append(f"paged flash-prefill speedup over the gathered "
+                         f"logical view at <=25% fill is {pf}, below the "
+                         f"{prefill_floor}x floor")
+        if not attn.get("prefill_scales_with_live_tokens"):
+            fails.append("paged flash-prefill cost no longer scales with "
+                         "live tokens (lowest fill not cheaper than full)")
     return fails
 
 
@@ -99,21 +143,29 @@ def main() -> int:
     ap.add_argument("--abs-threshold", type=float, default=0.5,
                     help="max allowed regression of absolute tokens/s "
                          "(loose: the baseline machine differs from CI)")
+    ap.add_argument("--paged-floor", type=float, default=1.0,
+                    help="min fresh paged_speedup_vs_static (the paged "
+                         "engine must beat static end-to-end)")
     ap.add_argument("--attn", default=None,
                     help="fresh BENCH_attn.json to gate the paged "
-                         "decode-attention invariants on")
+                         "attention invariants on")
     ap.add_argument("--attn-floor", type=float, default=1.5,
-                    help="min paged speedup over full-buffer scoring at "
-                         "<=25%% cache fill")
+                    help="min paged decode speedup over full-buffer "
+                         "scoring at <=25%% cache fill")
+    ap.add_argument("--attn-prefill-floor", type=float, default=1.1,
+                    help="min paged flash-prefill speedup over the "
+                         "gathered-logical-view path at <=25%% fill")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    fails = check(baseline, fresh, args.threshold, args.abs_threshold)
+    fails = check(baseline, fresh, args.threshold, args.abs_threshold,
+                  args.paged_floor)
     if args.attn:
         with open(args.attn) as f:
-            fails += check_attn(json.load(f), args.attn_floor)
+            fails += check_attn(json.load(f), args.attn_floor,
+                                args.attn_prefill_floor)
     for msg in fails:
         print(f"[perf] FAIL: {msg}")
     if not fails:
