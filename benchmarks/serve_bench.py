@@ -33,6 +33,15 @@ from the engines' actual device buffers (contiguous fp32 vs paged int8,
 reduction must be >= 2x) and the int8 bounded-divergence eval (greedy
 first-token match + prefix agreement vs the fp32 paged engine).
 
+And the ``prefix_cache`` section: a **shared-prefix workload** (bimodal
+prompt lengths, groups of requests sharing a 64-token header — the
+system-prompt / few-shot-eval traffic shape) served **cold** (prefix
+cache off) and **warm** (prefix cache on, index populated by a priming
+pass) on the paged engine. Reports both rows, the warm/cold speedup
+(CI gates >= 1.3x via ``tools/check_perf_regression.py --prefix-floor``),
+the hit/skipped-token telemetry, retained-block and eviction counts, and
+the cold==warm greedy-parity flag (bitwise, a hard invariant).
+
 Both paths run once untimed (to compile every executable) and once timed.
 Emits ``BENCH_serve.json`` with useful-token throughput and p50/p99 request
 latency for both engines, the speedup, and the result of the scheduler's
@@ -57,12 +66,13 @@ from repro.core.analog import AnalogConfig
 from repro.models import build
 from repro.serve.decode import generate
 from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
-                                   required_max_len)
+                                   padded_prompt_len, required_max_len)
 
 from benchmarks import common
 
 # attention KV leaves by cache layout (cache-bytes accounting)
-_KV_LEAVES = {False: ("k", "v"), True: ("kp", "vp", "ks", "vs", "tbl")}
+_KV_LEAVES = {False: ("k", "v"),
+              True: ("kp", "vp", "ks", "vs", "tbl", "wtbl")}
 
 
 def bench_arch(d_model: int = 320, num_layers: int = 6) -> ArchConfig:
@@ -92,6 +102,34 @@ def make_workload(num_requests: int, max_prompt: int, max_new: int,
         reqs.append(Request(
             uid=i, prompt=rng.integers(0, 2048, plen).astype(np.int32),
             max_new=budget, temperature=0.8, seed=seed + i))
+    return reqs
+
+
+def make_shared_prefix_workload(num_groups: int = 2, per_group: int = 8,
+                                header: int = 64, seed: int = 11,
+                                vocab: int = 2048) -> list[Request]:
+    """Shared-prefix requests: ``per_group`` prompts per shared 64-token
+    header, bimodal total lengths and decode budgets.
+
+    Groups alternate between short and long prompts (every prompt in a
+    group has the same length, so left-pad geometry — and therefore RoPE
+    positions — line up and the header blocks are genuinely shareable);
+    budgets are bimodal the same way serving traffic is. Greedy
+    (temperature 0) so the cold and warm passes are bitwise comparable.
+    """
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for g in range(num_groups):
+        hdr = rng.integers(0, vocab, header)
+        plen = 72 if g % 2 == 0 else 88
+        for i in range(per_group):
+            prompt = np.concatenate(
+                [hdr, rng.integers(0, vocab, plen - header)]
+            ).astype(np.int32)
+            uid = g * per_group + i
+            reqs.append(Request(
+                uid=uid, prompt=prompt, max_new=12 if i % 4 == 0 else 4,
+                temperature=0.0, seed=seed + uid))
     return reqs
 
 
@@ -130,18 +168,27 @@ def run_static(params, cfg, acfg, reqs, num_slots):
 
 
 def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
-                   paged=False, kv_block_size=16):
-    """Continuous batching. Returns (wall_s, latencies_s, tokens, engine)."""
-    max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
-                  for r in reqs)
-    eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
-        num_slots=num_slots, max_len=max_len, prefill_chunk=prefill_chunk,
-        paged=paged, kv_block_size=kv_block_size))
+                   paged=False, kv_block_size=16, prefix_cache=False,
+                   kv_blocks=0, engine=None):
+    """Continuous batching. Returns (wall_s, latencies_s, tokens, engine).
+
+    Pass ``engine`` to time a workload on an existing engine (the warm
+    prefix-cache pass reuses the primed engine so its block index
+    survives between passes)."""
+    eng = engine
+    if eng is None:
+        max_len = max(required_max_len(len(r.prompt), r.max_new,
+                                       prefill_chunk) for r in reqs)
+        eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
+            num_slots=num_slots, max_len=max_len,
+            prefill_chunk=prefill_chunk, paged=paged,
+            kv_block_size=kv_block_size, prefix_cache=prefix_cache,
+            kv_blocks=kv_blocks))
     t0 = time.perf_counter()
     results = eng.run(reqs)
     wall = time.perf_counter() - t0
     lats = [eng.finished_at[r.uid] - t0 for r in reqs]
-    return wall, lats, sum(len(v) for v in results.values()), eng
+    return wall, lats, sum(len(results[r.uid]) for r in reqs), eng
 
 
 def engine_phase_stats(eng) -> dict:
@@ -192,6 +239,80 @@ def int8_divergence_check(params, cfg, reqs, num_slots, prefill_chunk):
     return float(np.mean(first)), float(np.mean(prefix))
 
 
+def prefix_cache_bench(params, cfg, acfg, num_slots,
+                       prefill_chunk) -> dict:
+    """Cold-vs-warm shared-prefix rows on the paged engine.
+
+    *cold* — prefix cache disabled, every request prefills its whole
+    prompt. *warm* — prefix cache enabled and the index populated by an
+    untimed priming pass of the same workload (which doubles as the
+    compile warm-up for the warm pool geometry), then the workload is
+    re-served: every prompt's blocks are LRU-retained, so prefill
+    collapses to the mandatory final chunk. Cold and warm are greedy and
+    must match bitwise (``cold_warm_greedy_parity`` — a CI invariant
+    alongside the >= 1.3x ``warm_speedup_vs_cold`` floor).
+    """
+    reqs = make_shared_prefix_workload(num_groups=2, per_group=8)
+    bs = 16
+    max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
+                  for r in reqs)
+    # pool headroom: slot capacity + every distinct prompt's blocks, so
+    # the warm pass never evicts what the priming pass cached
+    kv_blocks = (num_slots + len(reqs)) * -(-max_len // bs)
+
+    # cold: compile warm-up pass, then best-of-2 timed runs (single
+    # samples on shared CI runners are noisy enough to flip the gate)
+    run_continuous(params, cfg, acfg, list(reqs), num_slots, prefill_chunk,
+                   paged=True, kv_block_size=bs)
+    c_wall, c_lats, c_tok, c_eng = min(
+        (run_continuous(params, cfg, acfg, list(reqs), num_slots,
+                        prefill_chunk, paged=True, kv_block_size=bs)
+         for _ in range(2)), key=lambda r: r[0])
+
+    # warm: prime (untimed — populates index + compiles the geometry),
+    # then best-of-2 re-serves of the same prompts on the same engine
+    _, _, _, w_eng = run_continuous(
+        params, cfg, acfg, list(reqs), num_slots, prefill_chunk,
+        paged=True, kv_block_size=bs, prefix_cache=True,
+        kv_blocks=kv_blocks)
+    prime_hits = w_eng.prefix_hit_tokens
+    prime_skipped = w_eng.prefix_skipped_tokens
+    runs = []
+    for rep in range(1, 3):
+        warm_reqs = [dataclasses.replace(r, uid=r.uid + 1000 * rep)
+                     for r in reqs]
+        runs.append(run_continuous(params, cfg, acfg, warm_reqs,
+                                   num_slots, prefill_chunk, engine=w_eng))
+    w_wall, w_lats, w_tok, w_eng = min(runs, key=lambda r: r[0])
+
+    parity = all(
+        np.array_equal(c_eng.results[r.uid],
+                       w_eng.results[r.uid + 1000 * rep])
+        for r in reqs for rep in (1, 2))
+    # hit/skip accounting is over padded prompt positions (the cache's
+    # unit of work); telemetry accumulated over both warm reps -> per pass
+    prompt_tokens = sum(padded_prompt_len(len(r.prompt), prefill_chunk)
+                        for r in reqs)
+    warm_hits = (w_eng.prefix_hit_tokens - prime_hits) // len(runs)
+    warm_skipped = ((w_eng.prefix_skipped_tokens - prime_skipped)
+                    // len(runs))
+    return {
+        "workload": {"num_requests": len(reqs), "shared_header": 64,
+                     "per_group": 8, "prompt_tokens": prompt_tokens},
+        "cold": summarize(c_wall, c_lats, c_tok),
+        "warm": summarize(w_wall, w_lats, w_tok),
+        "warm_speedup_vs_cold": round((w_tok / w_wall) / (c_tok / c_wall),
+                                      3),
+        "prime_hit_tokens": int(prime_hits),
+        "warm_hit_tokens": int(warm_hits),
+        "warm_skipped_prefill_tokens": int(warm_skipped),
+        "warm_hit_rate": round(warm_hits / prompt_tokens, 3),
+        "cached_blocks": int(w_eng.pool.num_cached),
+        "evictions": int(w_eng.pool.evictions),
+        "cold_warm_greedy_parity": bool(parity),
+    }
+
+
 def parity_check(params, cfg, acfg, num_slots, prefill_chunk) -> bool:
     """Acceptance check: a request admitted mid-batch at step k produces
     exactly the tokens it produces running solo."""
@@ -230,17 +351,24 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
     acfg = AnalogConfig(mode="off")
     reqs = make_workload(num_requests, max_prompt, max_new)
 
-    # untimed warm-up pass compiles every executable all three paths use
+    # untimed warm-up pass compiles every executable all three paths use;
+    # the timed rows are best-of-2 (single samples on shared runners are
+    # noisy enough to flip the ratio gates)
     run_static(params, cfg, acfg, reqs, num_slots)
     run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk)
     run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
                    paged=True)
 
-    s_wall, s_lats, s_tok = run_static(params, cfg, acfg, reqs, num_slots)
-    c_wall, c_lats, c_tok, c_eng = run_continuous(
-        params, cfg, acfg, reqs, num_slots, prefill_chunk)
-    p_wall, p_lats, p_tok, p_eng = run_continuous(
-        params, cfg, acfg, reqs, num_slots, prefill_chunk, paged=True)
+    s_wall, s_lats, s_tok = min(
+        (run_static(params, cfg, acfg, reqs, num_slots) for _ in range(2)),
+        key=lambda r: r[0])
+    c_wall, c_lats, c_tok, c_eng = min(
+        (run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk)
+         for _ in range(2)), key=lambda r: r[0])
+    p_wall, p_lats, p_tok, p_eng = min(
+        (run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
+                        paged=True) for _ in range(2)),
+        key=lambda r: r[0])
     parity = parity_check(params, cfg, acfg, num_slots, prefill_chunk)
 
     # cache-bytes accounting + int8 bounded-divergence eval
@@ -255,6 +383,8 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                                    SchedulerConfig(paged=True, **geo))
     first_match, prefix_agree = int8_divergence_check(
         params, cfg, reqs[:6], num_slots, prefill_chunk)
+    prefix = prefix_cache_bench(params, cfg, acfg, num_slots,
+                                prefill_chunk)
 
     result = {
         "workload": {"num_requests": num_requests, "max_prompt": max_prompt,
@@ -282,6 +412,7 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
             "int8_divergence_ok": bool(first_match >= 0.99
                                        and prefix_agree >= 0.5),
         },
+        "prefix_cache": prefix,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -295,6 +426,15 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                      f"tok_s={result['paged']['tokens_per_s']} "
                      f"steps={p_eng.decode_steps} "
                      f"phase={result['paged']['phase_s']}")
+    common.bench_row(
+        "serve.prefix", 0.0,
+        f"cold_tok_s={prefix['cold']['tokens_per_s']} "
+        f"warm_tok_s={prefix['warm']['tokens_per_s']} "
+        f"warm_speedup={prefix['warm_speedup_vs_cold']} "
+        f"hit_tokens={prefix['warm_hit_tokens']} "
+        f"cached_blocks={prefix['cached_blocks']} "
+        f"evictions={prefix['evictions']} "
+        f"parity={prefix['cold_warm_greedy_parity']}")
     kv = result["kv_cache"]
     common.bench_row(
         "serve.claims", 0.0,
@@ -304,7 +444,8 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
         f"decode_during_admission="
         f"{result['paged']['decode_tokens_during_admission']} "
         f"kv_bytes_reduction={kv['bytes_reduction']} "
-        f"int8_ok={kv['int8_divergence_ok']}")
+        f"int8_ok={kv['int8_divergence_ok']} "
+        f"prefix_warm_wins={prefix['warm_speedup_vs_cold'] >= 1.3}")
     return result
 
 

@@ -35,6 +35,20 @@ Shape/masking contract (mirrors ``layers._paged_slot_attention``):
 ``kernels.dispatch.paged_prefill_attention`` routes between the two. No
 split-K dimension: a chunk already gives each row ``S * H`` independent
 softmax lanes, so rows alone fill the chip at serving batch sizes.
+
+Write-protection contract (prefix caching, PR 5): this kernel only ever
+*reads* the pool — the chunk's K/V were scattered by the caller
+(``layers._paged_slot_attention``) before it runs, and that scatter
+resolves physical blocks through the per-slot *write* table ``wtbl``,
+not the read table ``tbl`` this kernel consumes. When the scheduler maps
+a slot onto shared prefix-hit blocks it points their ``wtbl`` entries at
+the reserved sink block, so a chunk re-scoring a cached region (its
+per-row ``pos`` cursor starts past the hit; the re-run region's rewrites
+are bitwise-identical and safely dropped) can never corrupt blocks other
+slots read — mirroring the PR 4 fully-masked-row sink-redirect contract.
+The kernel needs no change for prefix caching precisely because its
+``pos``/``start`` cursors already score chunks at arbitrary offsets
+against arbitrary block mappings.
 """
 
 from __future__ import annotations

@@ -5,7 +5,11 @@ restore/construct a model, optionally apply one simulated chip programming
 (hw noise) or RTN-quantize for digital hardware (unfused, fused, or
 packed-int4), and serve a mixed-length request workload through the
 continuous-batching scheduler (``--engine static`` falls back to the
-legacy pad-to-max ``generate`` loop for comparison).
+legacy pad-to-max ``generate`` loop for comparison). Paged engines run
+with the radix prefix cache by default (``--no-prefix-cache`` to
+disable; ``--cache-salt`` segregates index entries per deployment) and
+report hit rate, skipped prefill tokens, retained blocks and evictions
+in the per-run line.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama-3.2-1b \
         --reduced --deploy analog_hw --num-requests 8
@@ -104,6 +108,17 @@ def main():
     ap.add_argument("--kv-bits", type=int, default=0, choices=[0, 8],
                     help="8 = int8 KV pool with per-token/head scales "
                          "(paged mode; 2-4x fewer cache bytes)")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="radix prefix caching on the paged pool: "
+                         "admissions reuse content-matching KV blocks, "
+                         "retired prompts stay LRU-cached "
+                         "(--no-prefix-cache frees blocks eagerly)")
+    ap.add_argument("--cache-salt", type=int, default=0,
+                    help="salt folded into every prefix-cache block key "
+                         "— segregates entries whose KV would differ for "
+                         "reasons outside the token ids (deployment "
+                         "config, tenancy)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -154,22 +169,33 @@ def main():
         num_slots=args.num_slots, max_len=max_len, prefill_chunk=chunk,
         step_tokens=args.step_tokens, cache_dtype=cache_dtype,
         paged=args.paged, kv_block_size=args.kv_block_size,
-        kv_blocks=args.kv_blocks))
+        kv_blocks=args.kv_blocks, prefix_cache=args.prefix_cache,
+        cache_salt=args.cache_salt))
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
     lats = sorted(eng.finished_at[r.uid] - t0 for r in reqs)
-    # report what the engine actually runs (SSM stacks have no KV to page)
+    # report what the engine actually runs (SSM stacks have no KV to
+    # page; hybrid stacks page but cannot prefix-match past SSM state)
     mode = ("paged" + ("-int8" if acfg.kv_bits == 8 else "")
             if eng.pool is not None else "contiguous")
+    if eng.prefix_enabled:
+        hit_rate = (eng.prefix_hits / eng.prefix_lookups
+                    if eng.prefix_lookups else 0.0)
+        prefix = (f", prefix cache: {hit_rate:.0%} hit rate, "
+                  f"{eng.prefix_skipped_tokens} prefill tokens skipped, "
+                  f"{eng.pool.num_cached} blocks retained, "
+                  f"{eng.pool.evictions} evictions")
+    else:
+        prefix = ""
     print(f"[serve] continuous ({mode} kv, {args.cache_dtype}): {total} "
           f"tokens across {len(reqs)} "
           f"mixed-length requests in {dt:.2f}s ({total / dt:.1f} tok/s, "
           f"{eng.decode_steps} decode steps, {eng.mixed_steps} fused "
           f"mixed steps, {eng.decode_tokens_during_admission} decode "
           f"tokens emitted during admission, "
-          f"p50 latency {lats[len(lats) // 2] * 1e3:.0f}ms); "
+          f"p50 latency {lats[len(lats) // 2] * 1e3:.0f}ms{prefix}); "
           f"sample: {results[0][:8]}")
 
 

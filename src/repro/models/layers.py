@@ -229,16 +229,22 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
       All index math is static-shape (gather/scatter), keeping the decode
       scan jittable with requests at heterogeneous positions.
     * paged slot mode (``"kp"`` present): the block-paged pool layout —
-      ``{"kp", "vp": [P, bs, KV, hd], "tbl": [B, NB], "pos", "start": [B]}``
-      (+ ``"ks"``/``"vs"`` [P, bs, KV] scales when the pool is int8).
-      Logical cache index ``j`` lives at physical block ``tbl[b, j//bs]``,
-      offset ``j % bs``; the scheduler's free-list allocator
-      (``serve.kv_pool``) hands each slot exactly the blocks its request
-      needs. Writes scatter into the pool; the decode read routes through
-      the paged flash-decode op (``kernels.dispatch``), which only visits
-      each row's live blocks — decode cost and bytes scale with actual
-      fill, not ``max_len``. Chunked prefill gathers the slot's logical
-      view (one small gather per chunk) and reuses the dense mask path.
+      ``{"kp", "vp": [P, bs, KV, hd], "tbl", "wtbl": [B, NB], "pos",
+      "start": [B]}`` (+ ``"ks"``/``"vs"`` [P, bs, KV] scales when the
+      pool is int8). Logical cache index ``j`` lives at physical block
+      ``tbl[b, j//bs]``, offset ``j % bs``; the scheduler's refcounting
+      allocator (``serve.kv_pool``) hands each slot the blocks its
+      request needs — possibly *shared* with other slots via prefix
+      caching. Reads always go through ``tbl``; writes go through the
+      **write table** ``wtbl``, which equals ``tbl`` for private blocks
+      and redirects prefix-hit (shared, immutable) blocks to the
+      reserved sink block — a chunk re-scoring a cached region can never
+      corrupt it (the write-protection contract the prefix cache relies
+      on, mirroring the fully-masked-row sink redirect). The decode read
+      routes through the paged flash-decode op (``kernels.dispatch``),
+      which only visits each row's live blocks — decode cost and bytes
+      scale with actual fill, not ``max_len``. Chunked prefill scores the
+      chunk against the pool in place via the paged flash-prefill op.
     """
     hd = cfg.head_dim
     if "qkv" in p:
@@ -336,15 +342,21 @@ def _paged_slot_attention(cache, q, k, v, x, scale, kv_splits=1,
     routes through the paged flash-prefill op — the chunk's queries score
     against the pool *in place* (online softmax over each row's live
     blocks, causal window ``start[b] <= j <= pos[b] + i``), so no logical
-    view is ever gathered out of the pool. Fully-masked rows (``seq_mask``
-    all zero) write to the reserved sink block and keep their cursor."""
+    view is ever gathered out of the pool. Writes resolve physical blocks
+    through the *write table* ``wtbl`` (reads use ``tbl``): the scheduler
+    points prefix-hit shared blocks at the reserved sink block, so a
+    chunk re-scoring a cached region drops its (bitwise-identical)
+    rewrites instead of touching blocks other slots read. Fully-masked
+    rows (``seq_mask`` all zero) write to the sink and keep their
+    cursor."""
     pos, start, tbl = cache["pos"], cache["start"], cache["tbl"]
+    wtbl = cache.get("wtbl", tbl)
     bsz, s = x.shape[0], x.shape[1]
     bs = cache["kp"].shape[1]
     quantized = "ks" in cache
     row_on = _row_active(seq_mask, bsz)                      # [B] 0/1
     idx = pos[:, None] + jnp.arange(s)[None, :]              # [B, S] logical
-    blk = jnp.take_along_axis(tbl, idx // bs, axis=1)        # [B, S] physical
+    blk = jnp.take_along_axis(wtbl, idx // bs, axis=1)       # [B, S] physical
     blk = jnp.where(row_on[:, None] > 0, blk, 0)             # sink if inactive
     off = idx % bs
     new_cache = dict(cache)
@@ -391,11 +403,13 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32,
     buffers with a block-paged pool: ``kv_blocks`` usable physical blocks
     of ``kv_block_size`` tokens (default: enough for every slot at
     ``max_len`` — size it smaller to oversubscribe; the scheduler's
-    free-list backpressures admission) plus one reserved write-sink block
+    allocator backpressures admission) plus one reserved write-sink block
     at physical index 0 (``serve.kv_pool.SINK_BLOCK`` — where retired
-    slots' dead writes land) and a per-slot block table. ``kv_bits=8``
-    stores the pool as int8 with per-token/head scales
-    (``core.quant.kv_quantize``)."""
+    slots' dead writes and write-protected shared-block writes land), a
+    per-slot read block table ``tbl`` and write block table ``wtbl``
+    (identical for private blocks; ``wtbl`` points prefix-hit shared
+    blocks at the sink). ``kv_bits=8`` stores the pool as int8 with
+    per-token/head scales (``core.quant.kv_quantize``)."""
     hd = cfg.head_dim
     if paged:
         nb = -(-max_len // kv_block_size)
@@ -406,6 +420,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32,
              "vp": jnp.zeros((npool, kv_block_size, cfg.num_kv_heads, hd),
                              kv_dtype),
              "tbl": jnp.zeros((batch, nb), jnp.int32),
+             "wtbl": jnp.zeros((batch, nb), jnp.int32),
              "pos": jnp.zeros((batch,), jnp.int32),
              "start": jnp.zeros((batch,), jnp.int32)}
         if kv_bits == 8:

@@ -506,25 +506,32 @@ def cache_slot_spec(cfg, paged: bool = False, kv_bits: int = 0):
     marks pool-wide leaves that have *no* slot dimension and are passed
     through whole (the paged KV pools). ``kinds`` labels each leaf:
     ``"start"`` (per-slot first-valid index, set to the left-pad count at
-    admission), ``"state"`` (zeroed at admission), ``"table"`` (the slot's
-    block-table row, written from the free-list allocation at admission)
-    or ``"pool"`` (shared physical storage — left untouched at admission;
-    stale blocks are never attended because the ``start <= j <= pos`` mask
-    bounds every read). The scheduler uses these to gather one slot's
+    admission), ``"pos"`` (per-slot write cursor — set to the prefix-hit
+    skip point at admission, so a cached prefix is never re-prefilled),
+    ``"state"`` (zeroed at admission), ``"table"`` / ``"wtable"`` (the
+    slot's read / write block-table rows, written from the allocator's
+    admission result — ``wtable`` redirects shared prefix-hit blocks to
+    the sink) or ``"pool"`` (shared physical storage — left untouched at
+    admission except for the optional copy-on-write block copy; stale
+    blocks are never attended because the ``start <= j <= pos`` mask
+    bounds every read, and every pool leaf keeps its block axis at
+    position 1, right after the stacked layer axis, which is what the
+    COW copy indexes). The scheduler uses these to gather one slot's
     cache row, run a prefill chunk on it, and scatter it back — without
     hard-coding the pytree layout of any model family.
     """
     fam = cfg.family
     if paged:
-        attn_axes = {"kp": -1, "vp": -1, "tbl": 1, "pos": 1, "start": 1}
+        attn_axes = {"kp": -1, "vp": -1, "tbl": 1, "wtbl": 1, "pos": 1,
+                     "start": 1}
         attn_kinds = {"kp": "pool", "vp": "pool", "tbl": "table",
-                      "pos": "state", "start": "start"}
+                      "wtbl": "wtable", "pos": "pos", "start": "start"}
         if kv_bits == 8:
             attn_axes.update(ks=-1, vs=-1)
             attn_kinds.update(ks="pool", vs="pool")
     else:
         attn_axes = {"k": 1, "v": 1, "pos": 1, "start": 1}
-        attn_kinds = {"k": "state", "v": "state", "pos": "state",
+        attn_kinds = {"k": "state", "v": "state", "pos": "pos",
                       "start": "start"}
     mamba_axes = {"conv": 1, "ssm": 1}
     mamba_kinds = {"conv": "state", "ssm": "state"}

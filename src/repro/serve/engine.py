@@ -6,6 +6,18 @@ temperature sampling on the continuous-batching :class:`ServeEngine`
 candidates finish, so mixed-progress candidates never pad each other),
 scores them with a PRM, and ``best_of_n_accuracy`` applies the three
 selection strategies — the Fig. 4 / Table 15 pipeline.
+
+Best-of-n is the canonical shared-prefix workload: all n candidates of a
+prompt prefill the *identical* token sequence before diverging at the
+first sampled token. With the paged engine's radix prefix cache the
+harness is **fork-aware**: it submits one *leader* candidate per prompt,
+lets the leaders' prompt blocks land in the content index, then forks the
+remaining n−1 candidates — their admissions map block-table rows onto the
+leader's (live or LRU-retained) physical blocks and re-run only the final
+chunk, while each candidate's PRNG/sampling state stays per-slot and
+device-resident exactly as before. Serving is deterministic, so the fork
+path produces bit-identical answers to the independent-requests path for
+every candidate seed (verified in ``tests/test_scheduler.py``).
 """
 
 from __future__ import annotations
@@ -20,7 +32,7 @@ from repro.core.analog import AnalogConfig
 from repro.serve.decode import digital_int4_config
 from repro.serve.prm import NoisyOraclePRM, select_answer
 from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
-                                   required_max_len)
+                                   padded_prompt_len, required_max_len)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +61,15 @@ class BestOfNConfig:
         int4_serve: Serve RTN weights via the packed-int4 kernel (the
             Table 3 digital deployment path executed by
             ``kernels.int4_matmul``).
+        paged: Serve candidates from the block-paged KV pool (required
+            for prefix sharing; attention-free stacks fall back to the
+            contiguous slot cache automatically).
+        prefix_cache: Fork-aware candidate generation — submit one
+            leader per prompt, fork the other n−1 at the shared-prefix
+            boundary via the radix prefix cache. Bitwise-identical
+            answers either way; off reproduces the PR 4
+            independent-requests path.
+        kv_block_size: Physical KV block granularity of the paged pool.
     """
 
     temperature: float = 0.8
@@ -60,6 +81,9 @@ class BestOfNConfig:
     num_slots: int = 32
     prefill_chunk: int = 8
     int4_serve: bool = False
+    paged: bool = True
+    prefix_cache: bool = True
+    kv_block_size: int = 16
 
 
 def sample_candidates(params, cfg, acfg: AnalogConfig, key,
@@ -75,6 +99,14 @@ def sample_candidates(params, cfg, acfg: AnalogConfig, key,
     — a task-level hook (see ``eval.tasks``); the default keeps the first
     generated token, matching the single-token toy answer tasks.
 
+    With the prefix cache enabled (``bcfg.paged`` + ``bcfg.prefix_cache``,
+    attention-only families) candidate generation is fork-aware: one
+    leader per prompt is submitted first and driven until every leader's
+    prompt has prefilled (registering its blocks in the radix index),
+    then the n−1 siblings are forked — each admission reuses the leader's
+    prompt blocks and re-runs only the final chunk. Answers are bitwise
+    identical to the independent-requests path per candidate seed.
+
     → answers [num_prompts, n] int array.
     """
     if bcfg.int4_serve:
@@ -85,10 +117,22 @@ def sample_candidates(params, cfg, acfg: AnalogConfig, key,
     seeds = np.asarray(jax.random.randint(
         key, (num * n,), 0, np.iinfo(np.int32).max))
     plen = int(np.shape(prompts)[1])
+    max_len = required_max_len(plen, bcfg.max_new, bcfg.prefill_chunk)
+    bs = bcfg.kv_block_size
+    # pool headroom beyond slot capacity so every prompt's blocks stay
+    # cached across the run (leaders may retire before their forks
+    # admit); only *prompt* blocks are ever retained — decode blocks are
+    # unindexed and freed at release — so size by the padded prompt, not
+    # max_len
+    prompt_blocks = -(-padded_prompt_len(plen, bcfg.prefill_chunk) // bs)
+    kv_blocks = (bcfg.num_slots * -(-max_len // bs)
+                 + num * (prompt_blocks + 1)) if bcfg.paged else 0
     scfg = SchedulerConfig(
         num_slots=bcfg.num_slots,
-        max_len=required_max_len(plen, bcfg.max_new, bcfg.prefill_chunk),
-        prefill_chunk=bcfg.prefill_chunk)
+        max_len=max_len,
+        prefill_chunk=bcfg.prefill_chunk,
+        paged=bcfg.paged, prefix_cache=bcfg.prefix_cache,
+        kv_block_size=bs, kv_blocks=kv_blocks)
     eng = ServeEngine(params, cfg, acfg, scfg)
     reqs = [Request(uid=i, prompt=np.asarray(prompts[i // n], np.int32),
                     max_new=bcfg.max_new, temperature=bcfg.temperature,
@@ -96,7 +140,23 @@ def sample_candidates(params, cfg, acfg: AnalogConfig, key,
                     greedy_first=bcfg.greedy_first,
                     stop_tokens=tuple(bcfg.stop_tokens), seed=int(seeds[i]))
             for i in range(num * n)]
-    outs = eng.run(reqs)
+    if eng.prefix_enabled and n > 1:
+        # fork-aware: leaders first (one candidate per prompt), driven
+        # until every leader prompt is fully prefilled and indexed...
+        for p in range(num):
+            eng.submit(reqs[p * n])
+        while eng.queue or any(s is not None and s.prefilling
+                               for s in eng.slots):
+            eng.step()
+        # ...then fork the siblings at the shared-prefix boundary: their
+        # admissions map onto the leaders' prompt blocks (live or
+        # LRU-retained) and skip straight to the final chunk
+        for p in range(num):
+            for i in range(1, n):
+                eng.submit(reqs[p * n + i])
+        outs = eng.run()
+    else:
+        outs = eng.run(reqs)
     return np.array([[extract(outs[p * n + i]) for i in range(n)]
                      for p in range(num)])
 

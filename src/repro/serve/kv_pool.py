@@ -1,90 +1,298 @@
-"""Host-side free-list allocator for the block-paged KV cache.
+"""Refcounted block allocator + radix prefix index for the paged KV cache.
 
 The paged slot cache (``models.layers.init_cache(paged=True)``) stores KV
-state in a pool of fixed-size physical blocks shared by every slot; this
-module owns the logical→physical bookkeeping on the host:
+state in a pool of fixed-size physical blocks shared by every slot. Through
+PR 4 the bookkeeping was a plain free list — *a request owned its blocks
+exclusively for its lifetime*. This module replaces that ownership model
+with **refcounted, content-addressed blocks** so identical prompt prefixes
+are computed once and shared (vLLM/SGLang-style prefix caching):
 
-* **admission** — a request needs ``blocks_for(prompt, budget)`` blocks for
-  its whole lifetime (left-padded prompt + decode budget; allocating the
-  worst case up front keeps every device-side structure static — no
-  mid-decode reallocation, no jit retrace). ``alloc`` pops them off the
-  free list and returns the slot's block-table row.
-* **retirement** — ``release`` returns the blocks the moment the request
-  finishes, so cache memory scales with *live* tokens across the workload,
-  not ``num_slots * max_len`` worst case.
-* **backpressure** — when the pool is undersized relative to slot capacity
-  (the oversubscription that lifts slot count for the same HBM),
-  ``can_alloc`` gates admission: the scheduler leaves the queue head
-  waiting until enough blocks free up (strict FIFO — no small-request
-  overtaking, so no starvation).
+* **admission** — ``admit(uid, hit_blocks, n_new)`` increfs the physical
+  blocks a prefix match found (they may belong to a live request or sit in
+  the released-block cache) and pops ``n_new`` fresh blocks for the
+  request's private tail + decode budget. Worst-case sizing up front keeps
+  every device-side structure static, exactly as before.
+* **retirement** — ``release`` decrefs; a block only becomes reusable when
+  its last owner lets go. Zero-ref blocks that carry prefix-index entries
+  are *not* freed eagerly: they move to an LRU cache of
+  released-but-indexed blocks and are evicted (index entries dropped,
+  block freed) only under allocation pressure — a retired request's prompt
+  stays warm for the next request that shares it.
+* **the radix/hash index** — full blocks are content-addressed by a nested
+  hash chain ``key_k = (key_{k-1}, block-k token ids)`` rooted at
+  ``(salt, left-pad count)``; matching a prompt walks the chain and returns
+  the longest indexed prefix (``match_prefix``). The chain key makes a
+  block's identity include its entire prefix — a radix-tree lookup by
+  hashing. ``salt`` segregates entries whose KV would differ for reasons
+  outside the token ids (deployment config, tenancy).
+* **copy-on-write tails** — a prompt whose length is not a block multiple
+  leaves a partial tail block. The tail is indexed *frozen at its fill
+  count* (``register_tail``); because writes are append-only (a slot's
+  ``pos`` cursor is monotonic), entries below the fill stay valid even
+  while the donor keeps decoding into the same physical block. A matching
+  request never shares the tail in place: the scheduler allocates a fresh
+  block and device-copies the donor block into it (``_admit_jit``'s COW
+  path), then appends privately — copy-on-write at the only spot where a
+  shared block would otherwise be written.
+* **backpressure** — ``can_alloc`` now counts free *plus evictable cached*
+  blocks; admission still stalls the strict-FIFO queue head when live
+  blocks alone exhaust the pool.
 
-Physical block 0 is reserved as the **write sink**: a retired slot's block
-table is reset to all-zeros, so the decode batch's inactive rows (which
-still execute their scatter-writes — the jitted step is static-shape) land
-in the sink instead of corrupting blocks that were freed and re-allocated
-to a newly admitted request. The allocator therefore hands out indices
-``1 .. num_blocks`` and the device pool is sized ``num_blocks + 1``.
+Physical block 0 stays reserved as the **write sink** (see PR 3): retired
+and write-protected rows keep executing static-shape scatter-writes, which
+must land somewhere harmless. Shared full blocks get the same treatment —
+the scheduler's per-slot *write* block table redirects any chunk write
+into a prefix-hit block to the sink, so cached content is immutable by
+construction (``models.layers._paged_slot_attention``).
 
-Pure host-side Python (deque + dict); the device only ever sees the block
-table rows this hands out.
+Pure host-side Python (deque + dicts); the device only ever sees the
+block-table rows this hands out and the COW copy pairs.
 """
 
 from __future__ import annotations
 
 import collections
+from typing import Iterable, Optional, Sequence
 
 #: Physical index of the reserved write-sink block (see module docstring).
 SINK_BLOCK = 0
 
+#: Chain-key sentinel kinds for the reverse block->keys map.
+_FULL, _TAIL = "full", "tail"
+
 
 class OutOfBlocksError(RuntimeError):
-    """Raised when ``alloc`` is asked for more blocks than are free."""
+    """Raised when ``admit``/``alloc`` need more blocks than exist free
+    or evictable."""
 
 
 class KVPool:
-    """Free-list allocator over ``num_blocks`` usable physical KV blocks
-    (device pool additionally carries the reserved sink block 0)."""
+    """Refcounted allocator + prefix index over ``num_blocks`` usable
+    physical KV blocks (device pool additionally carries the reserved
+    sink block 0).
 
-    def __init__(self, num_blocks: int, block_size: int):
-        """All blocks start free; allocation order is LIFO (hot blocks)."""
+    Every usable block is in exactly one of three states:
+
+    * **free** — on the free list, carries no index entries;
+    * **live** — refcount >= 1 (held by one or more request uids);
+    * **cached** — refcount 0 but still content-indexed, parked in the
+      LRU of released-but-cached blocks awaiting reuse or eviction.
+
+    ``free + live + cached == num_blocks`` always (the conservation
+    invariant the churn tests assert).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, salt: int = 0):
+        """All blocks start free; ``salt`` roots every hash chain."""
         if num_blocks < 1 or block_size < 1:
             raise ValueError("num_blocks and block_size must be >= 1")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.salt = salt
         self._free: collections.deque[int] = collections.deque(
             range(1, num_blocks + 1))
+        self._ref: dict[int, int] = {}            # block -> refcount (>=1)
         self._owned: dict[int, list[int]] = {}    # owner uid -> blocks
+        self._index: dict = {}                    # chain key -> full block
+        self._tails: dict = {}     # chain key -> (block, fill, tail tokens)
+        self._block_keys: dict[int, list] = {}    # block -> [(kind, key)]
+        # LRU of cached blocks: oldest first, refreshed on match/reuse
+        self._lru: collections.OrderedDict[int, None] = (
+            collections.OrderedDict())
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
 
     @property
     def num_free(self) -> int:
-        """Blocks currently on the free list."""
+        """Blocks on the free list (no content, no owners)."""
         return len(self._free)
 
     @property
+    def num_cached(self) -> int:
+        """Released-but-indexed blocks retained for prefix reuse."""
+        return len(self._lru)
+
+    @property
     def num_live(self) -> int:
-        """Blocks currently owned by in-flight requests."""
-        return self.num_blocks - len(self._free)
+        """Blocks currently referenced by in-flight requests."""
+        return len(self._ref)
 
     def blocks_for(self, padded_prompt: int, max_new: int) -> int:
-        """Blocks a request holds for its lifetime (worst-case fill)."""
+        """Blocks a request's table row spans (worst-case fill)."""
         return -(-(padded_prompt + max_new) // self.block_size)
 
-    def can_alloc(self, n: int) -> bool:
-        """True when ``n`` blocks are free right now."""
-        return n <= len(self._free)
+    def can_alloc(self, n: int, protect: frozenset = frozenset()) -> bool:
+        """True when ``n`` blocks can be produced right now — free blocks
+        plus cached blocks evictable under pressure (minus ``protect``,
+        blocks a pending copy-on-write still needs readable)."""
+        evictable = sum(1 for b in self._lru if b not in protect)
+        return n <= len(self._free) + evictable
 
-    def alloc(self, uid: int, n: int) -> list[int]:
-        """Pop ``n`` blocks for request ``uid``; returns physical indices."""
-        if not self.can_alloc(n):
-            raise OutOfBlocksError(
-                f"request {uid}: needs {n} blocks, {len(self._free)} free")
+    # ------------------------------------------------------------------
+    # ownership
+    # ------------------------------------------------------------------
+
+    def admit(self, uid: int, hit_blocks: Sequence[int], n_new: int,
+              protect: frozenset = frozenset()) -> list[int]:
+        """Bind request ``uid``: incref the prefix-hit blocks and pop
+        ``n_new`` fresh blocks (evicting LRU cached blocks as needed,
+        never touching ``protect``). Returns the fresh blocks; the
+        caller's table row is ``list(hit_blocks) + returned``."""
         if uid in self._owned:
             raise ValueError(f"request {uid} already holds blocks")
-        blocks = [self._free.pop() for _ in range(n)]
-        self._owned[uid] = blocks
-        return blocks
+        # capacity guard before any mutation: cached hit blocks are about
+        # to be acquired, so they must not be counted as evictable
+        guard = frozenset(protect) | frozenset(hit_blocks)
+        if not self.can_alloc(n_new, guard):
+            raise OutOfBlocksError(
+                f"request {uid}: needs {n_new} new blocks, "
+                f"{len(self._free)} free + {len(self._lru)} cached")
+        held = []
+        for b in hit_blocks:
+            if b in self._ref:
+                self._ref[b] += 1
+            else:                       # resurrect from the released cache
+                del self._lru[b]
+                self._ref[b] = 1
+            held.append(b)
+        new = []
+        for _ in range(n_new):
+            if not self._free:
+                self._evict_one(protect)
+            b = self._free.pop()
+            self._ref[b] = 1
+            new.append(b)
+        self._owned[uid] = held + new
+        return new
+
+    def alloc(self, uid: int, n: int) -> list[int]:
+        """Pop ``n`` blocks for request ``uid`` (no prefix hit) — the
+        PR 3 entry point, now a thin wrapper over :meth:`admit`."""
+        return self.admit(uid, [], n)
 
     def release(self, uid: int) -> None:
-        """Return request ``uid``'s blocks to the free list."""
-        for b in self._owned.pop(uid):
-            self._free.append(b)
+        """Drop request ``uid``'s references. Blocks whose refcount hits
+        zero go to the LRU cache when content-indexed, to the free list
+        otherwise. Unknown/double release is a clear error — refcounting
+        makes that failure mode likely enough to deserve naming."""
+        blocks = self._owned.pop(uid, None)
+        if blocks is None:
+            raise ValueError(
+                f"release of unknown or already-released request "
+                f"uid={uid} (known owners: {sorted(self._owned)})")
+        for b in blocks:
+            r = self._ref[b] - 1
+            if r:
+                self._ref[b] = r
+            else:
+                del self._ref[b]
+                if self._block_keys.get(b):
+                    self._lru[b] = None            # retained, MRU end
+                else:
+                    self._free.append(b)
+
+    def _evict_one(self, protect: frozenset) -> None:
+        """Evict the least-recently-used unprotected cached block: drop
+        its index entries and free it. Only zero-ref blocks live in the
+        LRU, so a live block can never be evicted."""
+        for b in self._lru:
+            if b not in protect:
+                del self._lru[b]
+                self._drop_keys(b)
+                self._free.append(b)
+                self.evictions += 1
+                return
+        raise OutOfBlocksError("every cached block is copy-protected")
+
+    def _drop_keys(self, b: int) -> None:
+        """Remove every index entry that resolves to block ``b``."""
+        for kind, key in self._block_keys.pop(b, ()):
+            d = self._index if kind == _FULL else self._tails
+            hit = d.get(key)
+            if hit is not None and (hit if kind == _FULL else hit[0]) == b:
+                del d[key]
+
+    # ------------------------------------------------------------------
+    # the radix/hash prefix index
+    # ------------------------------------------------------------------
+
+    def prefix_keys(self, tokens: Sequence[int], npad: int) -> list:
+        """Hash-chain keys for every *full* block of a padded prompt.
+
+        ``key_k`` nests ``key_{k-1}``, so equality of ``key_k`` implies
+        equality of the whole prefix through block ``k`` — the radix
+        property. The root carries ``(salt, npad)``: the left-pad count
+        shifts every RoPE position, so prompts padded differently must
+        never share blocks even when the padded token arrays collide.
+        """
+        parent = (self.salt, npad)
+        keys = []
+        bs = self.block_size
+        for k in range(len(tokens) // bs):
+            parent = (parent, tuple(int(t) for t in tokens[k * bs:
+                                                           (k + 1) * bs]))
+            keys.append(parent)
+        return keys
+
+    def register(self, keys: Iterable, blocks: Iterable[int]) -> None:
+        """Index full blocks under their chain keys (first writer wins —
+        a concurrent duplicate keeps its private, unindexed copy)."""
+        for key, b in zip(keys, blocks):
+            if key in self._index:
+                continue
+            self._index[key] = b
+            self._block_keys.setdefault(b, []).append((_FULL, key))
+
+    def register_tail(self, parent_key, block: int, fill: int,
+                      tail_tokens: Sequence[int]) -> None:
+        """Index a partial tail block, frozen at ``fill`` tokens.
+
+        Entries below ``fill`` stay valid forever because writes are
+        append-only; the donor may keep decoding into offsets >= fill.
+        Matchers must copy-on-write (the scheduler device-copies the
+        block before appending) — the tail is never shared in place.
+        """
+        if parent_key in self._tails or fill <= 0:
+            return
+        self._tails[parent_key] = (
+            block, fill, tuple(int(t) for t in tail_tokens))
+        self._block_keys.setdefault(block, []).append((_TAIL, parent_key))
+
+    def match_prefix(self, tokens: Sequence[int], npad: int, keys=None,
+                     ) -> tuple[list[int], Optional[tuple[int, int]]]:
+        """Longest indexed prefix of a padded prompt.
+
+        Returns ``(hit_blocks, tail)``: the physical blocks of every
+        matched full block (chain walk from the root, stopping at the
+        first miss), and — when the chain head also has a frozen partial
+        tail whose tokens match the prompt's next ``fill`` tokens —
+        ``(tail_block, fill)`` for the scheduler's COW copy. Matched
+        cached blocks are refreshed to the MRU end of the LRU. Pass
+        ``keys`` (a ``prefix_keys`` result) to skip re-hashing the
+        prompt on the admission hot path.
+        """
+        bs = self.block_size
+        parent = (self.salt, npad)
+        hit: list[int] = []
+        for key in (keys if keys is not None
+                    else self.prefix_keys(tokens, npad)):
+            b = self._index.get(key)
+            if b is None:
+                break
+            hit.append(b)
+            parent = key
+        tail = None
+        t = self._tails.get(parent)
+        if t is not None:
+            tb, fill, ttoks = t
+            lo = len(hit) * bs
+            seg = tuple(int(x) for x in tokens[lo:lo + fill])
+            if len(seg) == fill and seg == ttoks:
+                tail = (tb, fill)
+        for b in hit + ([tail[0]] if tail else []):
+            if b in self._lru:
+                self._lru.move_to_end(b)
+        return hit, tail

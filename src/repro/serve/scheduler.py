@@ -38,13 +38,32 @@ replaces it for serving:
   transfers.
 * **Block-paged KV cache** (``SchedulerConfig.paged``) — the per-slot
   ``max_len`` KV buffers become a pool of fixed-size physical blocks
-  (``serve.kv_pool``: free-list alloc at admission, release at
+  (``serve.kv_pool``: refcounted alloc at admission, decref at
   retirement, FIFO backpressure when undersized). The decode read routes
   through the paged flash-decode op and the prefill chunk through the
   paged flash-prefill op (``kernels.dispatch``), both scoring the pool
   *in place* — no logical view is ever gathered back to the host, and
   cost scales with each slot's live tokens. ``AnalogConfig.kv_bits = 8``
   stores the pool as int8 with per-token/head scales.
+* **Radix prefix caching** (``SchedulerConfig.prefix_cache``, paged
+  attention-only families) — admission matches the padded prompt against
+  the pool's content-addressed block index (``KVPool.match_prefix``) and
+  maps the slot's block-table row onto the shared physical blocks: the
+  slot starts with its ``pos`` cursor advanced past the hit (rounded
+  down to a chunk boundary; at least one chunk always runs so the
+  first-token logits exist) and plans prefill chunks only for the tail.
+  Chunks overlapping the hit re-score cached content but never rewrite
+  it — the per-slot *write table* redirects shared-block writes to the
+  sink block (``models.layers._paged_slot_attention``). A matched
+  partial tail block is copy-on-written: a fresh block is device-copied
+  from the frozen donor inside the admission jit, then appended to
+  privately. A request's full prompt blocks are registered in the index
+  when its prefill completes, and retirement *retains* zero-ref indexed
+  blocks in an LRU (evicted only under allocation pressure) — a shared
+  system prompt stays warm across the whole workload. Because serving is
+  deterministic (``AnalogCtx(key=None)``), cached KV is bitwise
+  identical to recomputed KV: warm-vs-cold greedy decode parity is exact
+  (verified in ``tests/test_scheduler.py``).
 * **Per-request sampling and stop conditions** — temperature / top-k /
   top-p / ``greedy_first`` ride along each request as traced per-row
   arrays (``sampling.sample_logits_batched``), and every request carries
@@ -82,7 +101,7 @@ from repro.core.analog import AnalogConfig, AnalogCtx
 from repro.models import apply as model_apply
 from repro.models import transformer as T
 from repro.serve.decode import serve_step
-from repro.serve.kv_pool import KVPool
+from repro.serve.kv_pool import SINK_BLOCK, KVPool
 from repro.serve.sampling import sample_logits_batched
 
 
@@ -158,9 +177,20 @@ class SchedulerConfig:
     ``kv_block_size`` tokens, allocated per request at admission and
     released at retirement. ``kv_blocks=0`` sizes the pool for every slot
     at ``max_len`` (no oversubscription); smaller values trade worst-case
-    headroom for more slots per byte of HBM, with free-list backpressure
+    headroom for more slots per byte of HBM, with allocator backpressure
     gating admission. The pool dtype follows ``cache_dtype`` unless
     ``AnalogConfig.kv_bits == 8`` selects the int8 pool.
+
+    ``prefix_cache`` (default on; effective for paged engines of the
+    attention-only families — dense/moe; hybrid stacks carry SSM
+    recurrence state that cannot skip prompt chunks) enables the radix
+    prefix cache: admission reuses content-matching blocks, retirement
+    retains released prompt blocks in an LRU. Bitwise-transparent for
+    greedy decode — disable it only to reclaim retained blocks eagerly
+    or to benchmark the cold path. ``cache_salt`` segregates index
+    entries whose KV would differ for reasons outside the token ids
+    (deployment config, tenancy); engines only ever share a pool with
+    themselves today, but the salt keeps persisted/benchmark runs honest.
     """
 
     num_slots: int = 4
@@ -172,15 +202,18 @@ class SchedulerConfig:
     paged: bool = False
     kv_block_size: int = 16
     kv_blocks: int = 0
+    prefix_cache: bool = True
+    cache_salt: int = 0
 
 
 class _Slot:
     """Host-side bookkeeping for one in-flight request."""
 
     def __init__(self, req: Request, toks: np.ndarray, mask: np.ndarray,
-                 npad: int, chunk: int, seq: int):
+                 npad: int, chunk: int, seq: int, skip: int = 0):
         """Fresh bookkeeping for ``req``: the left-padded prompt split into
-        ``prefill_chunk``-sized pieces, none consumed yet."""
+        ``prefill_chunk``-sized pieces, the first ``skip // chunk`` of
+        which a prefix-cache hit already covers."""
         self.req = req
         self.out: list[int] = []
         self.count = 0                 # tokens sampled so far
@@ -188,8 +221,14 @@ class _Slot:
         self.mask = mask               # [padded] 1 = real token
         self.npad = npad               # left-pad count
         self.nchunks = len(toks) // chunk
-        self.chunk = 0                 # next prefill chunk to run
+        self.chunk = skip // chunk     # next prefill chunk to run
         self.seq = seq                 # admission order (prefill FIFO)
+        # prefix-cache bookkeeping (paged engines): the slot's physical
+        # block row, its hash-chain keys, and how many leading blocks
+        # came from the index (those are shared — never re-registered)
+        self.blocks: list[int] = []
+        self.keys: list = []
+        self.hit_full = 0
 
     @property
     def prefilling(self) -> bool:
@@ -212,22 +251,40 @@ def _donate(*argnums):
     return () if jax.default_backend() == "cpu" else argnums
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "paged", "kv_bits"),
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "paged", "kv_bits", "cow"),
                    donate_argnums=_donate(0))
-def _admit_jit(caches, slot, start, tbl_row, *, cfg, paged=False, kv_bits=0):
-    """Reset slot ``slot``: zero its state rows, set its ``start`` markers,
-    and (paged) write its block-table row from the free-list allocation.
-    Pool leaves are untouched — stale blocks are masked, never attended."""
+def _admit_jit(caches, slot, start, pos0, tbl_row, wtbl_row, cow_src,
+               cow_dst, *, cfg, paged=False, kv_bits=0, cow=False):
+    """Reset slot ``slot``: zero its state rows, set its ``start`` marker
+    and initial ``pos`` cursor (``pos0`` > 0 = prefix-cache skip), and
+    (paged) write its read/write block-table rows from the allocator's
+    admission result. Pool leaves are untouched — stale blocks are
+    masked, never attended — except the optional copy-on-write step
+    (``cow=True``): physical block ``cow_src`` (a frozen shared partial
+    tail) is copied whole into the slot's private block ``cow_dst``
+    across every layer, so the slot can append to the tail without
+    touching the shared original."""
     axes, kinds = T.cache_slot_spec(cfg, paged=paged, kv_bits=kv_bits)
 
     def upd(c, ax, kind):
         if kind == "pool":
-            return c
+            if not cow:
+                return c
+            # every pool leaf keeps its block axis at position 1, right
+            # after the stacked layer axis (see cache_slot_spec)
+            src = jax.lax.dynamic_index_in_dim(c, cow_src, 1,
+                                               keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(c, src, cow_dst, 1)
         shape = c.shape[:ax] + c.shape[ax + 1:]
         if kind == "table":
             val = jnp.broadcast_to(tbl_row, shape).astype(c.dtype)
+        elif kind == "wtable":
+            val = jnp.broadcast_to(wtbl_row, shape).astype(c.dtype)
         elif kind == "start":
             val = jnp.full(shape, start, c.dtype)
+        elif kind == "pos":
+            val = jnp.full(shape, pos0, c.dtype)
         else:
             val = jnp.zeros(shape, c.dtype)
         return jax.lax.dynamic_update_index_in_dim(c, val, slot, ax)
@@ -389,7 +446,12 @@ class ServeEngine:
         if paged:
             nb_slot = -(-scfg.max_len // scfg.kv_block_size)
             n_pool = scfg.kv_blocks or b * nb_slot
-            self.pool = KVPool(n_pool, scfg.kv_block_size)
+            self.pool = KVPool(n_pool, scfg.kv_block_size,
+                               salt=scfg.cache_salt)
+        # radix prefix caching: paged attention-only families (hybrid
+        # carries SSM recurrence state that cannot skip prompt chunks)
+        self._prefix = (scfg.prefix_cache and paged
+                        and cfg.family in ("dense", "moe"))
         self.caches = T.init_caches(cfg, b, scfg.max_len, scfg.cache_dtype,
                                     per_slot=True, paged=paged,
                                     kv_block_size=scfg.kv_block_size,
@@ -412,6 +474,13 @@ class ServeEngine:
         self.mixed_steps = 0
         self.prefill_chunks = 0
         self.decode_tokens_during_admission = 0
+        # prefix-cache telemetry (hit/skipped tokens count the padded
+        # prompt positions the cache covered / the prefill never ran)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_skipped_tokens = 0
+        self.prefix_cow_copies = 0
         self.step_token_log: collections.deque[tuple[int, int]] = (
             collections.deque(maxlen=4096))
         self._admit_seq = 0
@@ -461,17 +530,19 @@ class ServeEngine:
         Admission only binds a slot and plans the prompt's chunks — the
         chunks themselves piggyback on subsequent fused steps, so decode
         slots keep emitting tokens throughout the admission window. Paged
-        mode adds free-list backpressure: the queue head is admitted only
-        when the pool can cover its worst-case block count. Admission
-        stays strict FIFO — a blocked head is *not* overtaken by smaller
-        requests behind it, so no request can starve.
+        mode adds allocator backpressure: the queue head is admitted only
+        when the pool can cover its worst-case block count *beyond* what
+        a prefix-cache hit already supplies (free plus evictable cached
+        blocks). Admission stays strict FIFO — a blocked head is *not*
+        overtaken by smaller requests behind it, so no request can
+        starve.
         """
         for b in range(self.scfg.num_slots):
             if self.slots[b] is None and self.queue:
-                if self.pool is not None and not self.pool.can_alloc(
-                        self._blocks_needed(self.queue[0])):
+                plan = self._plan_admission(self.queue[0])
+                if plan is None:
                     break                      # out of blocks: head waits
-                self._admit_request(self.queue.popleft(), b)
+                self._admit_request(self.queue.popleft(), b, plan)
         decode_rows = [b for b, s in enumerate(self.slots)
                        if s is not None and not s.prefilling]
         prefill_rows = [b for b, s in enumerate(self.slots)
@@ -507,6 +578,12 @@ class ServeEngine:
         return sum(s is not None for s in self.slots)
 
     @property
+    def prefix_enabled(self) -> bool:
+        """True when this engine runs the radix prefix cache (paged pool
+        on an attention-only family with ``prefix_cache`` set)."""
+        return self._prefix
+
+    @property
     def step_budget(self) -> int:
         """Per-step token budget of the fused mixed step (see config)."""
         return (self.scfg.step_tokens
@@ -530,10 +607,12 @@ class ServeEngine:
     # internals
     # ------------------------------------------------------------------
 
-    def _admit_request(self, req: Request, b: int) -> None:
-        """Bind slot ``b`` to ``req``: reset its cache rows, plan the
-        left-padded prompt chunks, set the host mirrors. No model math —
-        the chunks stream through subsequent fused steps."""
+    def _plan_admission(self, req: Request):
+        """Resolve the queue head's admission: padded prompt layout plus
+        the prefix-cache match. Returns ``None`` when the pool cannot
+        cover the blocks the request still needs (backpressure) —
+        otherwise a dict consumed by :meth:`_admit_request` in the same
+        scheduling iteration (nothing can intervene between the two)."""
         c = self.scfg.prefill_chunk
         plen = len(req.prompt)
         padded = padded_prompt_len(plen, c)
@@ -542,24 +621,96 @@ class ServeEngine:
         toks[npad:] = np.asarray(req.prompt, np.int32)
         mask = np.zeros(padded, np.float32)
         mask[npad:] = 1.0
-
-        tbl_row = None
+        keys, hit, tail = [], [], None
+        if self._prefix:
+            keys = self.pool.prefix_keys(toks, npad)
+            hit, tail = self.pool.match_prefix(toks, npad, keys=keys)
         if self.pool is not None:
-            blocks = self.pool.alloc(req.uid, self._blocks_needed(req))
+            need = self._blocks_needed(req) - len(hit)
+            # hit blocks stop being evictable the moment admission
+            # acquires them; the COW source must survive until the copy
+            protect = frozenset(hit) | (
+                frozenset((tail[0],)) if tail else frozenset())
+            if not self.pool.can_alloc(need, protect):
+                return None
+        return dict(toks=toks, mask=mask, npad=npad, keys=keys, hit=hit,
+                    tail=tail)
+
+    def _admit_request(self, req: Request, b: int, plan: dict) -> None:
+        """Bind slot ``b`` to ``req``: map its block-table row onto the
+        prefix-hit shared blocks plus fresh private ones, reset its cache
+        rows with ``pos`` advanced past the (chunk-aligned) hit, and plan
+        only the tail chunks. No model math — the chunks stream through
+        subsequent fused steps."""
+        c = self.scfg.prefill_chunk
+        toks, mask, npad = plan["toks"], plan["mask"], plan["npad"]
+        hit, tail = plan["hit"], plan["tail"]
+        padded, nhit = len(toks), len(hit)
+
+        tbl_row = wtbl_row = None
+        skip, blocks = 0, []
+        cow_src = cow_dst = 0
+        if self.pool is not None:
+            protect = frozenset((tail[0],)) if tail else frozenset()
+            fresh = self.pool.admit(req.uid, hit,
+                                    self._blocks_needed(req) - nhit,
+                                    protect)
+            blocks = list(hit) + fresh
             nb_slot = self.caches_tbl_width
             row = np.zeros(nb_slot, np.int32)
             row[:len(blocks)] = blocks
-            tbl_row = jnp.asarray(row)
+            # write protection: chunk scatter-writes into shared
+            # prefix-hit blocks land in the sink instead
+            wrow = row.copy()
+            wrow[:nhit] = SINK_BLOCK
+            tbl_row, wtbl_row = jnp.asarray(row), jnp.asarray(wrow)
+            bs = self.pool.block_size
+            hit_tokens = min(nhit * bs + (tail[1] if tail else 0), padded)
+            # pos starts past the hit, rounded down to a chunk boundary;
+            # the final chunk always re-runs so first-token logits exist
+            skip = min(hit_tokens - hit_tokens % c, padded - c)
+            if self._prefix:
+                # one lookup per *admission* (a backpressured head's
+                # per-step retries would deflate the reported hit rate)
+                self.prefix_lookups += 1
+            if tail:
+                cow_src, cow_dst = tail[0], blocks[nhit]
+                self.prefix_cow_copies += 1
+            if hit_tokens:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += hit_tokens
+                self.prefix_skipped_tokens += skip
         self.caches = _admit_jit(self.caches, jnp.int32(b), jnp.int32(npad),
-                                 tbl_row, cfg=self.cfg, paged=self._paged,
-                                 kv_bits=self.acfg.kv_bits)
-        self._pos[b], self._start[b] = 0, npad
+                                 jnp.int32(skip), tbl_row, wtbl_row,
+                                 jnp.int32(cow_src), jnp.int32(cow_dst),
+                                 cfg=self.cfg, paged=self._paged,
+                                 kv_bits=self.acfg.kv_bits,
+                                 cow=tail is not None)
+        self._pos[b], self._start[b] = skip, npad
         self._temp[b], self._topp[b] = req.temperature, req.top_p
         self._topk[b], self._gfirst[b] = req.top_k, req.greedy_first
         self._keys[b] = np.asarray(jax.random.PRNGKey(req.seed))
-        self.slots[b] = _Slot(req, toks, mask, npad, c, self._admit_seq)
+        slot = _Slot(req, toks, mask, npad, c, self._admit_seq, skip=skip)
+        slot.blocks, slot.keys, slot.hit_full = blocks, plan["keys"], nhit
+        self.slots[b] = slot
         self._admit_seq += 1
         self._dirty = True
+
+    def _register_slot(self, s: _Slot) -> None:
+        """Index the slot's freshly computed prompt blocks the moment its
+        prefill completes: private full blocks under their chain keys,
+        plus the frozen partial tail (its content below the fill count is
+        immutable from here on — writes are append-only)."""
+        bs = self.pool.block_size
+        nfull = len(s.toks) // bs
+        self.pool.register(s.keys[s.hit_full:nfull],
+                           s.blocks[s.hit_full:nfull])
+        fill = len(s.toks) % bs
+        if fill and nfull < len(s.blocks):
+            parent = s.keys[nfull - 1] if nfull else (self.pool.salt,
+                                                      s.npad)
+            self.pool.register_tail(parent, s.blocks[nfull], fill,
+                                    s.toks[nfull * bs:])
 
     def _sample_flags(self) -> tuple[bool, bool]:
         """Static sampler specialization over every in-flight request."""
@@ -650,6 +801,11 @@ class ServeEngine:
             if not s.prefilling:               # prompt done: first token
                 if first_host is None:
                     first_host = np.asarray(first)
+                if self._prefix:
+                    # index the prompt's blocks before the first token can
+                    # retire the request (release must see the entries so
+                    # the blocks are retained, not freed)
+                    self._register_slot(s)
                 self._dirty = True             # row flips to decode phase
                 self._append_token(b, int(first_host[i]))
         if k:
@@ -701,14 +857,18 @@ class ServeEngine:
             self.slots[b] = None
             self._dirty = True
             if self.pool is not None:
-                # Blocks go back to the free list, and the slot's block
-                # table is pointed at the reserved sink block: the retired
+                # Drop the request's block references (indexed zero-ref
+                # blocks are retained in the pool's LRU for prefix reuse,
+                # the rest return to the free list) and point the slot's
+                # block tables at the reserved sink block: the retired
                 # row keeps executing its static-shape scatter-writes in
                 # subsequent decode blocks, and those must not land in
-                # blocks the free list may hand to the next admission.
+                # blocks the allocator may hand to the next admission —
+                # or in retained cache blocks.
                 self.pool.release(slot.req.uid)
+                zrow = jnp.zeros(self.caches_tbl_width, jnp.int32)
                 self.caches = _admit_jit(
-                    self.caches, jnp.int32(b), jnp.int32(0),
-                    jnp.zeros(self.caches_tbl_width, jnp.int32),
+                    self.caches, jnp.int32(b), jnp.int32(0), jnp.int32(0),
+                    zrow, zrow, jnp.int32(0), jnp.int32(0),
                     cfg=self.cfg, paged=self._paged,
                     kv_bits=self.acfg.kv_bits)

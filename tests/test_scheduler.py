@@ -203,13 +203,18 @@ def test_paged_matches_contiguous_bitwise(arch):
         np.testing.assert_array_equal(contig[r.uid], paged[r.uid])
 
 
-def test_paged_pool_lifecycle_and_churn():
+@pytest.mark.parametrize("prefix", [False, True], ids=["eager", "cached"])
+def test_paged_pool_lifecycle_and_churn(prefix):
     """Blocks are allocated at admission and ALL come back on retirement,
-    across a workload with heavy slot churn."""
+    across a workload with heavy slot churn. Without the prefix cache
+    the free list fully recovers; with it, retired prompts' indexed
+    blocks are *retained* in the released-block cache instead of freed —
+    block conservation (free + cached + live == pool) holds either way."""
     cfg, params, labels = _build("granite-3-8b")
     acfg = AnalogConfig(mode="off")
     scfg = SchedulerConfig(num_slots=3, max_len=32, prefill_chunk=4,
-                           paged=True, kv_block_size=4)
+                           paged=True, kv_block_size=4,
+                           prefix_cache=prefix)
     eng = ServeEngine(params, cfg, acfg, scfg)
     total = eng.pool.num_blocks
     for i in range(7):
@@ -219,10 +224,18 @@ def test_paged_pool_lifecycle_and_churn():
     while eng.queue or eng.num_active:
         eng.step()
         seen_live = max(seen_live, eng.pool.num_live)
-        assert eng.pool.num_live + eng.pool.num_free == total
+        assert (eng.pool.num_live + eng.pool.num_free
+                + eng.pool.num_cached == total)
     assert len(eng.results) == 7
     assert seen_live > 0
-    assert eng.pool.num_free == total          # everything released
+    assert eng.pool.num_live == 0              # every reference dropped
+    if prefix:
+        # prompt blocks outlive their requests in the LRU cache
+        assert eng.pool.num_cached > 0
+        assert eng.pool.num_free + eng.pool.num_cached == total
+    else:
+        assert eng.pool.num_cached == 0
+        assert eng.pool.num_free == total      # eager recovery
 
 
 def test_paged_out_of_blocks_backpressure():
@@ -366,6 +379,128 @@ def test_device_state_refresh_only_on_slot_changes():
         ServeEngine(params, cfg, acfg, scfg).run(
             [Request(uid=0, prompt=_prompt(cfg, 3), max_new=12,
                      temperature=0.0)])[0])
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_prefix_warm_equals_cold_bitwise(arch):
+    """Acceptance: warm-cache (prefix hit) greedy decode must be bitwise
+    identical to cold-cache decode for the same request across all four
+    engine families. Attention-only families take real hits; ssm/hybrid
+    engines must run the prefix_cache=True config as a clean no-op."""
+    cfg, params, labels = _build(arch)
+    acfg = AnalogConfig(mode="off")
+    reqs = [Request(uid=i, prompt=_prompt(cfg, 9 + (i % 2), seed=i % 3),
+                    max_new=5, temperature=0.0) for i in range(4)]
+    base = SchedulerConfig(num_slots=2, max_len=32, prefill_chunk=4,
+                           paged=True, kv_block_size=4,
+                           prefix_cache=False)
+    cold = ServeEngine(params, cfg, acfg, base).run(list(reqs))
+    eng = ServeEngine(params, cfg, acfg,
+                      dataclasses.replace(base, prefix_cache=True))
+    prime = eng.run(list(reqs))                # populates the index
+    warm = eng.run([dataclasses.replace(r, uid=r.uid + 100)
+                    for r in reqs])            # every prompt now cached
+    for r in reqs:
+        np.testing.assert_array_equal(cold[r.uid], prime[r.uid])
+        np.testing.assert_array_equal(cold[r.uid], warm[r.uid + 100])
+    if eng.prefix_enabled:
+        # seeds repeat (i % 3): the prime pass already shares prefixes,
+        # and the warm pass must skip prefill work for every request
+        assert eng.prefix_hit_tokens > 0
+        assert eng.prefix_skipped_tokens > 0
+        assert eng.pool.num_cached > 0
+    else:
+        assert cfg.family in ("ssm", "hybrid")
+        assert eng.prefix_hit_tokens == 0
+
+
+def test_prefix_cache_shares_across_live_requests():
+    """A prompt submitted while its twin is still decoding must reuse the
+    live request's blocks (refcount > 1 on shared blocks), produce its
+    solo tokens bitwise, and never write into the shared prefix."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    scfg = SchedulerConfig(num_slots=2, max_len=48, prefill_chunk=4,
+                           paged=True, kv_block_size=4)
+    prompt = _prompt(cfg, 11)
+    solo = ServeEngine(params, cfg, acfg, scfg).run(
+        [Request(uid=0, prompt=prompt, max_new=8, temperature=0.0)])[0]
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    eng.submit(Request(uid=1, prompt=prompt, max_new=12, temperature=0.0))
+    while any(s is not None and s.prefilling for s in eng.slots) or \
+            eng.queue:
+        eng.step()                       # leader prefilled + registered
+    eng.submit(Request(uid=2, prompt=prompt, max_new=8, temperature=0.0))
+    eng.step()                           # twin admitted onto shared blocks
+    shared = [b for b, r in eng.pool._ref.items() if r > 1]
+    assert shared, "twin admission did not share the leader's blocks"
+    out = eng.run()
+    np.testing.assert_array_equal(solo, out[2])
+    assert eng.prefix_hit_tokens > 0 and eng.prefix_skipped_tokens > 0
+
+
+def test_prefix_cow_partial_tail_block():
+    """With blocks larger than the prefill chunk the prompt leaves a
+    partial tail block; a matching admission must copy-on-write it (one
+    device block copy) and still decode bitwise identically to cold."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    prompt = _prompt(cfg, 26)
+    scfg = SchedulerConfig(num_slots=2, max_len=40, prefill_chunk=8,
+                           paged=True, kv_block_size=20,
+                           prefix_cache=False)
+    cold = ServeEngine(params, cfg, acfg, scfg).run(
+        [Request(uid=0, prompt=prompt, max_new=6, temperature=0.0)])[0]
+    eng = ServeEngine(params, cfg, acfg,
+                      dataclasses.replace(scfg, prefix_cache=True))
+    eng.run([Request(uid=1, prompt=prompt, max_new=6, temperature=0.0)])
+    out = eng.run([Request(uid=2, prompt=prompt, max_new=6,
+                           temperature=0.0)])[2]
+    np.testing.assert_array_equal(cold, out)
+    assert eng.prefix_cow_copies == 1
+    # tail COW extends the hit past the full blocks: padded=32, one full
+    # 20-token block + a 12-token frozen tail -> skip lands at 24, not 16
+    assert eng.prefix_skipped_tokens == 24
+
+
+def test_fork_sample_candidates_matches_independent():
+    """Acceptance: the fork-aware best-of-n path (leader + n-1 forks on
+    the prefix cache) must produce exactly the PR 4 independent-request
+    answers for every candidate seed."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    prompts = np.stack([_prompt(cfg, 9, seed=s) for s in range(2)])
+    fork = BestOfNConfig(temperature=0.9, top_k=13, max_new=3,
+                         num_slots=4, prefill_chunk=4)
+    indep = dataclasses.replace(fork, paged=False, prefix_cache=False)
+    a = sample_candidates(params, cfg, acfg, jax.random.PRNGKey(5),
+                          prompts, n=3, bcfg=fork)
+    b = sample_candidates(params, cfg, acfg, jax.random.PRNGKey(5),
+                          prompts, n=3, bcfg=indep)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_prefix_eviction_under_pressure_stays_correct():
+    """An undersized pool must evict LRU cached blocks to admit new
+    requests (never stalling on retained blocks) and still produce
+    bitwise-correct greedy tokens."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    reqs = [Request(uid=i, prompt=_prompt(cfg, 8, seed=i), max_new=4,
+                    temperature=0.0) for i in range(5)]
+    roomy = SchedulerConfig(num_slots=2, max_len=16, prefill_chunk=4,
+                            paged=True, kv_block_size=4)
+    ref = ServeEngine(params, cfg, acfg, roomy).run(list(reqs))
+    # 3 blocks/request, 2 slots, 7 usable blocks: retained prompt blocks
+    # of finished requests must be evicted to keep admitting
+    tight = dataclasses.replace(roomy, kv_blocks=7)
+    eng = ServeEngine(params, cfg, acfg, tight)
+    out = eng.run(list(reqs))
+    for r in reqs:
+        np.testing.assert_array_equal(ref[r.uid], out[r.uid])
+    assert eng.pool.evictions > 0
+    assert (eng.pool.num_live + eng.pool.num_free
+            + eng.pool.num_cached == 7)
 
 
 def test_sample_candidates_multi_token_extraction():

@@ -23,6 +23,13 @@ regressed by more than ``--threshold`` (default 15%):
   flowing while prompts streamed in — the fused-chunked-prefill
   contract); and (when present) ``kv_cache.int8_divergence_ok`` and the
   >= 2x ``bytes_reduction``;
+* prefix-cache invariants (when the fresh run carries the
+  ``prefix_cache`` section): the warm shared-prefix pass must beat the
+  cold paged pass by >= ``--prefix-floor`` (default 1.3x), the warm pass
+  must report nonzero prefix-hit tokens (the cache is actually being
+  hit, not silently missing), and ``cold_warm_greedy_parity`` must be
+  true (cached-prefix decode is bitwise identical to cold decode — the
+  contract that makes prefix caching accuracy-free);
 * with ``--attn BENCH_attn.json``, the paged-attention microbench
   invariants too: paged decode cost must scale with live tokens and beat
   full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
@@ -33,7 +40,7 @@ regressed by more than ``--threshold`` (default 15%):
 
     python tools/check_perf_regression.py BASELINE.json FRESH.json \
         [--threshold 0.15] [--abs-threshold 0.5] [--paged-floor 1.0] \
-        [--attn BENCH_attn.json]
+        [--prefix-floor 1.3] [--attn BENCH_attn.json]
 """
 
 from __future__ import annotations
@@ -53,7 +60,8 @@ def _get(d: dict, dotted: str):
 
 
 def check(baseline: dict, fresh: dict, threshold: float,
-          abs_threshold: float, paged_floor: float = 1.0) -> list[str]:
+          abs_threshold: float, paged_floor: float = 1.0,
+          prefix_floor: float = 1.3) -> list[str]:
     """Return a list of failure strings (empty = pass)."""
     fails = []
     metrics = {"speedup_tokens_per_s": threshold,
@@ -103,6 +111,21 @@ def check(baseline: dict, fresh: dict, threshold: float,
         if kv.get("bytes_reduction", 0) < 2.0:
             fails.append("paged-int8 cache-bytes reduction < 2x: "
                          f"{kv.get('bytes_reduction')}")
+    pc = _get(fresh, "prefix_cache")
+    if pc is not None:
+        speedup = pc.get("warm_speedup_vs_cold", 0.0)
+        hits = pc.get("warm_hit_tokens", 0)
+        print(f"[perf] prefix_cache.warm_speedup_vs_cold: {speedup} "
+              f"(floor {prefix_floor}, {hits} hit tokens)")
+        if speedup < prefix_floor:
+            fails.append(f"warm shared-prefix speedup {speedup} below "
+                         f"the {prefix_floor}x floor over cold paged")
+        if hits <= 0:
+            fails.append("prefix cache reported zero hit tokens on the "
+                         "shared-prefix workload (cache not engaging)")
+        if not pc.get("cold_warm_greedy_parity"):
+            fails.append("cold/warm greedy parity broken: cached-prefix "
+                         "decode diverged from cold decode")
     return fails
 
 
@@ -146,6 +169,9 @@ def main() -> int:
     ap.add_argument("--paged-floor", type=float, default=1.0,
                     help="min fresh paged_speedup_vs_static (the paged "
                          "engine must beat static end-to-end)")
+    ap.add_argument("--prefix-floor", type=float, default=1.3,
+                    help="min warm-vs-cold speedup on the shared-prefix "
+                         "workload (prefix cache must pay for itself)")
     ap.add_argument("--attn", default=None,
                     help="fresh BENCH_attn.json to gate the paged "
                          "attention invariants on")
@@ -161,7 +187,7 @@ def main() -> int:
     with open(args.fresh) as f:
         fresh = json.load(f)
     fails = check(baseline, fresh, args.threshold, args.abs_threshold,
-                  args.paged_floor)
+                  args.paged_floor, args.prefix_floor)
     if args.attn:
         with open(args.attn) as f:
             fails += check_attn(json.load(f), args.attn_floor,

@@ -7,11 +7,18 @@ serving cache layouts:
   slot cache: every slot pays ``max_len`` regardless of fill),
 * contiguous bf16 — same at 2 bytes (the ``cache_dtype`` lever),
 * paged int8 — ``2 * L_attn * ceil(max_len/bs) * bs * KV * (hd + 4)`` plus
-  the block-table row (int8 payload + one fp32 scale per token/head; still
-  worst-case allocation — the free-list returns a *finished* request's
-  blocks, so fleet-level memory additionally scales with live tokens).
+  the read + write block-table rows (int8 payload + one fp32 scale per
+  token/head; still worst-case allocation — the refcounting allocator
+  returns a *finished* request's blocks, so fleet-level memory
+  additionally scales with live tokens),
+* prefix-cached — what the radix prefix cache changes: the bytes a cached
+  shared header costs once (``hdr`` column, default 64 tokens), and the
+  *effective* int8 bytes per slot when ``--share`` requests serve the same
+  header (every sharer after the first references the cached blocks
+  instead of recomputing them — the best-of-n / system-prompt shape).
 
     PYTHONPATH=src python tools/kv_memory_table.py [--max-len 4096]
+        [--header 64] [--share 8]
 """
 
 from __future__ import annotations
@@ -36,8 +43,27 @@ def bytes_per_slot(cfg, max_len: int, block: int = 16):
     fp32 = 2 * la * max_len * kv * hd * 4
     bf16 = fp32 // 2
     nb = -(-max_len // block)
-    int8 = 2 * la * nb * block * kv * (hd + 4) + la * nb * 4
+    # two int32 table rows now: the read table + the write table
+    int8 = 2 * la * nb * block * kv * (hd + 4) + 2 * la * nb * 4
     return fp32, bf16, int8
+
+
+def cached_header_bytes(cfg, header: int, block: int = 16) -> int:
+    """Paged-int8 bytes one cached shared header occupies (the one-time
+    cost the prefix cache pays to make every sharer's prefill free)."""
+    la, kv, hd = attn_layers(cfg), cfg.num_kv_heads, cfg.head_dim
+    nb = -(-header // block)
+    return 2 * la * nb * block * kv * (hd + 4)
+
+
+def effective_bytes_per_slot(cfg, max_len: int, header: int, share: int,
+                             block: int = 16) -> int:
+    """Effective paged-int8 bytes per slot when ``share`` concurrent
+    requests reference one cached ``header``-token prefix: the header is
+    stored once, so each slot amortizes ``(share - 1) / share`` of it."""
+    _, _, int8 = bytes_per_slot(cfg, max_len, block)
+    hdr = cached_header_bytes(cfg, header, block)
+    return int8 - hdr * (share - 1) // share
 
 
 def _fmt(n: int) -> str:
@@ -50,16 +76,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--max-len", type=int, default=4096)
     ap.add_argument("--block", type=int, default=16)
+    ap.add_argument("--header", type=int, default=64,
+                    help="shared-prefix header length for the "
+                         "cached-bytes / effective-capacity columns")
+    ap.add_argument("--share", type=int, default=8,
+                    help="requests sharing one cached header (the "
+                         "best-of-n fan-out)")
     args = ap.parse_args()
     print(f"| arch | attn layers | KV x hd | contiguous fp32 (MiB/slot) "
-          f"| bf16 | paged int8 | reduction |")
-    print("|---|---|---|---|---|---|---|")
+          f"| bf16 | paged int8 | reduction "
+          f"| hdr{args.header} cached (MiB) "
+          f"| int8 @{args.share}-way hdr | eff. reduction |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
     for name in ARCHS:
         cfg = get_config(name)
         f32, b16, i8 = bytes_per_slot(cfg, args.max_len, args.block)
+        hdr = cached_header_bytes(cfg, args.header, args.block)
+        eff = effective_bytes_per_slot(cfg, args.max_len, args.header,
+                                       args.share, args.block)
         print(f"| {cfg.name} | {attn_layers(cfg)} "
               f"| {cfg.num_kv_heads}x{cfg.head_dim} | {_fmt(f32)} "
-              f"| {_fmt(b16)} | {_fmt(i8)} | {f32 / i8:.1f}x |")
+              f"| {_fmt(b16)} | {_fmt(i8)} | {f32 / i8:.1f}x "
+              f"| {_fmt(hdr)} | {_fmt(eff)} | {f32 / eff:.1f}x |")
 
 
 if __name__ == "__main__":
