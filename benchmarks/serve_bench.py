@@ -42,6 +42,15 @@ pass) on the paged engine. Reports both rows, the warm/cold speedup
 the hit/skipped-token telemetry, retained-block and eviction counts, and
 the cold==warm greedy-parity flag (bitwise, a hard invariant).
 
+The ``prefix_cache_hybrid`` section repeats the shared-prefix cold/warm
+comparison on the reduced Jamba stack (``hybrid_bench_arch``): warm
+admissions there restore a (KV blocks, SSM state snapshot) pair from the
+content-addressed snapshot pool, so the row also reports
+``state_snaps_captured`` / ``state_snap_restores``. And
+``prefix_family_parity`` runs a tiny warm≡cold bitwise greedy check on
+all four engine families (dense/moe/ssm/hybrid) — every entry must be
+True (CI gates it via ``check_perf_regression.py``).
+
 Both paths run once untimed (to compile every executable) and once timed.
 Emits ``BENCH_serve.json`` with useful-token throughput and p50/p99 request
 latency for both engines, the speedup, and the result of the scheduler's
@@ -61,6 +70,7 @@ import time
 import jax
 import numpy as np
 
+from repro.configs import get_config
 from repro.configs.base import ArchConfig
 from repro.core.analog import AnalogConfig
 from repro.models import build
@@ -82,6 +92,17 @@ def bench_arch(d_model: int = 320, num_layers: int = 6) -> ArchConfig:
                       num_layers=num_layers, d_model=d_model, num_heads=8,
                       num_kv_heads=4, d_ff=4 * d_model, vocab_size=2048,
                       d_head=40, norm="rmsnorm", act="silu")
+
+
+def hybrid_bench_arch() -> ArchConfig:
+    """The hybrid shape for the prefix-cache row: the reduced Jamba stack
+    (attention/mamba mix, MoE every other layer) with no-drop MoE
+    capacity so greedy decode is deterministic and the warm/cold passes
+    are bitwise comparable. Exercises the (KV blocks, state snapshot)
+    restore pair end to end."""
+    cfg = get_config("jamba-v0.1-52b").reduce()
+    return dataclasses.replace(cfg,
+                               capacity_factor=float(cfg.num_experts))
 
 
 def make_workload(num_requests: int, max_prompt: int, max_new: int,
@@ -169,7 +190,7 @@ def run_static(params, cfg, acfg, reqs, num_slots):
 
 def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
                    paged=False, kv_block_size=16, prefix_cache=False,
-                   kv_blocks=0, engine=None):
+                   kv_blocks=0, state_snapshots=0, engine=None):
     """Continuous batching. Returns (wall_s, latencies_s, tokens, engine).
 
     Pass ``engine`` to time a workload on an existing engine (the warm
@@ -183,7 +204,7 @@ def run_continuous(params, cfg, acfg, reqs, num_slots, prefill_chunk,
             num_slots=num_slots, max_len=max_len,
             prefill_chunk=prefill_chunk, paged=paged,
             kv_block_size=kv_block_size, prefix_cache=prefix_cache,
-            kv_blocks=kv_blocks))
+            kv_blocks=kv_blocks, state_snapshots=state_snapshots))
     t0 = time.perf_counter()
     results = eng.run(reqs)
     wall = time.perf_counter() - t0
@@ -239,8 +260,8 @@ def int8_divergence_check(params, cfg, reqs, num_slots, prefill_chunk):
     return float(np.mean(first)), float(np.mean(prefix))
 
 
-def prefix_cache_bench(params, cfg, acfg, num_slots,
-                       prefill_chunk) -> dict:
+def prefix_cache_bench(params, cfg, acfg, num_slots, prefill_chunk,
+                       per_group: int = 8) -> dict:
     """Cold-vs-warm shared-prefix rows on the paged engine.
 
     *cold* — prefix cache disabled, every request prefills its whole
@@ -251,14 +272,22 @@ def prefix_cache_bench(params, cfg, acfg, num_slots,
     collapses to the mandatory final chunk. Cold and warm are greedy and
     must match bitwise (``cold_warm_greedy_parity`` — a CI invariant
     alongside the >= 1.3x ``warm_speedup_vs_cold`` floor).
+
+    Works for any family: attention-only stacks share KV blocks; the
+    ssm/hybrid stacks additionally capture and restore SSM state
+    snapshots (reported when the engine carries a snapshot pool).
     """
-    reqs = make_shared_prefix_workload(num_groups=2, per_group=8)
+    reqs = make_shared_prefix_workload(num_groups=2, per_group=per_group,
+                                       vocab=cfg.vocab_size)
     bs = 16
     max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
                   for r in reqs)
     # pool headroom: slot capacity + every distinct prompt's blocks, so
-    # the warm pass never evicts what the priming pass cached
-    kv_blocks = (num_slots + len(reqs)) * -(-max_len // bs)
+    # the warm pass never evicts what the priming pass cached; the
+    # ssm/hybrid snapshot pool gets the same headroom
+    nb = -(-max_len // bs)
+    kv_blocks = (num_slots + len(reqs)) * nb
+    snaps = (num_slots + len(reqs)) * nb
 
     # cold: compile warm-up pass, then best-of-2 timed runs (single
     # samples on shared CI runners are noisy enough to flip the gate)
@@ -274,7 +303,7 @@ def prefix_cache_bench(params, cfg, acfg, num_slots,
     _, _, _, w_eng = run_continuous(
         params, cfg, acfg, list(reqs), num_slots, prefill_chunk,
         paged=True, kv_block_size=bs, prefix_cache=True,
-        kv_blocks=kv_blocks)
+        kv_blocks=kv_blocks, state_snapshots=snaps)
     prime_hits = w_eng.prefix_hit_tokens
     prime_skipped = w_eng.prefix_skipped_tokens
     runs = []
@@ -296,9 +325,11 @@ def prefix_cache_bench(params, cfg, acfg, num_slots,
     warm_hits = (w_eng.prefix_hit_tokens - prime_hits) // len(runs)
     warm_skipped = ((w_eng.prefix_skipped_tokens - prime_skipped)
                     // len(runs))
-    return {
+    out = {
         "workload": {"num_requests": len(reqs), "shared_header": 64,
-                     "per_group": 8, "prompt_tokens": prompt_tokens},
+                     "per_group": per_group,
+                     "prompt_tokens": prompt_tokens,
+                     "family": cfg.family},
         "cold": summarize(c_wall, c_lats, c_tok),
         "warm": summarize(w_wall, w_lats, w_tok),
         "warm_speedup_vs_cold": round((w_tok / w_wall) / (c_tok / c_wall),
@@ -311,6 +342,47 @@ def prefix_cache_bench(params, cfg, acfg, num_slots,
         "evictions": int(w_eng.pool.evictions),
         "cold_warm_greedy_parity": bool(parity),
     }
+    if w_eng.state_pool is not None:
+        out["state_snaps_captured"] = int(w_eng.state_snaps_captured)
+        out["state_snap_restores"] = int(w_eng.state_snap_restores)
+        out["cached_snapshots"] = int(w_eng.state_pool.num_cached)
+    return out
+
+
+def family_parity_check() -> dict:
+    """warm≡cold bitwise greedy parity across all four engine families
+    (dense KV sharing, moe no-drop, ssm snapshot-only, hybrid
+    KV+snapshot) on tiny reduced archs. Every entry must be True — the
+    CI guard fails the build otherwise."""
+    archs = [("dense", "granite-3-8b"), ("moe", "dbrx-132b"),
+             ("ssm", "mamba2-130m"), ("hybrid", "jamba-v0.1-52b")]
+    out = {}
+    for fam, arch in archs:
+        cfg = get_config(arch).reduce()
+        if cfg.num_experts:       # no-drop capacity: deterministic greedy
+            cfg = dataclasses.replace(
+                cfg, capacity_factor=float(cfg.num_experts))
+        cfg, params, _ = build(cfg, jax.random.PRNGKey(0))
+        acfg = AnalogConfig(mode="off")
+        rng = np.random.default_rng(5)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 9
+                                            ).astype(np.int32),
+                        max_new=4, temperature=0.0) for i in range(2)]
+        base = SchedulerConfig(
+            num_slots=2, max_len=required_max_len(9, 4, 4),
+            prefill_chunk=4, paged=True, kv_block_size=4,
+            prefix_cache=False)
+        cold = ServeEngine(params, cfg, acfg, base).run(list(reqs))
+        eng = ServeEngine(params, cfg, acfg,
+                          dataclasses.replace(base, prefix_cache=True))
+        eng.run(list(reqs))       # priming pass populates the index
+        warm = eng.run([dataclasses.replace(r, uid=r.uid + 10)
+                        for r in reqs])
+        out[fam] = bool(all(np.array_equal(cold[r.uid], warm[r.uid + 10])
+                            for r in reqs)
+                        and eng.prefix_hit_tokens > 0)
+    return out
 
 
 def parity_check(params, cfg, acfg, num_slots, prefill_chunk) -> bool:
@@ -386,6 +458,15 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
     prefix = prefix_cache_bench(params, cfg, acfg, num_slots,
                                 prefill_chunk)
 
+    # the same shared-prefix shape on the hybrid (Jamba) stack: warm
+    # admissions restore a (KV blocks, state snapshot) pair instead of
+    # KV blocks alone — small per_group keeps the row CI-cheap
+    h_cfg, h_params, _ = build(hybrid_bench_arch(), jax.random.PRNGKey(1))
+    prefix_hybrid = prefix_cache_bench(h_params, h_cfg, acfg,
+                                       num_slots=4, prefill_chunk=16,
+                                       per_group=4)
+    family_parity = family_parity_check()
+
     result = {
         "workload": {"num_requests": num_requests, "max_prompt": max_prompt,
                      "max_new": max_new, "num_slots": num_slots,
@@ -413,6 +494,8 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                                        and prefix_agree >= 0.5),
         },
         "prefix_cache": prefix,
+        "prefix_cache_hybrid": prefix_hybrid,
+        "prefix_family_parity": family_parity,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -435,6 +518,16 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
         f"cached_blocks={prefix['cached_blocks']} "
         f"evictions={prefix['evictions']} "
         f"parity={prefix['cold_warm_greedy_parity']}")
+    common.bench_row(
+        "serve.prefix_hybrid", 0.0,
+        f"cold_tok_s={prefix_hybrid['cold']['tokens_per_s']} "
+        f"warm_tok_s={prefix_hybrid['warm']['tokens_per_s']} "
+        f"warm_speedup={prefix_hybrid['warm_speedup_vs_cold']} "
+        f"hit_tokens={prefix_hybrid['warm_hit_tokens']} "
+        f"snaps={prefix_hybrid['state_snaps_captured']} "
+        f"restores={prefix_hybrid['state_snap_restores']} "
+        f"parity={prefix_hybrid['cold_warm_greedy_parity']} "
+        f"family_parity={family_parity}")
     kv = result["kv_cache"]
     common.bench_row(
         "serve.claims", 0.0,

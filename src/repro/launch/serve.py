@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 import time
 
 import jax
@@ -171,22 +172,36 @@ def main():
         paged=args.paged, kv_block_size=args.kv_block_size,
         kv_blocks=args.kv_blocks, prefix_cache=args.prefix_cache,
         cache_salt=args.cache_salt))
+    # honest feature reporting: a requested-but-inert feature warns
+    # loudly with the engine's recorded reason — never a silent placebo.
+    # --prefix-cache defaults on, so its warning fires only when the
+    # flag was explicitly requested on the command line.
+    requested = {"paged": args.paged,
+                 "prefix_cache": "--prefix-cache" in sys.argv}
+    for feat, why in eng.gating_reasons.items():
+        if requested.get(feat):
+            flag = "--" + feat.replace("_", "-")
+            print(f"[serve] WARNING: {flag} requested but inactive: {why}")
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
     lats = sorted(eng.finished_at[r.uid] - t0 for r in reqs)
-    # report what the engine actually runs (SSM stacks have no KV to
-    # page; hybrid stacks page but cannot prefix-match past SSM state)
+    # report what the engine actually runs (SSM stacks serve from the
+    # contiguous state cache; their prefix cache is the snapshot pool)
     mode = ("paged" + ("-int8" if acfg.kv_bits == 8 else "")
             if eng.pool is not None else "contiguous")
     if eng.prefix_enabled:
         hit_rate = (eng.prefix_hits / eng.prefix_lookups
                     if eng.prefix_lookups else 0.0)
+        idx_pool = eng.pool if eng.pool is not None else eng.state_pool
+        snaps = (f", {eng.state_snaps_captured} state snapshots "
+                 f"({eng.state_snap_restores} restored)"
+                 if eng.state_pool is not None else "")
         prefix = (f", prefix cache: {hit_rate:.0%} hit rate, "
                   f"{eng.prefix_skipped_tokens} prefill tokens skipped, "
-                  f"{eng.pool.num_cached} blocks retained, "
-                  f"{eng.pool.evictions} evictions")
+                  f"{idx_pool.num_cached} blocks retained, "
+                  f"{idx_pool.evictions} evictions{snaps}")
     else:
         prefix = ""
     print(f"[serve] continuous ({mode} kv, {args.cache_dtype}): {total} "

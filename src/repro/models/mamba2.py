@@ -125,13 +125,17 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
 
     # the conv tail is stored at the cache's dtype (bf16 caches hand the
     # model a bf16 state and must get one back — scatter requires it).
-    # Fully-masked rows keep their old tail exactly: the trailing-window
-    # update would otherwise shift zeros into a row the current fused
-    # substep must leave untouched (the SSM state is already transparent
-    # through dt = 0; the conv state needs this explicit freeze).
+    # width == 1 carries no tail (new_conv is None): the zero-length
+    # [B, 0, C] cache leaf passes through unchanged so every gather/
+    # scatter keeps a consistent tree. Fully-masked rows keep their old
+    # tail exactly: the trailing-window update would otherwise shift
+    # zeros into a row the current fused substep must leave untouched
+    # (the SSM state is already transparent through dt = 0; the conv
+    # state needs this explicit freeze).
     conv_cast = (None if cache is None
+                 else cache["conv"] if new_conv is None
                  else new_conv.astype(cache["conv"].dtype))
-    if cache is not None and seq_mask is not None:
+    if cache is not None and seq_mask is not None and new_conv is not None:
         row_on = jnp.max(seq_mask, axis=1) > 0                # [B]
         conv_cast = jnp.where(row_on[:, None, None], conv_cast,
                               cache["conv"])
@@ -144,13 +148,15 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
             dt[:, 0].reshape(bsz * heads), jnp.tile(a, bsz),
             to_bh(bg), to_bh(cg))
         y = y_t.reshape(bsz, 1, heads, pdim)
-        new_cache = {"conv": conv_cast,
+        # {**cache, ...} passes extra leaves (the scheduler's *_snap
+        # snapshot pools) through untouched
+        new_cache = {**cache, "conv": conv_cast,
                      "ssm": h.reshape(bsz, heads, n, pdim)}
     else:
         h0 = (cache["ssm"].reshape(bsz * heads, n, pdim)
               if cache is not None else None)
         y, h_final = _ssd_with_state(xh, dt, a, bg, cg, h0)
-        new_cache = ({"conv": conv_cast,
+        new_cache = ({**cache, "conv": conv_cast,
                       "ssm": h_final.reshape(bsz, heads, n, pdim)}
                      if cache is not None else None)
 
@@ -197,12 +203,28 @@ def _ssd_with_state(xh, dt, a, bg, cg, h0=None):
     return y, h
 
 
-def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32,
+                     state_snaps: int = 0) -> dict:
     """Decode-time SSM state. Slot-major: every leaf has the batch/slot
     dimension leading (``conv`` [B, W-1, C], ``ssm`` [B, H, N, P]) so the
     continuous-batching scheduler can gather/scatter one request's state
-    with a single dynamic slice per leaf, uniformly with the KV cache."""
+    with a single dynamic slice per leaf, uniformly with the KV cache.
+
+    ``state_snaps > 0`` adds the prefix-cache snapshot pools ``conv_snap``
+    [NS, W-1, C] / ``ssm_snap`` [NS, H, N, P]: NS content-addressed copies
+    of the per-slot state, captured at KV-block boundaries during prefill
+    and restored at admission (``serve.kv_pool.StateSnapshotPool`` owns
+    the NS-axis slot ids). The model threads them through unchanged.
+    """
     d_inner, heads, gn, conv_ch, _ = _dims(cfg)
-    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
-            "ssm": jnp.zeros((batch, heads, cfg.ssm_state, cfg.ssm_headdim),
-                             jnp.float32)}
+    cache = {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, heads, cfg.ssm_state, cfg.ssm_headdim),
+                         jnp.float32)}
+    if state_snaps:
+        cache["conv_snap"] = jnp.zeros(
+            (state_snaps, cfg.conv_width - 1, conv_ch), dtype)
+        cache["ssm_snap"] = jnp.zeros(
+            (state_snaps, heads, cfg.ssm_state, cfg.ssm_headdim),
+            jnp.float32)
+    return cache

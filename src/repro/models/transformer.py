@@ -460,7 +460,7 @@ def forward(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx, inputs,
 def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32,
                 per_slot: bool = False, paged: bool = False,
                 kv_block_size: int = 16, kv_blocks: int | None = None,
-                kv_bits: int = 0):
+                kv_bits: int = 0, state_snaps: int = 0):
     """Stacked per-layer decoding caches matching ``apply_blocks`` scan xs.
 
     ``per_slot=True`` builds the continuous-batching slot layout: the
@@ -475,6 +475,10 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32,
     ``kv_bits=8``) and a per-slot block table; every layer shares the same
     logical→physical mapping, so one host-side allocation covers the
     stack. SSM leaves are untouched (their state is O(1) per slot already).
+
+    ``state_snaps > 0`` adds per-layer ``conv_snap``/``ssm_snap`` snapshot
+    pools to every mamba cache (ssm/hybrid prefix caching — see
+    ``mamba2.init_mamba_cache``); attention-only families ignore it.
     """
     fam = cfg.family
     attn_kw = dict(paged=paged, kv_block_size=kv_block_size,
@@ -487,18 +491,22 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.float32,
         return stack(L.init_cache(cfg, batch, max_len, dtype, per_slot,
                                   **attn_kw), cfg.num_layers)
     if fam == "ssm":
-        return stack(M.init_mamba_cache(cfg, batch, dtype), cfg.num_layers)
+        return stack(M.init_mamba_cache(cfg, batch, dtype,
+                                        state_snaps=state_snaps),
+                     cfg.num_layers)
     if fam == "hybrid":
         n_sb = cfg.num_layers // cfg.attn_every
         sb = {"attn": L.init_cache(cfg, batch, max_len, dtype, per_slot,
                                    **attn_kw),
-              "mamba": stack(M.init_mamba_cache(cfg, batch, dtype),
+              "mamba": stack(M.init_mamba_cache(cfg, batch, dtype,
+                                                state_snaps=state_snaps),
                              cfg.attn_every - 1)}
         return stack(sb, n_sb)
     raise ValueError(fam)
 
 
-def cache_slot_spec(cfg, paged: bool = False, kv_bits: int = 0):
+def cache_slot_spec(cfg, paged: bool = False, kv_bits: int = 0,
+                    state_snaps: bool = False):
     """Companion trees for the slot cache: ``(axes, kinds)``.
 
     ``axes`` mirrors the ``init_caches(per_slot=True)`` structure with the
@@ -519,6 +527,14 @@ def cache_slot_spec(cfg, paged: bool = False, kv_bits: int = 0):
     COW copy indexes). The scheduler uses these to gather one slot's
     cache row, run a prefill chunk on it, and scatter it back — without
     hard-coding the pytree layout of any model family.
+
+    ``state_snaps=True`` (ssm/hybrid prefix caching) adds the
+    ``conv_snap``/``ssm_snap`` leaves of
+    ``init_caches(state_snaps > 0)``: kind ``"spool"`` with axis ``-1`` —
+    pool-wide like the paged KV leaves, passed through gathers whole and
+    never touched at admission except by the scheduler's explicit
+    snapshot capture/restore copies (which use the sibling ``"state"``
+    leaf's slot axis as the snapshot-slot axis).
     """
     fam = cfg.family
     if paged:
@@ -535,15 +551,20 @@ def cache_slot_spec(cfg, paged: bool = False, kv_bits: int = 0):
                       "start": "start"}
     mamba_axes = {"conv": 1, "ssm": 1}
     mamba_kinds = {"conv": "state", "ssm": "state"}
+    if state_snaps:
+        mamba_axes.update(conv_snap=-1, ssm_snap=-1)
+        mamba_kinds.update(conv_snap="spool", ssm_snap="spool")
     if fam in ("dense", "vlm", "audio", "moe"):
         return attn_axes, attn_kinds
     if fam == "ssm":
         return mamba_axes, mamba_kinds
     if fam == "hybrid":
         # hybrid mamba leaves carry an extra leading per-super-block stack
-        # dimension, shifting the slot axis by one
+        # dimension, shifting the slot axis by one (pool-wide -1 leaves
+        # have no slot axis to shift)
         axes = {"attn": attn_axes,
-                "mamba": {k: v + 1 for k, v in mamba_axes.items()}}
+                "mamba": {k: (v + 1 if v >= 0 else v)
+                          for k, v in mamba_axes.items()}}
         kinds = {"attn": attn_kinds, "mamba": mamba_kinds}
         return axes, kinds
     raise ValueError(fam)

@@ -62,8 +62,9 @@ class BestOfNConfig:
             Table 3 digital deployment path executed by
             ``kernels.int4_matmul``).
         paged: Serve candidates from the block-paged KV pool (required
-            for prefix sharing; attention-free stacks fall back to the
-            contiguous slot cache automatically).
+            for prefix sharing; attention-free stacks keep their O(1)
+            contiguous state cache and share prefixes via the
+            state-snapshot pool instead).
         prefix_cache: Fork-aware candidate generation — submit one
             leader per prompt, fork the other n−1 at the shared-prefix
             boundary via the radix prefix cache. Bitwise-identical
@@ -100,12 +101,13 @@ def sample_candidates(params, cfg, acfg: AnalogConfig, key,
     generated token, matching the single-token toy answer tasks.
 
     With the prefix cache enabled (``bcfg.paged`` + ``bcfg.prefix_cache``,
-    attention-only families) candidate generation is fork-aware: one
-    leader per prompt is submitted first and driven until every leader's
-    prompt has prefilled (registering its blocks in the radix index),
-    then the n−1 siblings are forked — each admission reuses the leader's
-    prompt blocks and re-runs only the final chunk. Answers are bitwise
-    identical to the independent-requests path per candidate seed.
+    any family) candidate generation is fork-aware: one leader per
+    prompt is submitted first and driven until every leader's prompt has
+    prefilled (registering its blocks — and, for ssm/hybrid stacks, its
+    SSM state snapshots — in the radix index), then the n−1 siblings are
+    forked — each admission reuses the leader's prompt blocks/snapshots
+    and re-runs only the trailing chunks. Answers are bitwise identical
+    to the independent-requests path per candidate seed.
 
     → answers [num_prompts, n] int array.
     """
@@ -127,12 +129,18 @@ def sample_candidates(params, cfg, acfg: AnalogConfig, key,
     prompt_blocks = -(-padded_prompt_len(plen, bcfg.prefill_chunk) // bs)
     kv_blocks = (bcfg.num_slots * -(-max_len // bs)
                  + num * (prompt_blocks + 1)) if bcfg.paged else 0
+    # same headroom for the ssm/hybrid state-snapshot pool: every
+    # prompt's boundary snapshots must survive the leader→fork gap
+    # (attention-only families ignore this — no state pool is built)
+    state_snaps = ((bcfg.num_slots + num) * prompt_blocks
+                   if bcfg.paged and bcfg.prefix_cache else 0)
     scfg = SchedulerConfig(
         num_slots=bcfg.num_slots,
         max_len=max_len,
         prefill_chunk=bcfg.prefill_chunk,
         paged=bcfg.paged, prefix_cache=bcfg.prefix_cache,
-        kv_block_size=bs, kv_blocks=kv_blocks)
+        kv_block_size=bs, kv_blocks=kv_blocks,
+        state_snapshots=state_snaps)
     eng = ServeEngine(params, cfg, acfg, scfg)
     reqs = [Request(uid=i, prompt=np.asarray(prompts[i // n], np.int32),
                     max_new=bcfg.max_new, temperature=bcfg.temperature,

@@ -45,8 +45,18 @@ the scheduler's per-slot *write* block table redirects any chunk write
 into a prefix-hit block to the sink, so cached content is immutable by
 construction (``models.layers._paged_slot_attention``).
 
+The refcount/LRU/eviction machinery is family-agnostic, so it is factored
+into :class:`_RefcountedPool` and shared with
+:class:`StateSnapshotPool` — the content-addressed index of SSM
+recurrence/conv-tail snapshots that gives the attention-free (ssm) and
+hybrid families real prefix caching (see ``serve.scheduler``). A KV block
+stores the tokens of one block; a state snapshot stores the *recurrent
+summary of the whole prefix* up to a block boundary, indexed under the
+same hash-chain key — so one snapshot hit replaces a whole chain walk.
+
 Pure host-side Python (deque + dicts); the device only ever sees the
-block-table rows this hands out and the COW copy pairs.
+block-table rows / snapshot slot ids this hands out and the COW copy
+pairs.
 """
 
 from __future__ import annotations
@@ -66,31 +76,34 @@ class OutOfBlocksError(RuntimeError):
     or evictable."""
 
 
-class KVPool:
-    """Refcounted allocator + prefix index over ``num_blocks`` usable
-    physical KV blocks (device pool additionally carries the reserved
-    sink block 0).
+class _RefcountedPool:
+    """Shared refcount + LRU-of-cached machinery for content-addressed
+    device slots (KV blocks, state snapshots).
 
-    Every usable block is in exactly one of three states:
+    Every usable slot is in exactly one of three states:
 
     * **free** — on the free list, carries no index entries;
     * **live** — refcount >= 1 (held by one or more request uids);
     * **cached** — refcount 0 but still content-indexed, parked in the
-      LRU of released-but-cached blocks awaiting reuse or eviction.
+      LRU of released-but-cached slots awaiting reuse or eviction.
 
     ``free + live + cached == num_blocks`` always (the conservation
-    invariant the churn tests assert).
+    invariant the churn tests assert for both subclasses).
     """
 
-    def __init__(self, num_blocks: int, block_size: int, salt: int = 0):
-        """All blocks start free; ``salt`` roots every hash chain."""
+    def __init__(self, num_blocks: int, block_size: int, salt: int = 0,
+                 reserve_sink: bool = False):
+        """All blocks start free; ``salt`` roots every hash chain.
+        ``reserve_sink`` shifts ids to 1-based so physical slot 0 stays a
+        write sink (the KV pool); snapshot slots are plain 0-based."""
         if num_blocks < 1 or block_size < 1:
             raise ValueError("num_blocks and block_size must be >= 1")
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.salt = salt
+        lo = 1 if reserve_sink else 0
         self._free: collections.deque[int] = collections.deque(
-            range(1, num_blocks + 1))
+            range(lo, lo + num_blocks))
         self._ref: dict[int, int] = {}            # block -> refcount (>=1)
         self._owned: dict[int, list[int]] = {}    # owner uid -> blocks
         self._index: dict = {}                    # chain key -> full block
@@ -120,10 +133,6 @@ class KVPool:
         """Blocks currently referenced by in-flight requests."""
         return len(self._ref)
 
-    def blocks_for(self, padded_prompt: int, max_new: int) -> int:
-        """Blocks a request's table row spans (worst-case fill)."""
-        return -(-(padded_prompt + max_new) // self.block_size)
-
     def can_alloc(self, n: int, protect: frozenset = frozenset()) -> bool:
         """True when ``n`` blocks can be produced right now — free blocks
         plus cached blocks evictable under pressure (minus ``protect``,
@@ -134,44 +143,6 @@ class KVPool:
     # ------------------------------------------------------------------
     # ownership
     # ------------------------------------------------------------------
-
-    def admit(self, uid: int, hit_blocks: Sequence[int], n_new: int,
-              protect: frozenset = frozenset()) -> list[int]:
-        """Bind request ``uid``: incref the prefix-hit blocks and pop
-        ``n_new`` fresh blocks (evicting LRU cached blocks as needed,
-        never touching ``protect``). Returns the fresh blocks; the
-        caller's table row is ``list(hit_blocks) + returned``."""
-        if uid in self._owned:
-            raise ValueError(f"request {uid} already holds blocks")
-        # capacity guard before any mutation: cached hit blocks are about
-        # to be acquired, so they must not be counted as evictable
-        guard = frozenset(protect) | frozenset(hit_blocks)
-        if not self.can_alloc(n_new, guard):
-            raise OutOfBlocksError(
-                f"request {uid}: needs {n_new} new blocks, "
-                f"{len(self._free)} free + {len(self._lru)} cached")
-        held = []
-        for b in hit_blocks:
-            if b in self._ref:
-                self._ref[b] += 1
-            else:                       # resurrect from the released cache
-                del self._lru[b]
-                self._ref[b] = 1
-            held.append(b)
-        new = []
-        for _ in range(n_new):
-            if not self._free:
-                self._evict_one(protect)
-            b = self._free.pop()
-            self._ref[b] = 1
-            new.append(b)
-        self._owned[uid] = held + new
-        return new
-
-    def alloc(self, uid: int, n: int) -> list[int]:
-        """Pop ``n`` blocks for request ``uid`` (no prefix hit) — the
-        PR 3 entry point, now a thin wrapper over :meth:`admit`."""
-        return self.admit(uid, [], n)
 
     def release(self, uid: int) -> None:
         """Drop request ``uid``'s references. Blocks whose refcount hits
@@ -237,6 +208,58 @@ class KVPool:
             keys.append(parent)
         return keys
 
+
+class KVPool(_RefcountedPool):
+    """Refcounted allocator + prefix index over ``num_blocks`` usable
+    physical KV blocks (device pool additionally carries the reserved
+    sink block 0). See the module docstring for the ownership model."""
+
+    def __init__(self, num_blocks: int, block_size: int, salt: int = 0):
+        """All blocks start free; block ids are 1-based (0 = sink)."""
+        super().__init__(num_blocks, block_size, salt, reserve_sink=True)
+
+    def blocks_for(self, padded_prompt: int, max_new: int) -> int:
+        """Blocks a request's table row spans (worst-case fill)."""
+        return -(-(padded_prompt + max_new) // self.block_size)
+
+    def admit(self, uid: int, hit_blocks: Sequence[int], n_new: int,
+              protect: frozenset = frozenset()) -> list[int]:
+        """Bind request ``uid``: incref the prefix-hit blocks and pop
+        ``n_new`` fresh blocks (evicting LRU cached blocks as needed,
+        never touching ``protect``). Returns the fresh blocks; the
+        caller's table row is ``list(hit_blocks) + returned``."""
+        if uid in self._owned:
+            raise ValueError(f"request {uid} already holds blocks")
+        # capacity guard before any mutation: cached hit blocks are about
+        # to be acquired, so they must not be counted as evictable
+        guard = frozenset(protect) | frozenset(hit_blocks)
+        if not self.can_alloc(n_new, guard):
+            raise OutOfBlocksError(
+                f"request {uid}: needs {n_new} new blocks, "
+                f"{len(self._free)} free + {len(self._lru)} cached")
+        held = []
+        for b in hit_blocks:
+            if b in self._ref:
+                self._ref[b] += 1
+            else:                       # resurrect from the released cache
+                del self._lru[b]
+                self._ref[b] = 1
+            held.append(b)
+        new = []
+        for _ in range(n_new):
+            if not self._free:
+                self._evict_one(protect)
+            b = self._free.pop()
+            self._ref[b] = 1
+            new.append(b)
+        self._owned[uid] = held + new
+        return new
+
+    def alloc(self, uid: int, n: int) -> list[int]:
+        """Pop ``n`` blocks for request ``uid`` (no prefix hit) — the
+        PR 3 entry point, now a thin wrapper over :meth:`admit`."""
+        return self.admit(uid, [], n)
+
     def register(self, keys: Iterable, blocks: Iterable[int]) -> None:
         """Index full blocks under their chain keys (first writer wins —
         a concurrent duplicate keeps its private, unindexed copy)."""
@@ -254,9 +277,30 @@ class KVPool:
         append-only; the donor may keep decoding into offsets >= fill.
         Matchers must copy-on-write (the scheduler device-copies the
         block before appending) — the tail is never shared in place.
+
+        A later registration with a *strictly larger* fill for the same
+        parent key upgrades the entry (same append-only validity
+        argument: the longer tail serves every continuation the shorter
+        one served, plus more). Equal or smaller fills are dropped, so a
+        warm entry never downgrades.
         """
-        if parent_key in self._tails or fill <= 0:
+        if fill <= 0:
             return
+        old = self._tails.get(parent_key)
+        if old is not None:
+            if fill <= old[1]:
+                return
+            # upgrade: detach the old donor block from this key; a block
+            # left keyless in the LRU has nothing to offer matchers and
+            # goes straight back to the free list
+            ob = old[0]
+            keys = self._block_keys.get(ob, [])
+            keys[:] = [e for e in keys if e != (_TAIL, parent_key)]
+            if not keys:
+                self._block_keys.pop(ob, None)
+                if ob in self._lru:
+                    del self._lru[ob]
+                    self._free.append(ob)
         self._tails[parent_key] = (
             block, fill, tuple(int(t) for t in tail_tokens))
         self._block_keys.setdefault(block, []).append((_TAIL, parent_key))
@@ -296,3 +340,74 @@ class KVPool:
             if b in self._lru:
                 self._lru.move_to_end(b)
         return hit, tail
+
+
+class StateSnapshotPool(_RefcountedPool):
+    """Content-addressed pool of SSM recurrence/conv-tail snapshots.
+
+    The device side is the ``*_snap`` leaves ``init_mamba_cache`` adds to
+    every mamba cache: ``conv_snap [NS, W-1, C]`` / ``ssm_snap
+    [NS, H, N, P]`` (NS = ``num_blocks`` here). This class hands out the
+    NS-axis slot ids and indexes them under the *same* hash-chain keys as
+    the KV pool (``prefix_keys``), so a key hit means "the snapshot is the
+    exact recurrent state after consuming that whole padded prefix".
+
+    Lifecycle mirrors the KV pool, with two differences:
+
+    * **acquire is best-effort** — a prefill that cannot get a snapshot
+      slot (everything live) simply skips capturing that boundary; the
+      request still serves correctly, the boundary just stays cold.
+    * **no sharing while live** — a snapshot is written once by its
+      capturing request (live, refcount 1), then registered + released at
+      the prefill→decode flip, after which it is immutable cached content.
+      Restores copy the snapshot into the slot's state rows, so matchers
+      never hold references.
+
+    Slot ids are 0-based (no write sink — snapshots are read with a
+    gather, never scatter-written by shared owners).
+    """
+
+    def acquire(self, uid: int) -> Optional[int]:
+        """Pop one snapshot slot for request ``uid`` (evicting the LRU
+        cached snapshot if none are free). Returns ``None`` when every
+        slot is live — capture is best-effort, never a hard failure."""
+        if not self._free:
+            if not self._lru:
+                return None
+            self._evict_one(frozenset())
+        s = self._free.pop()
+        self._ref[s] = 1
+        self._owned.setdefault(uid, []).append(s)
+        return s
+
+    def register(self, key, slot: int) -> None:
+        """Index snapshot ``slot`` under chain ``key`` (first writer wins
+        — a concurrent duplicate's slot goes back to the free list at its
+        owner's release, exactly like an unindexed KV block)."""
+        if key in self._index:
+            return
+        self._index[key] = slot
+        self._block_keys.setdefault(slot, []).append((_FULL, key))
+
+    def has(self, key) -> bool:
+        """True when ``key`` already resolves to a cached/live snapshot —
+        lets prefill skip capturing an already-indexed boundary."""
+        return key in self._index
+
+    def match_deepest(self, keys: Sequence) -> Optional[tuple[int, int]]:
+        """Deepest indexed snapshot along a prompt's key chain.
+
+        Walks ``keys`` from the deepest boundary backwards and returns
+        ``(depth, slot)`` — depth in blocks, i.e. the snapshot summarizes
+        the first ``depth * block_size`` padded tokens — or ``None`` when
+        no boundary is indexed. Gaps are fine: a snapshot at depth ``m``
+        summarizes the *entire* prefix, so shallower boundaries need not
+        be indexed. The hit is refreshed to the MRU end of the LRU.
+        """
+        for i in range(len(keys) - 1, -1, -1):
+            s = self._index.get(keys[i])
+            if s is not None:
+                if s in self._lru:
+                    self._lru.move_to_end(s)
+                return i + 1, s
+        return None

@@ -45,9 +45,9 @@ replaces it for serving:
   *in place* — no logical view is ever gathered back to the host, and
   cost scales with each slot's live tokens. ``AnalogConfig.kv_bits = 8``
   stores the pool as int8 with per-token/head scales.
-* **Radix prefix caching** (``SchedulerConfig.prefix_cache``, paged
-  attention-only families) — admission matches the padded prompt against
-  the pool's content-addressed block index (``KVPool.match_prefix``) and
+* **Radix prefix caching** (``SchedulerConfig.prefix_cache``, every
+  paged-mode family) — admission matches the padded prompt against the
+  pool's content-addressed block index (``KVPool.match_prefix``) and
   maps the slot's block-table row onto the shared physical blocks: the
   slot starts with its ``pos`` cursor advanced past the hit (rounded
   down to a chunk boundary; at least one chunk always runs so the
@@ -64,6 +64,22 @@ replaces it for serving:
   deterministic (``AnalogCtx(key=None)``), cached KV is bitwise
   identical to recomputed KV: warm-vs-cold greedy decode parity is exact
   (verified in ``tests/test_scheduler.py``).
+* **State snapshots for the ssm/hybrid families** — SSM recurrence
+  state summarizes its whole prefix in O(1), so skipping prompt chunks
+  needs more than shared KV blocks: prefill captures the slot's
+  ``ssm``/``conv`` rows into a content-addressed snapshot pool
+  (``serve.kv_pool.StateSnapshotPool`` + the ``*_snap`` cache leaves) at
+  every chunk boundary that lands on a KV-block boundary, indexed under
+  the *same* hash-chain keys as the KV blocks and registered at the
+  prefill→decode flip. A warm admission restores the deepest matching
+  snapshot inside ``_admit_jit`` (instead of zeroing the state rows) and
+  starts its ``pos`` cursor exactly there — ``_ssd_with_state``'s
+  carried-state term makes the restored state an exact continuation
+  point, so warm≡cold bitwise parity extends to ssm and hybrid. Hybrid
+  stacks restore the ``(KV blocks, state snapshot)`` pair: the skip is
+  bounded by both the KV hit and the deepest snapshot, chunks between
+  snapshot and prompt end re-run against the shared (write-protected)
+  blocks. Pure-ssm stacks run the snapshot pool without any KV pool.
 * **Per-request sampling and stop conditions** — temperature / top-k /
   top-p / ``greedy_first`` ride along each request as traced per-row
   arrays (``sampling.sample_logits_batched``), and every request carries
@@ -101,7 +117,7 @@ from repro.core.analog import AnalogConfig, AnalogCtx
 from repro.models import apply as model_apply
 from repro.models import transformer as T
 from repro.serve.decode import serve_step
-from repro.serve.kv_pool import SINK_BLOCK, KVPool
+from repro.serve.kv_pool import SINK_BLOCK, KVPool, StateSnapshotPool
 from repro.serve.sampling import sample_logits_batched
 
 
@@ -181,16 +197,23 @@ class SchedulerConfig:
     gating admission. The pool dtype follows ``cache_dtype`` unless
     ``AnalogConfig.kv_bits == 8`` selects the int8 pool.
 
-    ``prefix_cache`` (default on; effective for paged engines of the
-    attention-only families — dense/moe; hybrid stacks carry SSM
-    recurrence state that cannot skip prompt chunks) enables the radix
-    prefix cache: admission reuses content-matching blocks, retirement
-    retains released prompt blocks in an LRU. Bitwise-transparent for
-    greedy decode — disable it only to reclaim retained blocks eagerly
-    or to benchmark the cold path. ``cache_salt`` segregates index
-    entries whose KV would differ for reasons outside the token ids
-    (deployment config, tenancy); engines only ever share a pool with
-    themselves today, but the salt keeps persisted/benchmark runs honest.
+    ``prefix_cache`` (default on; effective with ``paged=True``, for
+    every family) enables the radix prefix cache: admission reuses
+    content-matching blocks, retirement retains released prompt blocks
+    in an LRU. The attention-only families (dense/moe) share KV blocks;
+    ssm/hybrid stacks additionally (ssm: exclusively) run the
+    content-addressed state-snapshot pool — ``state_snapshots`` sizes it
+    (snapshot slots; 0 = auto, ``num_slots * ceil(max_len /
+    kv_block_size)``). Bitwise-transparent for greedy decode — disable
+    it only to reclaim retained blocks eagerly or to benchmark the cold
+    path. ``cache_salt`` segregates index entries whose KV/state would
+    differ for reasons outside the token ids (deployment config,
+    tenancy); engines only ever share a pool with themselves today, but
+    the salt keeps persisted/benchmark runs honest.
+
+    When a requested feature cannot run on the engine's family/config
+    combination, ``ServeEngine`` records why in ``gating_reasons`` —
+    never a silent downgrade (``launch.serve`` surfaces the reasons).
     """
 
     num_slots: int = 4
@@ -204,6 +227,7 @@ class SchedulerConfig:
     kv_blocks: int = 0
     prefix_cache: bool = True
     cache_salt: int = 0
+    state_snapshots: int = 0
 
 
 class _Slot:
@@ -229,6 +253,11 @@ class _Slot:
         self.blocks: list[int] = []
         self.keys: list = []
         self.hit_full = 0
+        # state-snapshot bookkeeping (ssm/hybrid): (key, snap slot) pairs
+        # captured during this prefill, and the depth (in KV blocks) of
+        # the restored snapshot the admission skipped to
+        self.snaps: list[tuple] = []
+        self.hit_snap = 0
 
     @property
     def prefilling(self) -> bool:
@@ -252,10 +281,12 @@ def _donate(*argnums):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "paged", "kv_bits", "cow"),
+                   static_argnames=("cfg", "paged", "kv_bits", "cow",
+                                    "snaps", "restore"),
                    donate_argnums=_donate(0))
 def _admit_jit(caches, slot, start, pos0, tbl_row, wtbl_row, cow_src,
-               cow_dst, *, cfg, paged=False, kv_bits=0, cow=False):
+               cow_dst, snap_src, *, cfg, paged=False, kv_bits=0,
+               cow=False, snaps=False, restore=False):
     """Reset slot ``slot``: zero its state rows, set its ``start`` marker
     and initial ``pos`` cursor (``pos0`` > 0 = prefix-cache skip), and
     (paged) write its read/write block-table rows from the allocator's
@@ -264,10 +295,22 @@ def _admit_jit(caches, slot, start, pos0, tbl_row, wtbl_row, cow_src,
     (``cow=True``): physical block ``cow_src`` (a frozen shared partial
     tail) is copied whole into the slot's private block ``cow_dst``
     across every layer, so the slot can append to the tail without
-    touching the shared original."""
-    axes, kinds = T.cache_slot_spec(cfg, paged=paged, kv_bits=kv_bits)
+    touching the shared original.
 
-    def upd(c, ax, kind):
+    ``restore=True`` (ssm/hybrid prefix hit, requires ``snaps=True``
+    caches): instead of zeroing, each SSM/conv state row is loaded from
+    snapshot slot ``snap_src`` of its ``*_snap`` sibling leaf — the
+    recurrent state captured after exactly ``pos0`` prompt tokens, so
+    the slot continues bitwise-identically to a cold prefill reaching
+    ``pos0`` (``_ssd_with_state``'s carried-state term). Walked as a
+    nested dict (not ``tree.map``) so a ``"state"`` leaf can see its
+    ``"spool"`` sibling."""
+    axes, kinds = T.cache_slot_spec(cfg, paged=paged, kv_bits=kv_bits,
+                                    state_snaps=snaps)
+
+    def upd(c, ax, kind, snap_leaf):
+        if kind == "spool":
+            return c                   # snapshot pools: admission-inert
         if kind == "pool":
             if not cow:
                 return c
@@ -285,11 +328,55 @@ def _admit_jit(caches, slot, start, pos0, tbl_row, wtbl_row, cow_src,
             val = jnp.full(shape, start, c.dtype)
         elif kind == "pos":
             val = jnp.full(shape, pos0, c.dtype)
+        elif kind == "state" and restore and snap_leaf is not None:
+            # the snapshot-slot axis of a *_snap leaf sits where the
+            # state leaf keeps its slot axis (same layer stacking)
+            val = jax.lax.dynamic_index_in_dim(
+                snap_leaf, snap_src, ax, keepdims=False).astype(c.dtype)
         else:
             val = jnp.zeros(shape, c.dtype)
         return jax.lax.dynamic_update_index_in_dim(c, val, slot, ax)
 
-    return jax.tree.map(upd, caches, axes, kinds)
+    def rec(c, ax, kind):
+        out = {}
+        for name in c:
+            if isinstance(c[name], dict):
+                out[name] = rec(c[name], ax[name], kind[name])
+            else:
+                out[name] = upd(c[name], ax[name], kind[name],
+                                c.get(name + "_snap"))
+        return out
+
+    return rec(caches, axes, kinds)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "paged", "kv_bits"),
+                   donate_argnums=_donate(0))
+def _snap_jit(caches, slot, snap_dst, *, cfg, paged=False, kv_bits=0):
+    """Capture slot ``slot``'s SSM/conv state rows into snapshot slot
+    ``snap_dst`` — one device copy per mamba state leaf, taken at a
+    chunk boundary that lands on a KV-block boundary during prefill, so
+    the captured state summarizes exactly the padded prompt blocks the
+    chain key addresses (``StateSnapshotPool`` owns the indexing)."""
+    axes, kinds = T.cache_slot_spec(cfg, paged=paged, kv_bits=kv_bits,
+                                    state_snaps=True)
+
+    def rec(c, ax, kind):
+        out = {}
+        for name in c:
+            if isinstance(c[name], dict):
+                out[name] = rec(c[name], ax[name], kind[name])
+            elif kind[name] == "spool":
+                src = name[:-len("_snap")]
+                row = jax.lax.dynamic_index_in_dim(
+                    c[src], slot, ax[src], keepdims=False)
+                out[name] = jax.lax.dynamic_update_index_in_dim(
+                    c[name], row.astype(c[name].dtype), snap_dst, ax[src])
+            else:
+                out[name] = c[name]
+        return out
+
+    return rec(caches, axes, kinds)
 
 
 def _sample_tokens(logits, keys, counts, temp, topk, topp, gfirst,
@@ -367,11 +454,13 @@ def _scatter_rows(caches, sub, idx, axes):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
-                                             "use_top_p", "k", "paged"),
+                                             "use_top_p", "k", "paged",
+                                             "snaps"),
                    donate_argnums=_donate(1))
 def _mixed_step_jit(params, caches, toks, off, active, keys, counts, temp,
                     topk, topp, gfirst, pf_idx, pf_toks, pf_mask, pf_off, *,
-                    cfg, acfg, use_top_k, use_top_p, k, paged):
+                    cfg, acfg, use_top_k, use_top_p, k, paged,
+                    snaps=False):
     """Fused mixed prefill/decode step: one dispatch advances the decode
     slots *and* a compact batched prefill chunk of the admitting slots.
 
@@ -400,7 +489,8 @@ def _mixed_step_jit(params, caches, toks, off, active, keys, counts, temp,
         params, caches, toks, off, active, keys, counts, temp, topk, topp,
         gfirst, cfg, acfg, use_top_k, use_top_p, k)
 
-    axes, _ = T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits)
+    axes, _ = T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits,
+                                state_snaps=snaps)
     sub = _gather_rows(caches, pf_idx, axes)
     ctx = AnalogCtx(key=None, training=False)
     logits, _, sub = model_apply(params, cfg, acfg, ctx,
@@ -443,23 +533,47 @@ class ServeEngine:
         # and the cache layout is identical either way)
         self.pool: Optional[KVPool] = None
         paged = scfg.paged and cfg.family != "ssm"
+        # honest feature gating: a requested feature that cannot run on
+        # this family/config combination is recorded with its reason,
+        # never silently downgraded (``launch.serve`` prints these)
+        self.gating_reasons: dict[str, str] = {}
+        if scfg.paged and not paged:
+            self.gating_reasons["paged"] = (
+                "attention-free ssm stacks have no KV to page (per-slot "
+                "state is O(1)); prefix caching still runs via the "
+                "state-snapshot pool")
         if paged:
             nb_slot = -(-scfg.max_len // scfg.kv_block_size)
             n_pool = scfg.kv_blocks or b * nb_slot
             self.pool = KVPool(n_pool, scfg.kv_block_size,
                                salt=scfg.cache_salt)
-        # radix prefix caching: paged attention-only families (hybrid
-        # carries SSM recurrence state that cannot skip prompt chunks)
-        self._prefix = (scfg.prefix_cache and paged
-                        and cfg.family in ("dense", "moe"))
+        # radix prefix caching, every family: dense/moe/hybrid share KV
+        # blocks; ssm/hybrid additionally snapshot SSM state at block
+        # boundaries so a hit is a (KV blocks, state snapshot) pair
+        self._prefix = scfg.prefix_cache and scfg.paged
+        if scfg.prefix_cache and not self._prefix:
+            self.gating_reasons["prefix_cache"] = (
+                "prefix caching needs the paged engine "
+                "(SchedulerConfig.paged=True): content-addressed reuse "
+                "is keyed on KV-block-aligned prefixes")
+        self.state_pool: Optional[StateSnapshotPool] = None
+        state_snaps = 0
+        if self._prefix and cfg.family in ("ssm", "hybrid"):
+            nb_slot = -(-scfg.max_len // scfg.kv_block_size)
+            state_snaps = scfg.state_snapshots or b * nb_slot
+            self.state_pool = StateSnapshotPool(
+                state_snaps, scfg.kv_block_size, salt=scfg.cache_salt)
         self.caches = T.init_caches(cfg, b, scfg.max_len, scfg.cache_dtype,
                                     per_slot=True, paged=paged,
                                     kv_block_size=scfg.kv_block_size,
                                     kv_blocks=scfg.kv_blocks or None,
-                                    kv_bits=acfg.kv_bits if paged else 0)
+                                    kv_bits=acfg.kv_bits if paged else 0,
+                                    state_snaps=state_snaps)
         self._paged = paged
+        self._snaps = state_snaps > 0
         # fail fast on unsupported families
-        T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits)
+        T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits,
+                          state_snaps=self._snaps)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Optional[_Slot]] = [None] * b
         self.results: dict[int, np.ndarray] = {}
@@ -481,6 +595,9 @@ class ServeEngine:
         self.prefix_hit_tokens = 0
         self.prefix_skipped_tokens = 0
         self.prefix_cow_copies = 0
+        # state-snapshot telemetry (ssm/hybrid prefix caching)
+        self.state_snaps_captured = 0
+        self.state_snap_restores = 0
         self.step_token_log: collections.deque[tuple[int, int]] = (
             collections.deque(maxlen=4096))
         self._admit_seq = 0
@@ -579,9 +696,17 @@ class ServeEngine:
 
     @property
     def prefix_enabled(self) -> bool:
-        """True when this engine runs the radix prefix cache (paged pool
-        on an attention-only family with ``prefix_cache`` set)."""
+        """True when this engine runs the radix prefix cache
+        (``prefix_cache`` with ``paged=True``, any family — ssm/hybrid
+        via the state-snapshot pool)."""
         return self._prefix
+
+    @property
+    def paged_enabled(self) -> bool:
+        """True when the engine serves from the block-paged KV pool
+        (false for attention-free stacks even when requested — see
+        ``gating_reasons``)."""
+        return self._paged
 
     @property
     def step_budget(self) -> int:
@@ -621,10 +746,26 @@ class ServeEngine:
         toks[npad:] = np.asarray(req.prompt, np.int32)
         mask = np.zeros(padded, np.float32)
         mask[npad:] = 1.0
-        keys, hit, tail = [], [], None
+        keys, hit, tail, snap = [], [], None, None
         if self._prefix:
-            keys = self.pool.prefix_keys(toks, npad)
-            hit, tail = self.pool.match_prefix(toks, npad, keys=keys)
+            idx = self.pool if self.pool is not None else self.state_pool
+            keys = idx.prefix_keys(toks, npad)
+            if self.pool is not None:
+                hit, tail = self.pool.match_prefix(toks, npad, keys=keys)
+            if self.state_pool is not None:
+                # state families can only skip to a boundary whose
+                # snapshot exists. Bound the search by (a) the final
+                # chunk, which always re-runs so first-token logits
+                # exist, and (b) for hybrid, the KV hit — skipped
+                # positions are never recomputed, so their attention
+                # reads must land in cached blocks. The hybrid tail COW
+                # is dropped: the region past the snapshot re-runs
+                # anyway, so a donor copy would buy nothing.
+                limit = (padded - c) // self.scfg.kv_block_size
+                if self.pool is not None:
+                    limit = min(limit, len(hit))
+                    tail = None
+                snap = self.state_pool.match_deepest(keys[:limit])
         if self.pool is not None:
             need = self._blocks_needed(req) - len(hit)
             # hit blocks stop being evictable the moment admission
@@ -634,7 +775,7 @@ class ServeEngine:
             if not self.pool.can_alloc(need, protect):
                 return None
         return dict(toks=toks, mask=mask, npad=npad, keys=keys, hit=hit,
-                    tail=tail)
+                    tail=tail, snap=snap)
 
     def _admit_request(self, req: Request, b: int, plan: dict) -> None:
         """Bind slot ``b`` to ``req``: map its block-table row onto the
@@ -644,12 +785,12 @@ class ServeEngine:
         subsequent fused steps."""
         c = self.scfg.prefill_chunk
         toks, mask, npad = plan["toks"], plan["mask"], plan["npad"]
-        hit, tail = plan["hit"], plan["tail"]
+        hit, tail, snap = plan["hit"], plan["tail"], plan["snap"]
         padded, nhit = len(toks), len(hit)
 
         tbl_row = wtbl_row = None
-        skip, blocks = 0, []
-        cow_src = cow_dst = 0
+        skip, blocks, hit_tokens = 0, [], 0
+        cow_src = cow_dst = snap_src = 0
         if self.pool is not None:
             protect = frozenset((tail[0],)) if tail else frozenset()
             fresh = self.pool.admit(req.uid, hit,
@@ -669,13 +810,25 @@ class ServeEngine:
             # pos starts past the hit, rounded down to a chunk boundary;
             # the final chunk always re-runs so first-token logits exist
             skip = min(hit_tokens - hit_tokens % c, padded - c)
-            if self._prefix:
-                # one lookup per *admission* (a backpressured head's
-                # per-step retries would deflate the reported hit rate)
-                self.prefix_lookups += 1
             if tail:
                 cow_src, cow_dst = tail[0], blocks[nhit]
                 self.prefix_cow_copies += 1
+        if self.state_pool is not None:
+            # state families skip exactly to the restored snapshot's
+            # boundary (or not at all): the SSM recurrence cannot jump
+            # past tokens it never consumed, however many KV blocks hit.
+            # Snapshots are only ever captured at chunk-boundary
+            # positions, so the skip is chunk-aligned by construction.
+            skip = snap[0] * self.state_pool.block_size if snap else 0
+            assert skip % c == 0
+            hit_tokens = max(hit_tokens, skip)
+            if snap:
+                snap_src = snap[1]
+                self.state_snap_restores += 1
+        if self._prefix:
+            # one lookup per *admission* (a backpressured head's
+            # per-step retries would deflate the reported hit rate)
+            self.prefix_lookups += 1
             if hit_tokens:
                 self.prefix_hits += 1
                 self.prefix_hit_tokens += hit_tokens
@@ -683,15 +836,18 @@ class ServeEngine:
         self.caches = _admit_jit(self.caches, jnp.int32(b), jnp.int32(npad),
                                  jnp.int32(skip), tbl_row, wtbl_row,
                                  jnp.int32(cow_src), jnp.int32(cow_dst),
+                                 jnp.int32(snap_src),
                                  cfg=self.cfg, paged=self._paged,
                                  kv_bits=self.acfg.kv_bits,
-                                 cow=tail is not None)
+                                 cow=tail is not None, snaps=self._snaps,
+                                 restore=snap is not None)
         self._pos[b], self._start[b] = skip, npad
         self._temp[b], self._topp[b] = req.temperature, req.top_p
         self._topk[b], self._gfirst[b] = req.top_k, req.greedy_first
         self._keys[b] = np.asarray(jax.random.PRNGKey(req.seed))
         slot = _Slot(req, toks, mask, npad, c, self._admit_seq, skip=skip)
         slot.blocks, slot.keys, slot.hit_full = blocks, plan["keys"], nhit
+        slot.hit_snap = snap[0] if snap else 0
         self.slots[b] = slot
         self._admit_seq += 1
         self._dirty = True
@@ -711,6 +867,43 @@ class ServeEngine:
                                                       s.npad)
             self.pool.register_tail(parent, s.blocks[nfull], fill,
                                     s.toks[nfull * bs:])
+
+    def _maybe_snapshot(self, b: int, s: _Slot) -> None:
+        """Capture slot ``b``'s SSM/conv state into the snapshot pool
+        when its prefill cursor just landed on a KV-block boundary: the
+        state at ``m * kv_block_size`` tokens summarizes exactly the
+        padded prompt blocks chain key ``keys[m-1]`` addresses.
+        Best-effort — when every snapshot slot is live the boundary
+        simply stays cold (the request still serves correctly)."""
+        bs = self.state_pool.block_size
+        p = int(self._pos[b])
+        if p % bs:
+            return
+        m = p // bs
+        if m < 1 or m <= s.hit_snap or m > len(s.keys):
+            return
+        key = s.keys[m - 1]
+        if self.state_pool.has(key) or any(k == key for k, _ in s.snaps):
+            return
+        dst = self.state_pool.acquire(s.req.uid)
+        if dst is None:
+            return
+        self.caches = _snap_jit(self.caches, jnp.int32(b), jnp.int32(dst),
+                                cfg=self.cfg, paged=self._paged,
+                                kv_bits=self.acfg.kv_bits)
+        s.snaps.append((key, dst))
+        self.state_snaps_captured += 1
+
+    def _register_snaps(self, s: _Slot) -> None:
+        """Index the snapshots captured during the slot's prefill (at the
+        prefill→decode flip, mirroring ``_register_slot``) and drop the
+        request's ownership: indexed snapshots park in the pool's LRU
+        awaiting reuse, a first-writer-wins loser goes straight back to
+        the free list."""
+        for key, dst in s.snaps:
+            self.state_pool.register(key, dst)
+        if s.snaps:
+            self.state_pool.release(s.req.uid)
 
     def _sample_flags(self) -> tuple[bool, bool]:
         """Static sampler specialization over every in-flight request."""
@@ -785,7 +978,8 @@ class ServeEngine:
             pf_idx=jnp.asarray(pf_idx), pf_toks=jnp.asarray(pf_toks),
             pf_mask=jnp.asarray(pf_mask), pf_off=jnp.asarray(pf_off),
             cfg=self.cfg, acfg=self.acfg, use_top_k=use_top_k,
-            use_top_p=use_top_p, k=k, paged=self._paged)
+            use_top_p=use_top_p, k=k, paged=self._paged,
+            snaps=self._snaps)
         self._stash(toks, off, counts)
 
         # host bookkeeping: chunk cursors, phase flips, decode tokens
@@ -798,14 +992,20 @@ class ServeEngine:
             s = self.slots[b]
             s.chunk += 1
             self._pos[b] += c                  # the chunk advanced the row
+            if self.state_pool is not None:
+                self._maybe_snapshot(b, s)
             if not s.prefilling:               # prompt done: first token
                 if first_host is None:
                     first_host = np.asarray(first)
                 if self._prefix:
-                    # index the prompt's blocks before the first token can
-                    # retire the request (release must see the entries so
-                    # the blocks are retained, not freed)
-                    self._register_slot(s)
+                    # index the prompt's blocks/snapshots before the
+                    # first token can retire the request (release must
+                    # see the entries so the blocks are retained, not
+                    # freed)
+                    if self.pool is not None:
+                        self._register_slot(s)
+                    if self.state_pool is not None:
+                        self._register_snaps(s)
                 self._dirty = True             # row flips to decode phase
                 self._append_token(b, int(first_host[i]))
         if k:
@@ -869,6 +1069,6 @@ class ServeEngine:
                 zrow = jnp.zeros(self.caches_tbl_width, jnp.int32)
                 self.caches = _admit_jit(
                     self.caches, jnp.int32(b), jnp.int32(0), jnp.int32(0),
-                    zrow, zrow, jnp.int32(0), jnp.int32(0),
+                    zrow, zrow, jnp.int32(0), jnp.int32(0), jnp.int32(0),
                     cfg=self.cfg, paged=self._paged,
-                    kv_bits=self.acfg.kv_bits)
+                    kv_bits=self.acfg.kv_bits, snaps=self._snaps)

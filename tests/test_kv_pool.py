@@ -10,7 +10,8 @@ tails, and the strict unknown/double-release error contract.
 import numpy as np
 import pytest
 
-from repro.serve.kv_pool import SINK_BLOCK, KVPool, OutOfBlocksError
+from repro.serve.kv_pool import (SINK_BLOCK, KVPool, OutOfBlocksError,
+                                 StateSnapshotPool)
 
 
 def _toks(rng, n, vocab=64):
@@ -220,3 +221,131 @@ def test_randomized_churn_conservation(seed):
         check()
     assert pool.num_live == 0
     assert pool.num_free + pool.num_cached == total
+
+
+def test_tail_reregister_upgrades_larger_fill():
+    """Re-registering a tail for the same chain point must upgrade the
+    entry only when the new fill is strictly larger — and the displaced
+    donor block, if keyless and cached, must return to the free list."""
+    pool = KVPool(num_blocks=8, block_size=4)
+    toks = np.arange(11, dtype=np.int32)        # 2 full blocks + fill 3
+    keys = pool.prefix_keys(toks, 0)
+    blocks = pool.alloc(0, 4)
+    pool.register(keys, blocks[:2])
+    pool.register_tail(keys[1], blocks[2], 2, toks[8:10])
+    # same fill: first writer stays
+    pool.register_tail(keys[1], blocks[3], 2, toks[8:10])
+    assert pool.match_prefix(toks, 0)[1] == (blocks[2], 2)
+    # smaller fill: never downgrade
+    pool.register_tail(keys[1], blocks[3], 1, toks[8:9])
+    assert pool.match_prefix(toks, 0)[1] == (blocks[2], 2)
+    # strictly larger fill wins
+    pool.register_tail(keys[1], blocks[3], 3, toks[8:11])
+    assert pool.match_prefix(toks, 0)[1] == (blocks[3], 3)
+    # a cached donor that lost its only key must not leak: release the
+    # owner, then re-upgrade away from the now-cached tail block
+    pool.release(0)
+    # the displaced first tail (blocks[2]) lost its only key at the
+    # upgrade, so release frees it instead of caching it
+    assert pool.num_cached == 3                  # 2 full + winning tail
+    assert blocks[2] not in pool._lru
+    donor = blocks[3]
+    fresh = pool.alloc(1, 1)[0]
+    pool.register_tail(keys[1], fresh, 4, toks[8:11])  # fill 4 > 3
+    assert donor not in pool._lru                # detached from the LRU...
+    assert pool.num_free + pool.num_cached + pool.num_live == 8
+    pool.release(1)
+    hit, tail = pool.match_prefix(toks, 0)
+    assert tail is None                          # fill-4 tail needs 12 toks
+    assert hit == blocks[:2]
+
+
+def test_zero_fill_tail_is_ignored():
+    """register_tail(fill=0) must be a no-op: an empty tail can never
+    extend a hit and must not occupy an index entry."""
+    pool = KVPool(num_blocks=4, block_size=4)
+    toks = np.arange(4, dtype=np.int32)
+    keys = pool.prefix_keys(toks, 0)
+    blocks = pool.alloc(0, 2)
+    pool.register(keys, blocks[:1])
+    pool.register_tail(keys[0], blocks[1], 0, toks[:0])
+    assert pool.match_prefix(toks, 0) == (blocks[:1], None)
+    assert not pool._tails
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_snapshot_pool_randomized_churn_conservation(seed):
+    """Randomized acquire/register/release churn on the state-snapshot
+    pool: slot conservation (free + live + cached == pool size), refcount
+    bookkeeping, first-writer-wins registration, and best-effort acquire
+    (None only when every slot is live)."""
+    rng = np.random.default_rng(seed)
+    total = 12
+    pool = StateSnapshotPool(num_blocks=total, block_size=4)
+    live: dict[int, list[int]] = {}              # uid -> acquired slots
+    registered: dict[tuple, int] = {}            # shadow index
+    next_uid, next_key = 0, 0
+
+    def check():
+        assert pool.num_free + pool.num_live + pool.num_cached == total
+        assert sum(pool._ref.values()) == sum(
+            len(v) for v in pool._owned.values())
+        assert not (set(pool._ref) & set(pool._free))
+        assert not (set(pool._ref) & set(pool._lru))
+        assert not (set(pool._lru) & set(pool._free))
+        for key, slot in registered.items():
+            got = pool.match_deepest([key])
+            if got is not None:                  # may have been evicted
+                assert got == (1, slot)
+
+    for _ in range(400):
+        op = rng.random()
+        if op < 0.5 and len(live) < 4:           # acquire a snapshot batch
+            uid = next_uid
+            next_uid += 1
+            slots = []
+            for _ in range(int(rng.integers(1, 4))):
+                s = pool.acquire(uid)
+                if s is None:                    # all-live: every slot held
+                    assert pool.num_free == 0 and pool.num_cached == 0
+                    break
+                slots.append(s)
+            if slots:
+                live[uid] = slots
+            evicted = {k for k, v in registered.items()
+                       if pool._index.get(k) != v}
+            for k in evicted:
+                del registered[k]
+        elif live:                               # register-and-release
+            uid = int(rng.choice(list(live)))
+            for s in live.pop(uid):
+                if rng.random() < 0.8:           # most snapshots register
+                    key = ("chain", next_key % 7)  # collisions on purpose
+                    next_key += 1
+                    pool.register(key, s)
+                    if key not in registered:    # first writer wins
+                        registered[key] = s
+            pool.release(uid)
+        check()
+
+    for uid in list(live):
+        live.pop(uid)
+        pool.release(uid)
+        check()
+    assert pool.num_live == 0
+    assert pool.num_free + pool.num_cached == total
+
+
+def test_snapshot_match_deepest_walks_backwards():
+    """match_deepest must return the deepest registered chain point even
+    when shallower links were never snapshotted (gaps are fine: one
+    snapshot summarizes the whole prefix up to its depth)."""
+    pool = StateSnapshotPool(num_blocks=4, block_size=4)
+    keys = [("k", i) for i in range(4)]
+    a = pool.acquire(0)
+    pool.register(keys[2], a)                   # only depth 3 registered
+    pool.release(0)
+    assert pool.match_deepest(keys) == (3, a)
+    assert pool.match_deepest(keys[:2]) is None
+    # registration while live, matched while cached and refreshed to MRU
+    assert a in pool._lru

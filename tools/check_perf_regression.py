@@ -29,7 +29,15 @@ regressed by more than ``--threshold`` (default 15%):
   must report nonzero prefix-hit tokens (the cache is actually being
   hit, not silently missing), and ``cold_warm_greedy_parity`` must be
   true (cached-prefix decode is bitwise identical to cold decode — the
-  contract that makes prefix caching accuracy-free);
+  contract that makes prefix caching accuracy-free); the
+  ``prefix_cache_hybrid`` section (the same workload shape on the Jamba
+  stack, warm admissions restoring KV blocks + SSM state snapshots) gets
+  the same gates under its own ``--prefix-hybrid-floor`` (default 1.1x —
+  the SSM prefix is recomputed up to the deepest snapshot's chunk, so the
+  warm win is structurally smaller than the attention-only row's) plus a
+  nonzero ``state_snap_restores`` check, and every entry of
+  ``prefix_family_parity`` (dense/moe/ssm/hybrid warm≡cold bitwise) must
+  be true;
 * with ``--attn BENCH_attn.json``, the paged-attention microbench
   invariants too: paged decode cost must scale with live tokens and beat
   full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
@@ -61,7 +69,8 @@ def _get(d: dict, dotted: str):
 
 def check(baseline: dict, fresh: dict, threshold: float,
           abs_threshold: float, paged_floor: float = 1.0,
-          prefix_floor: float = 1.3) -> list[str]:
+          prefix_floor: float = 1.3,
+          prefix_hybrid_floor: float = 1.1) -> list[str]:
     """Return a list of failure strings (empty = pass)."""
     fails = []
     metrics = {"speedup_tokens_per_s": threshold,
@@ -126,6 +135,34 @@ def check(baseline: dict, fresh: dict, threshold: float,
         if not pc.get("cold_warm_greedy_parity"):
             fails.append("cold/warm greedy parity broken: cached-prefix "
                          "decode diverged from cold decode")
+    ph = _get(fresh, "prefix_cache_hybrid")
+    if ph is not None:
+        speedup = ph.get("warm_speedup_vs_cold", 0.0)
+        hits = ph.get("warm_hit_tokens", 0)
+        restores = ph.get("state_snap_restores", 0)
+        print(f"[perf] prefix_cache_hybrid.warm_speedup_vs_cold: {speedup} "
+              f"(floor {prefix_hybrid_floor}, {hits} hit tokens, "
+              f"{restores} snapshot restores)")
+        if speedup < prefix_hybrid_floor:
+            fails.append(f"hybrid warm shared-prefix speedup {speedup} "
+                         f"below the {prefix_hybrid_floor}x floor over "
+                         f"cold paged")
+        if hits <= 0:
+            fails.append("hybrid prefix cache reported zero hit tokens "
+                         "(KV+snapshot restore not engaging)")
+        if restores <= 0:
+            fails.append("hybrid warm pass restored zero SSM state "
+                         "snapshots (snapshot pool not engaging)")
+        if not ph.get("cold_warm_greedy_parity"):
+            fails.append("hybrid cold/warm greedy parity broken: "
+                         "snapshot-restored decode diverged from cold")
+    fp = _get(fresh, "prefix_family_parity")
+    if fp is not None:
+        print(f"[perf] prefix_family_parity: {fp}")
+        bad = [fam for fam, ok in fp.items() if not ok]
+        if bad:
+            fails.append("warm≡cold greedy parity (with real hits) "
+                         f"broken for families: {bad}")
     return fails
 
 
@@ -172,6 +209,11 @@ def main() -> int:
     ap.add_argument("--prefix-floor", type=float, default=1.3,
                     help="min warm-vs-cold speedup on the shared-prefix "
                          "workload (prefix cache must pay for itself)")
+    ap.add_argument("--prefix-hybrid-floor", type=float, default=1.1,
+                    help="min warm-vs-cold speedup on the hybrid "
+                         "shared-prefix workload (KV + state-snapshot "
+                         "restore; structurally smaller win than the "
+                         "attention-only row)")
     ap.add_argument("--attn", default=None,
                     help="fresh BENCH_attn.json to gate the paged "
                          "attention invariants on")
@@ -187,7 +229,8 @@ def main() -> int:
     with open(args.fresh) as f:
         fresh = json.load(f)
     fails = check(baseline, fresh, args.threshold, args.abs_threshold,
-                  args.paged_floor, args.prefix_floor)
+                  args.paged_floor, args.prefix_floor,
+                  args.prefix_hybrid_floor)
     if args.attn:
         with open(args.attn) as f:
             fails += check_attn(json.load(f), args.attn_floor,
