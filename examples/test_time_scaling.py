@@ -6,8 +6,18 @@ selection strategies — the paper's argument for why power-efficient analog
 inference pairs well with test-time scaling.
 
     PYTHONPATH=src python examples/test_time_scaling.py
+
+``--speculative`` serves every candidate through draft-and-verify
+decoding (``--draft-k`` tokens per verify window, ``--draft`` picks the
+drafter). Verification is exact-match against the engine's own sampler,
+so the curves are bitwise identical either way — the flag only changes
+how the decode steps are dispatched:
+
+    PYTHONPATH=src python examples/test_time_scaling.py \\
+        --speculative --draft-k 4
 """
 
+import argparse
 import os
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -16,8 +26,25 @@ from benchmarks import fig4_test_time_scaling as fig4
 
 
 def main():
-    print("strategy curves (accuracy vs n), teacher vs noisy analog FM:")
-    results = fig4.run(num_prompts=48, n_max=16)
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--speculative", action="store_true",
+                    help="serve candidates with draft-and-verify decoding "
+                         "(bitwise identical outputs)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per verify window")
+    ap.add_argument("--draft", choices=("int4", "self", "ngram"),
+                    default="self", help="drafter choice")
+    ap.add_argument("--num-prompts", type=int, default=48)
+    ap.add_argument("--n-max", type=int, default=16)
+    args = ap.parse_args()
+
+    mode = (f"speculative ({args.draft} drafter, k={args.draft_k})"
+            if args.speculative else "non-speculative")
+    print(f"strategy curves (accuracy vs n), teacher vs noisy analog FM "
+          f"[{mode} serving]:")
+    results = fig4.run(num_prompts=args.num_prompts, n_max=args.n_max,
+                       speculative=args.speculative, draft_k=args.draft_k,
+                       draft=args.draft)
     for model, res in results.items():
         print(f"\n{model}:")
         for strat in ("prm_greedy", "prm_voting", "voting"):

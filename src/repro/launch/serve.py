@@ -115,6 +115,26 @@ def main():
                          "admissions reuse content-matching KV blocks, "
                          "retired prompts stay LRU-cached "
                          "(--no-prefix-cache frees blocks eagerly)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-and-verify speculative decoding: the "
+                         "drafter proposes --draft-k tokens per slot per "
+                         "step, the target verifies the whole window in "
+                         "one fused dispatch; exact-match verification "
+                         "keeps outputs bitwise identical to the "
+                         "non-speculative path (attention families only)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative window length (tokens proposed per "
+                         "slot per step)")
+    ap.add_argument("--draft", default="int4",
+                    choices=["int4", "self", "ngram"],
+                    help="drafter: int4 = RTN-int4 digital deployment of "
+                         "the target weights (Table 3 pairing), self = "
+                         "target drafts for itself (acceptance 1.0), "
+                         "ngram = host prompt-lookup (no draft forward)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="truncate the model drafter to its first N "
+                         "transformer blocks (0 = full depth; layer-skip "
+                         "self-speculation)")
     ap.add_argument("--cache-salt", type=int, default=0,
                     help="salt folded into every prefix-cache block key "
                          "— segregates entries whose KV would differ for "
@@ -171,13 +191,16 @@ def main():
         step_tokens=args.step_tokens, cache_dtype=cache_dtype,
         paged=args.paged, kv_block_size=args.kv_block_size,
         kv_blocks=args.kv_blocks, prefix_cache=args.prefix_cache,
-        cache_salt=args.cache_salt))
+        cache_salt=args.cache_salt, speculative=args.speculative,
+        draft_k=args.draft_k, draft=args.draft,
+        draft_layers=args.draft_layers))
     # honest feature reporting: a requested-but-inert feature warns
     # loudly with the engine's recorded reason — never a silent placebo.
     # --prefix-cache defaults on, so its warning fires only when the
     # flag was explicitly requested on the command line.
     requested = {"paged": args.paged,
-                 "prefix_cache": "--prefix-cache" in sys.argv}
+                 "prefix_cache": "--prefix-cache" in sys.argv,
+                 "speculative": args.speculative}
     for feat, why in eng.gating_reasons.items():
         if requested.get(feat):
             flag = "--" + feat.replace("_", "-")
@@ -204,6 +227,10 @@ def main():
                   f"{idx_pool.evictions} evictions{snaps}")
     else:
         prefix = ""
+    if eng.spec_enabled:
+        prefix += (f", speculative ({eng.scfg.draft} drafter, k="
+                   f"{eng.scfg.draft_k}): {eng.spec_steps} verify windows, "
+                   f"{eng.spec_acceptance:.0%} draft acceptance")
     print(f"[serve] continuous ({mode} kv, {args.cache_dtype}): {total} "
           f"tokens across {len(reqs)} "
           f"mixed-length requests in {dt:.2f}s ({total / dt:.1f} tok/s, "

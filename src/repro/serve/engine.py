@@ -71,6 +71,20 @@ class BestOfNConfig:
             answers either way; off reproduces the PR 4
             independent-requests path.
         kv_block_size: Physical KV block granularity of the paged pool.
+        speculative: Draft-and-verify decoding per candidate — the
+            drafter proposes ``draft_k`` tokens per slot per step and
+            the target verifies the whole window in one fused dispatch.
+            Exact-match verification keeps every candidate's answer
+            bitwise identical to non-speculative serving (greedy *and*
+            sampled rows), so best-of-n selection is unchanged — only
+            tokens/s-per-candidate improves. Attention families only
+            (ssm/hybrid gate off with a ``gating_reasons`` entry).
+        draft_k: Draft window length per speculative step.
+        draft: Drafter choice — ``"int4"`` (RTN-int4 digital deployment
+            of the target weights, the paper's Table 3 pairing),
+            ``"self"`` (target drafts for itself; acceptance 1.0,
+            measurement baseline), or ``"ngram"`` (host prompt-lookup,
+            no draft forward pass at all).
     """
 
     temperature: float = 0.8
@@ -85,6 +99,9 @@ class BestOfNConfig:
     paged: bool = True
     prefix_cache: bool = True
     kv_block_size: int = 16
+    speculative: bool = False
+    draft_k: int = 4
+    draft: str = "int4"
 
 
 def sample_candidates(params, cfg, acfg: AnalogConfig, key,
@@ -140,7 +157,9 @@ def sample_candidates(params, cfg, acfg: AnalogConfig, key,
         prefill_chunk=bcfg.prefill_chunk,
         paged=bcfg.paged, prefix_cache=bcfg.prefix_cache,
         kv_block_size=bs, kv_blocks=kv_blocks,
-        state_snapshots=state_snaps)
+        state_snapshots=state_snaps,
+        speculative=bcfg.speculative, draft_k=bcfg.draft_k,
+        draft=bcfg.draft)
     eng = ServeEngine(params, cfg, acfg, scfg)
     reqs = [Request(uid=i, prompt=np.asarray(prompts[i // n], np.int32),
                     max_new=bcfg.max_new, temperature=bcfg.temperature,

@@ -76,6 +76,13 @@ class OutOfBlocksError(RuntimeError):
     or evictable."""
 
 
+class RewindError(RuntimeError):
+    """Raised by :meth:`KVPool.check_rewind` when a speculative rollback
+    would land a ``pos`` cursor below the request's rewind floor —
+    inside a refcount-shared block or the frozen span of a registered
+    block, whose contents other requests may read."""
+
+
 class _RefcountedPool:
     """Shared refcount + LRU-of-cached machinery for content-addressed
     device slots (KV blocks, state snapshots).
@@ -304,6 +311,61 @@ class KVPool(_RefcountedPool):
         self._tails[parent_key] = (
             block, fill, tuple(int(t) for t in tail_tokens))
         self._block_keys.setdefault(block, []).append((_TAIL, parent_key))
+
+    def rewind_floor(self, uid: int) -> int:
+        """Lowest logical position request ``uid``'s ``pos`` cursor may
+        legally rewind to — the **rewind-safety contract** speculative
+        rollback operates under.
+
+        A rollback is a pure cursor rewind: positions past ``pos`` become
+        stale garbage that later windows overwrite in place. That is only
+        sound where the request's writes actually land in its own private
+        blocks. Walking the table row (``_owned`` preserves table order),
+        block ``i`` covering logical positions ``[i*bs, (i+1)*bs)``
+        contributes a floor of:
+
+        * ``(i+1)*bs`` when the block is refcount-shared (another live
+          request reads it) or content-indexed as a full block (a future
+          matcher may) — its whole span is immutable;
+        * ``i*bs + fill`` when it is index-frozen as a partial tail —
+          entries below the fill are published, the rest is the owner's
+          private append region;
+        * ``0`` when private and unindexed.
+
+        In normal operation the floor never exceeds the padded prompt
+        length (decode — hence any verify window — starts past it), so
+        speculative rollback is always safe *by construction*; this
+        method plus :meth:`check_rewind` turn that argument into a
+        checkable invariant.
+        """
+        blocks = self._owned.get(uid)
+        if blocks is None:
+            raise ValueError(f"rewind_floor of unknown request uid={uid}")
+        bs = self.block_size
+        floor = 0
+        for i, b in enumerate(blocks):
+            if self._ref.get(b, 0) > 1:
+                floor = max(floor, (i + 1) * bs)
+                continue
+            for kind, key in self._block_keys.get(b, ()):
+                if kind == _FULL:
+                    floor = max(floor, (i + 1) * bs)
+                else:
+                    t = self._tails.get(key)
+                    if t is not None and t[0] == b:
+                        floor = max(floor, i * bs + t[1])
+        return floor
+
+    def check_rewind(self, uid: int, pos: int) -> None:
+        """Assert rewinding request ``uid``'s cursor to logical ``pos``
+        respects :meth:`rewind_floor`; raises :class:`RewindError`
+        otherwise. The scheduler calls this after every speculative step
+        with the post-rollback cursor."""
+        floor = self.rewind_floor(uid)
+        if pos < floor:
+            raise RewindError(
+                f"request {uid}: rewind to pos={pos} would enter "
+                f"shared/frozen content (floor={floor})")
 
     def match_prefix(self, tokens: Sequence[int], npad: int, keys=None,
                      ) -> tuple[list[int], Optional[tuple[int, int]]]:

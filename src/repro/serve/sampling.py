@@ -82,3 +82,61 @@ def sample_logits_batched(keys: jax.Array, logits: jax.Array,
     pick_greedy = greedy | (temperature <= 0.0)
     return jnp.where(pick_greedy, greedy_tok,
                      sampled.astype(jnp.int32)).astype(jnp.int32)
+
+
+def speculative_verify(keys: jax.Array, logits: jax.Array,
+                       drafts: jax.Array, counts: jax.Array,
+                       temperature: jax.Array, top_k: jax.Array,
+                       top_p: jax.Array, greedy_first: jax.Array,
+                       use_top_k: bool = True,
+                       use_top_p: bool = True):
+    """Batched accept/reject + bonus-token draw for draft-and-verify decode.
+
+    ``logits`` [B, k+1, V] are the target model's scores for a verify
+    window ``[last_token, d_1 .. d_k]``; ``drafts`` [k, B] are the
+    drafter's proposals ``d_1 .. d_k``; ``keys`` [B, 2] / ``counts`` [B]
+    are each row's PRNG key and token counter exactly as the
+    non-speculative decode loop carries them.
+
+    Verification is *exact-match*: column ``i`` draws the token the
+    non-speculative loop would have drawn at that position — the same
+    ``fold_in(key, counts + i)`` stream, the same per-row sampler — and
+    accepts ``d_{i+1}`` iff it equals that draw. Because each column's
+    sample is only ever consumed when every preceding draft matched (at
+    which point the window prefix *is* the non-speculative history and
+    the column's logits are the non-speculative step logits), the emitted
+    tokens ``target[0 .. n_acc]`` are bitwise what sequential decode
+    would have produced, for greedy and sampled rows alike; the last one
+    is the "bonus" draw from the target's own distribution at the first
+    rejected (or window-final) position, so every window emits at least
+    one token.
+
+    All k+1 columns share a single :func:`sample_logits_batched` pass
+    over the flattened ``(k+1)·B`` rows — the sampler's sort/argmax ops
+    are row-independent, so flattening changes no row's draw while
+    amortizing per-op dispatch overhead across the window.
+
+    Returns ``(target [k+1, B] int32, n_acc [B] int32)`` where ``n_acc``
+    counts the leading accepted drafts (emit ``n_acc + 1`` tokens).
+    """
+    b, kp1, v = logits.shape
+    cnt = counts[None, :] + jnp.arange(kp1, dtype=counts.dtype)[:, None]
+    flat_cnt = cnt.reshape(-1)                               # [(k+1)B]
+    flat_keys = jnp.broadcast_to(
+        keys[None], (kp1,) + keys.shape).reshape(kp1 * b, -1)
+    ks = jax.vmap(jax.random.fold_in)(flat_keys, flat_cnt)
+    flat_logits = jnp.swapaxes(logits, 0, 1).reshape(kp1 * b, v)
+
+    def tile(x):
+        return jnp.broadcast_to(x[None], (kp1,) + x.shape).reshape(kp1 * b)
+
+    target = sample_logits_batched(
+        ks, flat_logits, tile(temperature), tile(top_k), tile(top_p),
+        greedy=flat_cnt < tile(greedy_first),
+        use_top_k=use_top_k, use_top_p=use_top_p).reshape(kp1, b)
+    if kp1 == 1:
+        n_acc = jnp.zeros((b,), jnp.int32)
+    else:
+        match = (drafts == target[:-1]).astype(jnp.int32)    # [k, B]
+        n_acc = jnp.sum(jnp.cumprod(match, axis=0), axis=0)
+    return target, n_acc

@@ -80,6 +80,21 @@ replaces it for serving:
   bounded by both the KV hit and the deepest snapshot, chunks between
   snapshot and prompt end re-run against the shared (write-protected)
   blocks. Pure-ssm stacks run the snapshot pool without any KV pool.
+* **Speculative decoding** (``SchedulerConfig.speculative``, attention
+  families) — pure-decode steps become draft-and-verify windows: a
+  drafter (the digital int4 deployment of the same weights, the target
+  itself, or host-side prompt lookup — ``SchedulerConfig.draft``)
+  proposes ``draft_k`` tokens per slot and one fused chunk forward
+  scores all ``draft_k + 1`` positions through the existing paged
+  flash-prefill path. Exact-match verification
+  (``sampling.speculative_verify``) re-draws each position from the
+  target's own per-row PRNG stream, so speculative output is bitwise
+  identical to non-speculative output; rejected positions roll back as
+  a pure ``pos``-cursor rewind, checked against the pool's
+  rewind-safety contract (``KVPool.rewind_floor`` — never into
+  refcount-shared or index-frozen content). SSM/hybrid auto-gate off
+  (``gating_reasons``): their recurrent state has no positional cursor
+  to rewind.
 * **Per-request sampling and stop conditions** — temperature / top-k /
   top-p / ``greedy_first`` ride along each request as traced per-row
   arrays (``sampling.sample_logits_batched``), and every request carries
@@ -118,7 +133,7 @@ from repro.models import apply as model_apply
 from repro.models import transformer as T
 from repro.serve.decode import serve_step
 from repro.serve.kv_pool import SINK_BLOCK, KVPool, StateSnapshotPool
-from repro.serve.sampling import sample_logits_batched
+from repro.serve.sampling import sample_logits_batched, speculative_verify
 
 
 def padded_prompt_len(plen: int, chunk: int) -> int:
@@ -211,6 +226,30 @@ class SchedulerConfig:
     tenancy); engines only ever share a pool with themselves today, but
     the salt keeps persisted/benchmark runs honest.
 
+    ``speculative=True`` turns pure-decode steps into draft-and-verify
+    windows: a drafter proposes ``draft_k`` tokens per slot and the
+    target model scores all ``draft_k + 1`` positions in one fused
+    dispatch (the same chunked forward the mixed step uses — the paged
+    flash-prefill kernel already scores chunks at arbitrary per-row
+    offsets). Verification is exact-match against the target's own
+    per-position draw (``sampling.speculative_verify``), so speculative
+    output is **bitwise identical** to non-speculative output for greedy
+    and sampled requests alike; rejected positions roll back as a pure
+    ``pos``-cursor rewind under the pool's rewind-safety contract
+    (``KVPool.rewind_floor``). ``draft`` picks the drafter: ``"int4"``
+    (default — the Table-3 digital int4 deployment of the *same*
+    weights, ``decode.digital_int4_config``'s RTN-W4 numerics, run
+    unfused so no packed carriers are required), ``"self"`` (the target
+    itself — acceptance 1.0, a machinery-overhead reference), or
+    ``"ngram"`` (host-side prompt-lookup drafting — free proposals, no
+    draft model or cache at all). ``draft_layers > 0`` truncates the
+    model drafter to its first n scan-stacked blocks (layer-skip
+    self-drafting). Speculation is attention-only — a ``pos`` rewind
+    fully rolls back KV state, while SSM/hybrid recurrences are
+    cumulative — so those families auto-gate off with a
+    ``gating_reasons["speculative"]`` entry; mixed admission steps stay
+    non-speculative (windows resume once prefill drains).
+
     When a requested feature cannot run on the engine's family/config
     combination, ``ServeEngine`` records why in ``gating_reasons`` —
     never a silent downgrade (``launch.serve`` surfaces the reasons).
@@ -228,6 +267,10 @@ class SchedulerConfig:
     prefix_cache: bool = True
     cache_salt: int = 0
     state_snapshots: int = 0
+    speculative: bool = False
+    draft_k: int = 4
+    draft: str = "int4"
+    draft_layers: int = 0
 
 
 class _Slot:
@@ -505,6 +548,210 @@ def _mixed_step_jit(params, caches, toks, off, active, keys, counts, temp,
     return dec_out, first, toks, off, counts, caches
 
 
+def _rewind_pos(caches, delta, cfg, paged, kv_bits, snaps):
+    """Roll back speculatively written positions: subtract ``delta[b]``
+    from every ``pos`` cursor leaf of slot ``b``. Rollback is O(1) with
+    zero data movement — stale KV past the cursor is never attended
+    (every read is bounded by ``start <= j <= pos + i``) and the next
+    window scatter-writes the same physical positions in place. Safe
+    only above the pool's rewind floor (``KVPool.rewind_floor``), which
+    the scheduler checks after every speculative step."""
+    axes, kinds = T.cache_slot_spec(cfg, paged=paged, kv_bits=kv_bits,
+                                    state_snaps=snaps)
+
+    def rec(c, ax, kind):
+        out = {}
+        for name in c:
+            if isinstance(c[name], dict):
+                out[name] = rec(c[name], ax[name], kind[name])
+            elif kind[name] == "pos":
+                cm = jnp.moveaxis(c[name], ax[name], -1)
+                cm = cm - delta.astype(cm.dtype)
+                out[name] = jnp.moveaxis(cm, -1, ax[name])
+            else:
+                out[name] = c[name]
+        return out
+
+    return rec(caches, axes, kinds)
+
+
+def _verify_and_commit(params, caches, toks, drafts, off, active, keys,
+                       counts, temp, topk, topp, gfirst, cfg, acfg,
+                       use_top_k, use_top_p, paged, snaps):
+    """Shared verify core of both speculative step jits.
+
+    Scores the ``[B, k+1]`` window ``[last_token, d_1 .. d_k]`` in one
+    fused chunk forward at each row's own offset (exactly the mixed
+    step's chunk path — inactive rows are fully masked and
+    cache-transparent), runs exact-match accept/reject + bonus draw
+    (``sampling.speculative_verify``), then commits: the ``pos``
+    cursors — advanced by ``k+1`` by the forward — rewind to
+    ``old + n_emit``, and the device-resident step state advances by
+    each row's emitted count. Returns ``(target [k+1, B], n_emit [B],
+    delta [B], toks, off, counts, caches)`` with ``delta`` the per-row
+    rewind a model drafter must mirror on its own cache.
+    """
+    k = drafts.shape[0]
+    window = jnp.concatenate([toks[:, None], drafts.T], axis=1)
+    mask = jnp.broadcast_to(active[:, None],
+                            window.shape).astype(jnp.float32)
+    ctx = AnalogCtx(key=None, training=False)
+    logits, _, caches = model_apply(params, cfg, acfg, ctx,
+                                    {"tokens": window}, caches=caches,
+                                    pos_offset=off[:, None], seq_mask=mask)
+    target, n_acc = speculative_verify(keys, logits, drafts, counts, temp,
+                                       topk, topp, gfirst, use_top_k,
+                                       use_top_p)
+    act = active > 0
+    n_emit = jnp.where(act, n_acc + 1, 0).astype(jnp.int32)
+    delta = jnp.where(act, (k + 1) - n_emit, 0).astype(jnp.int32)
+    caches = _rewind_pos(caches, delta, cfg, paged, acfg.kv_bits, snaps)
+    bonus = jnp.take_along_axis(target, n_acc[None, :], axis=0)[0]
+    toks = jnp.where(act, bonus, toks)
+    return (target, n_emit, delta, toks, off + n_emit, counts + n_emit,
+            caches)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "acfg", "dcfg", "dacfg",
+                                    "use_top_k", "use_top_p", "k", "paged",
+                                    "snaps"),
+                   donate_argnums=_donate(2, 3))
+def _spec_step_jit(params, draft_params, caches, draft_caches, toks, off,
+                   active, keys, counts, temp, topk, topp, gfirst, *, cfg,
+                   acfg, dcfg, dacfg, use_top_k, use_top_p, k, paged,
+                   snaps=False):
+    """Model-drafter speculative step: ``k+1`` drafter decode steps in a
+    ``lax.scan`` (on the drafter's private contiguous slot cache), then
+    the fused verify window — one dispatch per engine step.
+
+    The drafter samples with the *same* per-row key folds the verifier
+    uses at each position, so a drafter equivalent to the target (the
+    ``"self"`` mode, or ``"int4"`` under an int4-served target) proposes
+    exactly the verifier's draws and every window fully accepts. The
+    scan runs ``k+1`` steps but the window only consumes drafts
+    ``1..k``: discarding the last draft makes the draft cache consume
+    exactly the verify window's tokens, so both caches rewind by the
+    same per-row ``delta`` and stay position-synchronized without any
+    cross-cache bookkeeping. Returns ``(target [k+1, B], n_emit [B],
+    toks, off, counts, caches, draft_caches)``.
+    """
+    def body(carry, i):
+        dtoks, dcaches = carry
+        logits, dcaches = serve_step(draft_params, dcfg, dacfg,
+                                     dtoks[:, None], dcaches,
+                                     (off + i)[:, None],
+                                     seq_mask=active[:, None])
+        new = _sample_tokens(logits, keys, counts + i, temp, topk, topp,
+                             gfirst, use_top_k, use_top_p)
+        return (new, dcaches), new
+
+    (_, draft_caches), drafts = jax.lax.scan(
+        body, (toks, draft_caches), jnp.arange(k + 1, dtype=jnp.int32))
+    target, n_emit, delta, toks, off, counts, caches = _verify_and_commit(
+        params, caches, toks, drafts[:k], off, active, keys, counts, temp,
+        topk, topp, gfirst, cfg, acfg, use_top_k, use_top_p, paged, snaps)
+    draft_caches = _rewind_pos(draft_caches, delta, dcfg, False, 0, False)
+    return target, n_emit, toks, off, counts, caches, draft_caches
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
+                                             "use_top_p", "paged", "snaps"),
+                   donate_argnums=_donate(1))
+def _spec_verify_jit(params, caches, toks, off, active, keys, counts, temp,
+                     topk, topp, gfirst, drafts, *, cfg, acfg, use_top_k,
+                     use_top_p, paged, snaps=False):
+    """Host-drafter speculative step: verify externally proposed drafts
+    ``[k, B]`` (prompt-lookup n-grams, or a test-injected ``draft_fn``).
+    No draft model, no draft cache — proposals cost nothing on device
+    and the whole step is the one fused verify dispatch. Exact-match
+    verification keeps the bitwise-parity guarantee for *any* proposal
+    source: a draft either equals the token the non-speculative loop
+    would have drawn or is rejected."""
+    target, n_emit, _, toks, off, counts, caches = _verify_and_commit(
+        params, caches, toks, drafts, off, active, keys, counts, temp,
+        topk, topp, gfirst, cfg, acfg, use_top_k, use_top_p, paged, snaps)
+    return target, n_emit, toks, off, counts, caches
+
+
+@functools.partial(jax.jit, static_argnames=("dcfg", "dacfg"),
+                   donate_argnums=_donate(1))
+def _draft_step_jit(draft_params, draft_caches, toks, off, active, *,
+                    dcfg, dacfg):
+    """Advance the model drafter's cache by the one decode token a mixed
+    step consumed (logits discarded). Mixed admission steps decode
+    non-speculatively, so without this catch-up the draft cache would
+    silently fall behind the target across every admission window —
+    drafts would still verify safely (exact-match), but acceptance would
+    collapse for the rest of each affected request."""
+    _, draft_caches = serve_step(draft_params, dcfg, dacfg, toks[:, None],
+                                 draft_caches, off[:, None],
+                                 seq_mask=active[:, None])
+    return draft_caches
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg"),
+                   donate_argnums=_donate(1))
+def _draft_prefill_jit(params, caches, slot, toks, mask, npad, *, cfg,
+                       acfg):
+    """Reset draft-cache slot ``slot`` and prefill the full padded prompt
+    ``toks [1, padded]`` in one dispatch (at the prefill→decode flip).
+
+    The drafter keeps a plain contiguous slot cache with no pool and no
+    prefix index, so its prompt always runs whole — even when a prefix
+    hit let the *target* skip chunks — one extra forward per admission.
+    Compiles once per distinct padded prompt length (chunk multiples)."""
+    axes, kinds = T.cache_slot_spec(cfg, paged=False, kv_bits=0)
+
+    def reset(c, ax, kind):
+        shape = c.shape[:ax] + c.shape[ax + 1:]
+        val = (jnp.full(shape, npad, c.dtype) if kind == "start"
+               else jnp.zeros(shape, c.dtype))
+        return jax.lax.dynamic_update_index_in_dim(c, val, slot, ax)
+
+    def rec(c, ax, kind):
+        out = {}
+        for name in c:
+            if isinstance(c[name], dict):
+                out[name] = rec(c[name], ax[name], kind[name])
+            else:
+                out[name] = reset(c[name], ax[name], kind[name])
+        return out
+
+    caches = rec(caches, axes, kinds)
+    idx = slot[None]
+    sub = _gather_rows(caches, idx, axes)
+    ctx = AnalogCtx(key=None, training=False)
+    _, _, sub = model_apply(params, cfg, acfg, ctx, {"tokens": toks},
+                            caches=sub,
+                            pos_offset=jnp.reshape(-npad, (1, 1)),
+                            seq_mask=mask, last_only=True)
+    return _scatter_rows(caches, sub, idx, axes)
+
+
+def _ngram_propose(ctx: np.ndarray, k: int, max_n: int = 3) -> np.ndarray:
+    """Prompt-lookup drafting: propose the continuation of the most
+    recent earlier occurrence of the context's longest matching suffix
+    n-gram (n = ``max_n`` down to 1), falling back to repeating the last
+    token. Pure host-side numpy over a <= ``max_len`` context — the
+    proposals are free, exact-match verification makes any quality
+    level safe, and repetitive spans (the regime where lookup drafting
+    shines) accept at high rates."""
+    ctx = np.asarray(ctx, np.int32)
+    n_ctx = len(ctx)
+    if n_ctx == 0:
+        return np.zeros(k, np.int32)
+    out = np.full(k, int(ctx[-1]), np.int32)
+    for n in range(min(max_n, n_ctx - 1), 0, -1):
+        pat = ctx[n_ctx - n:]
+        for j in range(n_ctx - n - 1, -1, -1):
+            if np.array_equal(ctx[j:j + n], pat):
+                cont = ctx[j + n:j + n + k]
+                out[:len(cont)] = cont
+                return out
+    return out
+
+
 class ServeEngine:
     """Continuous-batching engine over a slot cache.
 
@@ -519,8 +766,18 @@ class ServeEngine:
     """
 
     def __init__(self, params, cfg, acfg: AnalogConfig,
-                 scfg: SchedulerConfig = SchedulerConfig()):
-        """Allocate the slot caches and host-side request state."""
+                 scfg: SchedulerConfig = SchedulerConfig(), *,
+                 draft_params=None, draft_cfg=None, draft_acfg=None,
+                 draft_fn=None):
+        """Allocate the slot caches and host-side request state.
+
+        The ``draft_*`` keywords override ``scfg.draft``'s model drafter
+        with an explicit (params, cfg, acfg) triple — e.g. a separately
+        trained small draft model — while ``draft_fn(context, k) ->
+        [<=k] int32`` replaces model drafting entirely with a host
+        callable over the request's (prompt + generated) token context,
+        the hook the forced-accept/forced-reject parity tests use.
+        """
         if cfg.family in ("audio", "vlm"):
             raise NotImplementedError(
                 f"continuous batching not wired for family={cfg.family!r} "
@@ -571,6 +828,58 @@ class ServeEngine:
                                     state_snaps=state_snaps)
         self._paged = paged
         self._snaps = state_snaps > 0
+        # speculative decoding: attention-only — a pos-cursor rewind
+        # fully rolls back KV state, while SSM/hybrid recurrences are
+        # cumulative (snapshot-restore rollback is a possible follow-up)
+        self._spec = bool(scfg.speculative) and cfg.family in ("dense",
+                                                               "moe")
+        if scfg.speculative and not self._spec:
+            self.gating_reasons["speculative"] = (
+                "speculative rollback is a pos-cursor rewind, which only "
+                "rolls back attention KV; ssm/hybrid recurrent state is "
+                "cumulative and has no per-position cursor — these "
+                "families decode non-speculatively")
+        if self._spec and scfg.draft_k < 1:
+            raise ValueError("draft_k must be >= 1")
+        self.draft_fn = draft_fn
+        self._draft_host = self._spec and (draft_fn is not None
+                                           or scfg.draft == "ngram")
+        self.draft_params = self.draft_cfg = self.draft_acfg = None
+        self.draft_caches = None
+        if self._spec and not self._draft_host:
+            if scfg.draft not in ("int4", "self"):
+                raise ValueError(
+                    f"unknown drafter {scfg.draft!r} "
+                    "(expected 'int4', 'self' or 'ngram')")
+            dcfg = draft_cfg if draft_cfg is not None else cfg
+            if draft_cfg is None and scfg.draft_layers:
+                dcfg = dataclasses.replace(
+                    cfg, num_layers=min(scfg.draft_layers, cfg.num_layers))
+            dacfg = draft_acfg
+            if dacfg is None:
+                if scfg.draft == "self" or acfg.int4_serve:
+                    dacfg = acfg      # int4-served target: drafter == it
+                else:
+                    # the digital int4 deployment of the same weights
+                    # (decode.digital_int4_config numerics), unfused so
+                    # no packed carriers are needed
+                    dacfg = dataclasses.replace(acfg, mode="rtn",
+                                                weight_bits=4)
+            # the drafter cache is contiguous per-slot — never paged
+            dacfg = dataclasses.replace(dacfg, kv_bits=0)
+            dparams = draft_params
+            if dparams is None:
+                dparams = params
+                if dcfg.num_layers < cfg.num_layers:
+                    # layer-skip drafting: the first n scan-stacked blocks
+                    dparams = dict(params)
+                    dparams["blocks"] = jax.tree.map(
+                        lambda t: t[:dcfg.num_layers], params["blocks"])
+            self.draft_params, self.draft_cfg = dparams, dcfg
+            self.draft_acfg = dacfg
+            self.draft_caches = T.init_caches(dcfg, b, scfg.max_len,
+                                              scfg.cache_dtype,
+                                              per_slot=True)
         # fail fast on unsupported families
         T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits,
                           state_snaps=self._snaps)
@@ -598,6 +907,11 @@ class ServeEngine:
         # state-snapshot telemetry (ssm/hybrid prefix caching)
         self.state_snaps_captured = 0
         self.state_snap_restores = 0
+        # speculative-decoding telemetry: windows dispatched, drafts
+        # proposed/accepted (acceptance rate = accepted / proposed)
+        self.spec_steps = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         self.step_token_log: collections.deque[tuple[int, int]] = (
             collections.deque(maxlen=4096))
         self._admit_seq = 0
@@ -669,7 +983,17 @@ class ServeEngine:
             self._mixed_step(decode_rows, prefill_rows)
             kind = "mixed" if decode_rows else "prefill"
         elif decode_rows:
-            self._decode_step(decode_rows)
+            # model drafters take the spec path even when the window
+            # clamps to k=0 (a row within one token of its budget): the
+            # k=0 "window" is a plain decode step whose drafter scan
+            # still consumes the emitted token, keeping the draft cache
+            # position-synchronized. Host drafters have no cache, so
+            # they fall back to the cheaper multi-step decode block.
+            if self._spec and (self.draft_caches is not None
+                               or self._spec_k(decode_rows)):
+                self._spec_step(decode_rows)
+            else:
+                self._decode_step(decode_rows)
             kind = "decode"
         else:
             return
@@ -707,6 +1031,18 @@ class ServeEngine:
         (false for attention-free stacks even when requested — see
         ``gating_reasons``)."""
         return self._paged
+
+    @property
+    def spec_enabled(self) -> bool:
+        """True when pure-decode steps run draft-and-verify windows
+        (``speculative=True`` on an attention-only family — see
+        ``gating_reasons`` otherwise)."""
+        return self._spec
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.spec_accepted / max(1, self.spec_proposed)
 
     @property
     def step_budget(self) -> int:
@@ -971,6 +1307,14 @@ class ServeEngine:
             pf_mask[i] = s.mask[j * c:(j + 1) * c]
             pf_off[i] = j * c - s.npad
         k = 1 if n_dec else 0
+        if k and self.draft_caches is not None:
+            # keep the model drafter position-synchronized through the
+            # admission window (see _draft_step_jit); consumes the same
+            # pre-step (toks, off, active) the decode substep reads
+            d = self._dev
+            self.draft_caches = _draft_step_jit(
+                self.draft_params, self.draft_caches, d["toks"], d["off"],
+                d["active"], dcfg=self.draft_cfg, dacfg=self.draft_acfg)
 
         use_top_k, use_top_p = self._sample_flags()
         dec_toks, first, toks, off, counts, self.caches = _mixed_step_jit(
@@ -1008,10 +1352,110 @@ class ServeEngine:
                         self._register_snaps(s)
                 self._dirty = True             # row flips to decode phase
                 self._append_token(b, int(first_host[i]))
+                if self.draft_caches is not None and (
+                        self.slots[b] is not None):
+                    # bring the model drafter's private cache to the same
+                    # position before the slot's first verify window (the
+                    # full prompt in one forward — the drafter has no
+                    # prefix cache; skipped if the first token already
+                    # retired the request)
+                    self.draft_caches = _draft_prefill_jit(
+                        self.draft_params, self.draft_caches,
+                        jnp.int32(b), jnp.asarray(s.toks[None]),
+                        jnp.asarray(s.mask[None]), jnp.int32(s.npad),
+                        cfg=self.draft_cfg, acfg=self.draft_acfg)
         if k:
             self.decode_steps += k
             self.decode_tokens_during_admission += n_dec * k
             self._consume_decode_tokens(np.asarray(dec_toks), decode_rows)
+
+    def _spec_k(self, decode_rows: list[int]) -> int:
+        """Window size of the next speculative step: ``draft_k`` clipped
+        so no in-flight row can write past its own budget — a window
+        starting at ``pos`` scatter-writes positions up to ``pos + k``,
+        and ``k <= min(remaining) - 1`` keeps that within the
+        ``padded + max_new`` span every row's capacity (``max_len``,
+        pool blocks) was validated for. Clips to powers of two below
+        ``draft_k`` to bound executable count; 0 (some row has a single
+        token of budget left) falls back to a plain decode step."""
+        head = min(self.slots[b].req.max_new - self.slots[b].count
+                   for b in decode_rows) - 1
+        if head < 1:
+            return 0
+        k = self.scfg.draft_k
+        if k > head:
+            k = 1
+            while k * 2 <= head:
+                k *= 2
+        return k
+
+    def _host_drafts(self, decode_rows: list[int], k: int) -> np.ndarray:
+        """Host-side draft proposals ``[k, B]`` for the active rows: each
+        slot's ``draft_fn`` (if injected) or prompt-lookup n-grams over
+        its prompt + generated context. Short proposals are zero-padded —
+        exact-match verification simply rejects the padding."""
+        drafts = np.zeros((k, self.scfg.num_slots), np.int32)
+        for b in decode_rows:
+            s = self.slots[b]
+            ctx = np.concatenate([s.toks[s.npad:],
+                                  np.asarray(s.out, np.int32)])
+            prop = (np.asarray(self.draft_fn(ctx, k), np.int32)
+                    if self.draft_fn is not None
+                    else _ngram_propose(ctx, k))[:k]
+            drafts[:len(prop), b] = prop
+        return drafts
+
+    def _spec_step(self, decode_rows: list[int]) -> None:
+        """One draft-and-verify window over all decode slots: propose
+        ``k`` tokens per row, score all ``k+1`` positions in one fused
+        target dispatch, emit each row's accepted prefix plus the bonus
+        draw, and roll rejected positions back as a ``pos`` rewind.
+        Every emitted token flows through :meth:`_append_token`, so stop
+        tokens and budgets retire requests mid-window exactly as a
+        decode block would (extra tokens are discarded); the pool's
+        rewind-safety contract is checked live for every surviving
+        paged row."""
+        if self._dirty:
+            self._refresh_device_state()
+        k = self._spec_k(decode_rows)
+        use_top_k, use_top_p = self._sample_flags()
+        if self._draft_host:
+            drafts = self._host_drafts(decode_rows, k)
+            target, n_emit, toks, off, counts, self.caches = (
+                _spec_verify_jit(
+                    self.params, self.caches, *self._decode_args(),
+                    jnp.asarray(drafts), cfg=self.cfg, acfg=self.acfg,
+                    use_top_k=use_top_k, use_top_p=use_top_p,
+                    paged=self._paged, snaps=self._snaps))
+        else:
+            (target, n_emit, toks, off, counts, self.caches,
+             self.draft_caches) = _spec_step_jit(
+                self.params, self.draft_params, self.caches,
+                self.draft_caches, *self._decode_args(),
+                cfg=self.cfg, acfg=self.acfg, dcfg=self.draft_cfg,
+                dacfg=self.draft_acfg, use_top_k=use_top_k,
+                use_top_p=use_top_p, k=k, paged=self._paged,
+                snaps=self._snaps)
+        self._stash(toks, off, counts)
+        target, n_emit = np.asarray(target), np.asarray(n_emit)
+        if k:                     # a k=0 window is just a decode step
+            self.spec_steps += 1
+        self.decode_steps += 1
+        emitted = 0
+        for b in decode_rows:
+            ne = int(n_emit[b])
+            self.spec_proposed += k
+            self.spec_accepted += ne - 1
+            uid = self.slots[b].req.uid
+            for i in range(ne):
+                if self.slots[b] is None:
+                    break              # stop/budget hit mid-window
+                self._pos[b] += 1
+                emitted += 1
+                self._append_token(b, int(target[i, b]))
+            if self.pool is not None and self.slots[b] is not None:
+                self.pool.check_rewind(uid, int(self._pos[b]))
+        self.step_token_log.append((emitted, 0))
 
     def _decode_step(self, decode_rows: list[int]) -> None:
         """One multi-step decode block over all slots (no admissions in

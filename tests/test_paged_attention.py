@@ -254,6 +254,48 @@ def test_prefill_last_column_matches_decode():
                                atol=2e-6, rtol=2e-6)
 
 
+def test_verify_window_chunk_equals_successive_decodes_bitwise():
+    """Speculative-verification seam: a k-token verify window is a
+    flash-prefill chunk scored at an arbitrary (non-chunk-aligned,
+    non-block-aligned) offset, and exact-match verification relies on
+    its columns being **bitwise** what k successive flash-decode steps
+    would produce. Both oracles share the same block-loop online-softmax
+    accumulation order, so the comparison is exact equality, not
+    allclose — any reordering of the accumulation breaks spec≡non-spec
+    parity and must fail this test."""
+    bsz, s, nq, nkv, hd, bs, nb = 3, 5, 8, 2, 16, 4, 6
+    q, kp, vp, tbl, pos, start = _setup_prefill(15, bsz, s, nq, nkv, hd,
+                                                bs, nb)
+    # force every cursor odd: mid-block, mid-chunk offsets — the shape a
+    # rejected window leaves behind after a pos rewind
+    pos = jnp.minimum(pos | 1, nb * bs - s)
+    scale = hd ** -0.5
+    chunk = ref.paged_prefill_ref(q, kp, vp, tbl, pos, start, scale)
+    for i in range(s):
+        dec = ref.paged_decode_ref(q[:, i], kp, vp, tbl, pos + i, start,
+                                   scale)
+        np.testing.assert_array_equal(np.asarray(chunk[:, i]),
+                                      np.asarray(dec))
+
+
+def test_verify_window_dispatch_matches_decode_dispatch():
+    """Same seam through the dispatch layer the model actually calls:
+    ``paged_prefill_attention`` at an odd offset ≡ per-column
+    ``paged_decode_attention``, bitwise on the auto (oracle) route."""
+    bsz, s, nq, nkv, hd, bs, nb = 2, 4, 4, 2, 8, 4, 5
+    q, kp, vp, tbl, pos, start = _setup_prefill(16, bsz, s, nq, nkv, hd,
+                                                bs, nb)
+    pos = jnp.minimum(pos | 1, nb * bs - s)
+    scale = hd ** -0.5
+    chunk = dispatch.paged_prefill_attention(q, kp, vp, tbl, pos, start,
+                                             scale)
+    for i in range(s):
+        dec = dispatch.paged_decode_attention(q[:, i], kp, vp, tbl,
+                                              pos + i, start, scale)
+        np.testing.assert_array_equal(np.asarray(chunk[:, i]),
+                                      np.asarray(dec))
+
+
 def test_kv_quantize_roundtrip():
     """Per-vector int8 KV quantization: bounded error, exact absmax scale."""
     rng = np.random.default_rng(5)

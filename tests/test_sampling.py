@@ -1,0 +1,162 @@
+"""Sampler edge cases: filter boundaries, greedy handoff, verify oracle.
+
+Targets the corners of ``serve/sampling.py`` the engine-level suites
+don't pin down: ``top_k=1`` must degenerate to greedy for any key,
+probability ties sitting exactly on the top-p nucleus boundary must
+resolve deterministically (all tied candidates kept — never a
+key-dependent subset), ``greedy_first`` must expire at the same token
+regardless of how the engine partitions decode blocks, and the
+speculative accept/reject sampler must agree with a per-column scalar
+oracle on both the re-drawn tokens and the accepted-prefix lengths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.analog import AnalogConfig
+from repro.models import build
+from repro.serve.sampling import (sample_logits, sample_logits_batched,
+                                  speculative_verify)
+from repro.serve.scheduler import Request, SchedulerConfig, ServeEngine
+
+
+def _keys(n, seed=0):
+    return jax.vmap(jax.random.PRNGKey)(jnp.arange(seed, seed + n))
+
+
+def test_top_k_one_equals_greedy():
+    """``top_k=1`` keeps only the argmax, so sampling at any temperature
+    with any key must return exactly the greedy token — scalar and
+    batched samplers alike."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((6, 40)).astype(np.float32))
+    want = np.asarray(jnp.argmax(logits, axis=-1))
+    for seed in range(3):
+        scalar = np.asarray(sample_logits(
+            jax.random.PRNGKey(seed), logits, temperature=1.3, top_k=1))
+        np.testing.assert_array_equal(scalar, want)
+        batched = np.asarray(sample_logits_batched(
+            _keys(6, seed), logits,
+            temperature=jnp.full((6,), 1.3), top_k=jnp.full((6,), 1),
+            top_p=jnp.ones((6,)), greedy=jnp.zeros((6,), bool)))
+        np.testing.assert_array_equal(batched, want)
+
+
+def test_top_p_boundary_ties_deterministic():
+    """Two candidates tied exactly at the nucleus cutoff: the filter
+    keeps *both* (threshold is ``< cutoff``, so equal-probability mass is
+    never split by sort order), the tail token is always excluded, and
+    the same key always draws the same token."""
+    probs = np.array([0.4, 0.3, 0.3, 1e-9])
+    probs = probs / probs.sum()
+    logits = jnp.asarray(np.log(probs)[None].astype(np.float32))
+    seen = set()
+    for seed in range(24):
+        a = int(sample_logits(jax.random.PRNGKey(seed), logits,
+                              temperature=1.0, top_p=0.7)[0])
+        b = int(sample_logits_batched(
+            _keys(1, seed), logits, temperature=jnp.ones((1,)),
+            top_k=jnp.zeros((1,), jnp.int32), top_p=jnp.full((1,), 0.7),
+            greedy=jnp.zeros((1,), bool))[0])
+        assert a == b                       # scalar ≡ batched per key
+        # replay: identical key → identical draw (no hidden state)
+        assert a == int(sample_logits(jax.random.PRNGKey(seed), logits,
+                                      temperature=1.0, top_p=0.7)[0])
+        assert a != 3                       # tail never survives the filter
+        seen.add(a)
+    assert seen == {0, 1, 2}                # both tied candidates reachable
+
+
+def test_greedy_first_expiry_invariant_to_decode_block():
+    """``greedy_first`` expires by *token count*, not by step geometry:
+    a request whose greedy→sampled handoff lands mid-block must emit
+    identical tokens whether the engine decodes 1, 4, or 8 tokens per
+    dispatch."""
+    cfg = get_config("granite-3-8b").reduce()
+    cfg, params, labels = build(cfg, jax.random.PRNGKey(0))
+    acfg = AnalogConfig(mode="off")
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    outs = []
+    for block in (1, 4, 8):
+        eng = ServeEngine(params, cfg, acfg,
+                          SchedulerConfig(num_slots=2, max_len=32,
+                                          prefill_chunk=4,
+                                          decode_block=block))
+        outs.append(eng.run([Request(
+            uid=0, prompt=prompt, max_new=8, temperature=1.0,
+            greedy_first=3, seed=5)])[0])
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+    # the handoff is real: pure-greedy and pure-sampled runs both differ
+    greedy = ServeEngine(params, cfg, acfg,
+                         SchedulerConfig(num_slots=2, max_len=32,
+                                         prefill_chunk=4)).run(
+        [Request(uid=0, prompt=prompt, max_new=8, temperature=0.0)])[0]
+    assert not np.array_equal(outs[0], greedy)
+    np.testing.assert_array_equal(outs[0][:3], greedy[:3])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_speculative_verify_matches_scalar_oracle(seed):
+    """The flattened (k+1)·B verify pass must agree with a per-column
+    oracle (one fold_in + one sampler call per window position) on every
+    re-drawn token, and ``n_acc`` must be the numpy count of leading
+    draft/target matches."""
+    rng = np.random.default_rng(seed)
+    b, k, v = 5, 3, 23
+    logits = jnp.asarray(rng.standard_normal((b, k + 1, v))
+                         .astype(np.float32))
+    keys = _keys(b, seed * 100)
+    counts = jnp.asarray(rng.integers(0, 6, b).astype(np.int32))
+    temp = jnp.asarray([0.0, 0.7, 1.0, 1.3, 0.9], jnp.float32)
+    top_k = jnp.asarray([0, 5, 1, 0, 3], jnp.int32)
+    top_p = jnp.asarray([1.0, 0.9, 1.0, 0.8, 1.0], jnp.float32)
+    gfirst = jnp.asarray(rng.integers(0, 8, b).astype(np.int32))
+
+    oracle = []
+    for i in range(k + 1):
+        ks = jax.vmap(jax.random.fold_in)(keys, counts + i)
+        oracle.append(np.asarray(sample_logits_batched(
+            ks, logits[:, i], temp, top_k, top_p,
+            greedy=(counts + i) < gfirst)))
+    oracle = np.stack(oracle)                              # [k+1, B]
+
+    # drafts: a mix of forced matches (copy the oracle) and mismatches
+    drafts = oracle[:k].copy()
+    flip = rng.random((k, b)) < 0.5
+    drafts[flip] = (drafts[flip] + 1) % v
+    target, n_acc = speculative_verify(
+        keys, logits, jnp.asarray(drafts), counts, temp, top_k, top_p,
+        gfirst)
+    np.testing.assert_array_equal(np.asarray(target), oracle)
+    match = drafts == oracle[:k]
+    want_acc = np.sum(np.cumprod(match, axis=0), axis=0)
+    np.testing.assert_array_equal(np.asarray(n_acc), want_acc)
+
+
+def test_speculative_verify_empty_window():
+    """A k=0 window (no drafts) degenerates to one plain sampling step:
+    ``n_acc`` is all-zero and the single column matches the direct
+    batched draw."""
+    rng = np.random.default_rng(3)
+    b, v = 4, 17
+    logits = jnp.asarray(rng.standard_normal((b, 1, v)).astype(np.float32))
+    keys = _keys(b)
+    counts = jnp.asarray([0, 2, 4, 9], jnp.int32)
+    temp = jnp.asarray([0.0, 1.0, 0.8, 1.2], jnp.float32)
+    zk = jnp.zeros((b,), jnp.int32)
+    ones = jnp.ones((b,), jnp.float32)
+    target, n_acc = speculative_verify(
+        keys, logits, jnp.zeros((0, b), jnp.int32), counts, temp, zk,
+        ones, zk)
+    assert target.shape == (1, b)
+    np.testing.assert_array_equal(np.asarray(n_acc), np.zeros(b))
+    ks = jax.vmap(jax.random.fold_in)(keys, counts)
+    direct = sample_logits_batched(ks, logits[:, 0], temp, zk, ones,
+                                   greedy=counts < zk)
+    np.testing.assert_array_equal(np.asarray(target[0]),
+                                  np.asarray(direct))

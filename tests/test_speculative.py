@@ -1,0 +1,372 @@
+"""Speculative decoding: bitwise spec≡non-spec parity + rollback safety.
+
+The verification contract is *exact-match*: every verify-window column
+re-draws the token the non-speculative loop would have drawn at that
+position (same per-row PRNG fold, same sampler), so speculative serving
+must be **bitwise identical** to non-speculative serving for any drafter
+— greedy and sampled rows alike. This suite turns that argument into a
+differential harness: parity across all four model families × cache
+layouts, forced all-accept / all-reject windows, stop tokens landing
+mid-window, rollback across KV-block boundaries, drafter-cache sync
+through mixed admission steps, and the KV-pool rewind-safety contract
+(unit + randomized-churn property tests).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from strategies import given, settings, st
+
+from repro.configs import get_config
+from repro.core.analog import AnalogConfig
+from repro.models import build
+from repro.serve.kv_pool import KVPool, RewindError
+from repro.serve.scheduler import Request, SchedulerConfig, ServeEngine
+
+FAMILIES = ["granite-3-8b", "mamba2-130m", "jamba-v0.1-52b", "dbrx-132b"]
+
+
+def _build(arch, seed=0):
+    cfg = get_config(arch).reduce()
+    if cfg.num_experts:   # no-drop capacity: see test_decode for semantics
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+    return build(cfg, jax.random.PRNGKey(seed))
+
+
+def _prompt(cfg, n, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _scfg(paged=False, **kw):
+    base = dict(num_slots=3, max_len=64, prefill_chunk=4)
+    if paged:
+        # 4-token blocks so draft_k=4 windows straddle block boundaries
+        # every step — rollback across boundaries is exercised, not lucky
+        base.update(paged=True, kv_block_size=4)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _reqs(cfg, temperature=0.0, max_new=8, **kw):
+    return [Request(uid=0, prompt=_prompt(cfg, 5), max_new=max_new,
+                    temperature=temperature, seed=11, **kw),
+            Request(uid=1, prompt=_prompt(cfg, 9, seed=4), max_new=max_new,
+                    temperature=temperature, seed=12, **kw)]
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_matches_nonspec_greedy(arch, paged):
+    """Greedy speculative output must be bitwise non-speculative output
+    across all four families × contiguous/paged. Attention families
+    really speculate (windows dispatched); ssm/hybrid auto-gate off with
+    a recorded reason and still serve identically."""
+    cfg, params, labels = _build(arch)
+    acfg = AnalogConfig(mode="off")
+    reqs = _reqs(cfg)
+    base = ServeEngine(params, cfg, acfg, _scfg(paged)).run(list(reqs))
+    eng = ServeEngine(params, cfg, acfg,
+                      _scfg(paged, speculative=True, draft_k=4,
+                            draft="ngram"))
+    out = eng.run(list(reqs))
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    if cfg.family in ("dense", "moe"):
+        assert eng.spec_enabled and eng.spec_steps > 0
+    else:
+        assert not eng.spec_enabled and eng.spec_steps == 0
+        assert "speculative" in eng.gating_reasons
+
+
+def test_self_draft_all_accept_windows():
+    """The target drafting for itself must accept every proposal (the
+    drafter samples from the same PRNG folds the verifier re-draws), so
+    acceptance is exactly 1.0 — and output parity still holds."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    reqs = _reqs(cfg, max_new=12)
+    base = ServeEngine(params, cfg, acfg, _scfg(True)).run(list(reqs))
+    eng = ServeEngine(params, cfg, acfg,
+                      _scfg(True, speculative=True, draft_k=4,
+                            draft="self"))
+    out = eng.run(list(reqs))
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    assert eng.spec_steps > 0
+    assert eng.spec_proposed > 0
+    assert eng.spec_accepted == eng.spec_proposed      # all-accept
+
+
+def test_int4_drafter_parity_across_block_boundaries():
+    """The headline pairing: RTN-int4 digital deployment of the *same*
+    weights drafts for the full-precision target. Partial acceptance
+    rolls the paged ``pos`` cursor back across 4-token block boundaries;
+    output stays bitwise identical and some drafts land."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    reqs = _reqs(cfg, max_new=10)
+    base = ServeEngine(params, cfg, acfg, _scfg(True)).run(list(reqs))
+    eng = ServeEngine(params, cfg, acfg,
+                      _scfg(True, speculative=True, draft_k=4,
+                            draft="int4"))
+    out = eng.run(list(reqs))
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    assert eng.spec_steps > 0
+    assert 0 < eng.spec_accepted <= eng.spec_proposed
+
+
+def test_forced_all_reject_windows():
+    """A draft_fn proposing provably-wrong tokens (reference token + 1)
+    forces every window to reject everything: each spec step emits
+    exactly one token (the bonus draw), acceptance is 0.0, and the
+    output is still bitwise the non-speculative reference."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    reqs = _reqs(cfg)
+    base = ServeEngine(params, cfg, acfg, _scfg(True)).run(list(reqs))
+    prompts = {r.uid: np.asarray(r.prompt) for r in reqs}
+    refs = {uid: np.asarray(base[uid]) for uid in base}
+
+    def wrong(ctx, k):
+        # ctx = prompt + tokens so far; the next reference token sits at
+        # ref[len(ctx) - plen] — propose anything-but to force rejection
+        uid = next(u for u, p in prompts.items()
+                   if len(ctx) >= len(p) and np.array_equal(ctx[:len(p)], p))
+        ref, n = refs[uid], len(ctx) - len(prompts[uid])
+        props = [(int(ref[n + i]) + 1) % cfg.vocab_size
+                 for i in range(min(k, len(ref) - n))]
+        return np.asarray(props or [0], np.int32)
+
+    eng = ServeEngine(params, cfg, acfg,
+                      _scfg(True, speculative=True, draft_k=4),
+                      draft_fn=wrong)
+    out = eng.run(list(reqs))
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    assert eng.spec_steps > 0
+    assert eng.spec_accepted == 0                      # all-reject
+
+
+def test_stop_token_lands_mid_window():
+    """A stop token sampled in the middle of an accepted window must end
+    the request exactly where sequential decode ends it — later window
+    tokens (already verified on device) are discarded on the host."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    probe = Request(uid=0, prompt=_prompt(cfg, 5), max_new=8,
+                    temperature=0.0)
+    ref = ServeEngine(params, cfg, acfg, _scfg(True)).run([probe])[0]
+    stop = (int(ref[2]),)          # fires mid-window under draft_k=4
+    req = dataclasses.replace(probe, stop_tokens=stop)
+    base = ServeEngine(params, cfg, acfg, _scfg(True)).run(
+        [dataclasses.replace(req)])[0]
+    eng = ServeEngine(params, cfg, acfg,
+                      _scfg(True, speculative=True, draft_k=4,
+                            draft="self"))
+    out = eng.run([dataclasses.replace(req)])[0]
+    np.testing.assert_array_equal(out, base)
+    np.testing.assert_array_equal(out, ref[:3])        # stop kept, then cut
+    assert eng.spec_steps > 0
+
+
+def test_sampled_rows_parity_with_greedy_first_expiry():
+    """Exact-match verification covers *sampled* rows too: heterogeneous
+    temperature/top-k/top-p requests, with ``greedy_first`` expiring in
+    the middle of a verify window, stay bitwise identical."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    reqs = [Request(uid=0, prompt=_prompt(cfg, 5), max_new=10,
+                    temperature=0.9, top_k=17, greedy_first=3, seed=21),
+            Request(uid=1, prompt=_prompt(cfg, 7, seed=5), max_new=10,
+                    temperature=1.1, top_p=0.9, seed=22)]
+    base = ServeEngine(params, cfg, acfg, _scfg(True)).run(list(reqs))
+    eng = ServeEngine(params, cfg, acfg,
+                      _scfg(True, speculative=True, draft_k=4,
+                            draft="self"))
+    out = eng.run(list(reqs))
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    assert eng.spec_steps > 0 and eng.spec_accepted > 0
+
+
+def test_mid_decode_admission_keeps_drafter_synced():
+    """Mixed admission steps decode non-speculatively; the model drafter
+    must consume those tokens too (the catch-up step) or its cache
+    desyncs. Self-drafting makes desync observable as acceptance < 1.0
+    — and admission parity must hold under speculation regardless."""
+    cfg, params, labels = _build("granite-3-8b", seed=1)
+    acfg = AnalogConfig(mode="off")
+    scfg = _scfg(True, speculative=True, draft_k=4, draft="self")
+    target = Request(uid=99, prompt=_prompt(cfg, 6), max_new=8,
+                     temperature=0.0, seed=42)
+    solo = ServeEngine(params, cfg, acfg, _scfg(True)).run(
+        [dataclasses.replace(target)])[99]
+    eng = ServeEngine(params, cfg, acfg, scfg)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=_prompt(cfg, 3 + i, seed=i),
+                           max_new=4 + 2 * i, temperature=0.0, seed=i))
+    for _ in range(2):
+        eng.step()                    # slots busy, decode under way
+    eng.submit(dataclasses.replace(target))
+    out = eng.run()
+    np.testing.assert_array_equal(out[99], solo)
+    assert eng.spec_steps > 0
+    assert eng.spec_accepted == eng.spec_proposed      # no silent desync
+
+
+def test_spec_with_prefix_sharing_parity():
+    """Speculation over refcount-shared prompt blocks: two requests with
+    an identical prompt (the second admits via the radix index) decode
+    speculatively without ever rewinding into the shared blocks — the
+    live ``check_rewind`` in every spec step enforces it — and both
+    match the non-speculative outputs bitwise."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    prompt = _prompt(cfg, 8)
+    reqs = [Request(uid=0, prompt=prompt, max_new=8, temperature=0.0),
+            Request(uid=1, prompt=prompt.copy(), max_new=8,
+                    temperature=0.7, seed=31)]
+    mk = lambda **kw: _scfg(True, prefix_cache=True, **kw)
+    base_eng = ServeEngine(params, cfg, acfg, mk())
+    base_eng.submit(dataclasses.replace(reqs[0]))
+    while base_eng.queue or any(s is not None and s.prefilling
+                                for s in base_eng.slots):
+        base_eng.step()
+    base_eng.submit(dataclasses.replace(reqs[1]))
+    base = base_eng.run()
+
+    eng = ServeEngine(params, cfg, acfg,
+                      mk(speculative=True, draft_k=4, draft="self"))
+    eng.submit(dataclasses.replace(reqs[0]))
+    while eng.queue or any(s is not None and s.prefilling
+                           for s in eng.slots):
+        eng.step()
+    eng.submit(dataclasses.replace(reqs[1]))
+    out = eng.run()
+    assert eng.prefix_hits > 0                 # uid 1 really shared blocks
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    assert eng.spec_steps > 0
+
+
+# ---------------------------------------------------------------------------
+# KV-pool rewind-safety contract
+# ---------------------------------------------------------------------------
+
+
+def test_rewind_floor_private_shared_and_frozen():
+    """The three floor cases of the contract: private blocks contribute
+    0, refcount-shared and full-indexed blocks freeze their whole span,
+    a registered tail freezes exactly its fill."""
+    pool = KVPool(num_blocks=8, block_size=4)
+    toks = np.arange(8, dtype=np.int32)
+    blocks = pool.alloc(1, 3)
+    assert pool.rewind_floor(1) == 0           # all-private: rewind to 0 ok
+    pool.check_rewind(1, 0)
+
+    keys = pool.prefix_keys(toks, 0)
+    pool.register(keys, blocks[:2])            # freeze first two full blocks
+    assert pool.rewind_floor(1) == 8
+    pool.check_rewind(1, 8)
+    with pytest.raises(RewindError, match="floor=8"):
+        pool.check_rewind(1, 7)
+
+    pool.register_tail(keys[1], blocks[2], 3, np.arange(3, dtype=np.int32))
+    assert pool.rewind_floor(1) == 8 + 3       # tail frozen at its fill
+    with pytest.raises(RewindError, match="floor=11"):
+        pool.check_rewind(1, 10)
+    pool.check_rewind(1, 11)
+
+    # a second owner mapping the indexed prefix makes blocks shared: the
+    # matcher's floor covers the shared span, the donor's is unchanged
+    hit, _tail = pool.match_prefix(toks, 0)
+    assert hit == blocks[:2]
+    pool.admit(2, hit, 1)
+    assert pool.rewind_floor(2) == 8
+    with pytest.raises(RewindError):
+        pool.check_rewind(2, 4)
+
+
+def test_rewind_floor_unknown_uid_raises():
+    """Asking for the floor of a uid the pool never admitted is a
+    programming error, not a 0 floor."""
+    pool = KVPool(num_blocks=4, block_size=4)
+    with pytest.raises(ValueError, match="uid=9"):
+        pool.rewind_floor(9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rewind_contract_under_pool_churn(seed):
+    """Property: under randomized admit/register/share/release churn with
+    interleaved accept/reject cursor motion, the pool conserves blocks
+    (free+cached+live == pool) and refcounts (Σrefs == Σowned), every
+    legal cursor position passes ``check_rewind``, and any rewind below
+    the floor raises — i.e. rollback can never touch a shared or frozen
+    block without the contract firing."""
+    rng = np.random.default_rng(seed)
+    total, bs = 24, 4
+    pool = KVPool(num_blocks=total, block_size=bs)
+    live = {}                                  # uid -> (prompt, cursor)
+    next_uid = 0
+
+    def invariants():
+        assert pool.num_free + pool.num_cached + pool.num_live == total
+        assert sum(pool._ref.values()) == sum(
+            len(v) for v in pool._owned.values())
+
+    for _ in range(120):
+        op = rng.random()
+        if op < 0.5 and len(live) < 5:         # admit (maybe prefix-shared)
+            reuse = live and rng.random() < 0.4
+            toks = (live[int(rng.choice(list(live)))][0] if reuse
+                    else rng.integers(0, 64, int(rng.integers(4, 17)))
+                    .astype(np.int32))
+            hit, _tail = pool.match_prefix(toks, 0)
+            need = pool.blocks_for(len(toks), 8) - len(hit)
+            if not pool.can_alloc(need, protect=frozenset(hit)):
+                invariants()
+                continue
+            uid = next_uid
+            next_uid += 1
+            pool.admit(uid, hit, need)
+            if rng.random() < 0.7:             # publish the prompt prefix
+                keys = pool.prefix_keys(toks, 0)
+                nfull = len(toks) // bs
+                pool.register(keys[len(hit):nfull],
+                              pool._owned[uid][len(hit):nfull])
+                frozen = nfull * bs
+            else:
+                frozen = len(hit) * bs
+            live[uid] = (toks, len(toks))
+            # decode-time floor never exceeds the prompt: every position
+            # from the prompt end onward is a legal rewind target
+            assert pool.rewind_floor(uid) <= max(frozen, len(hit) * bs)
+        elif op < 0.75 and live:               # speculative cursor motion
+            uid = int(rng.choice(list(live)))
+            toks, cur = live[uid]
+            cur = min(cur + int(rng.integers(0, 6)),
+                      len(pool._owned[uid]) * bs)    # accept some drafts
+            cur = max(cur - int(rng.integers(0, 4)), len(toks))  # reject
+            pool.check_rewind(uid, cur)        # legal by construction
+            floor = pool.rewind_floor(uid)
+            if floor > 0:
+                with pytest.raises(RewindError):
+                    pool.check_rewind(uid, floor - 1)
+            live[uid] = (toks, cur)
+        elif live:                             # release a random owner
+            uid = int(rng.choice(list(live)))
+            del live[uid]
+            pool.release(uid)
+        invariants()
+
+    for uid in list(live):
+        pool.release(uid)
+        invariants()
+    assert pool.num_live == 0

@@ -38,6 +38,14 @@ regressed by more than ``--threshold`` (default 15%):
   nonzero ``state_snap_restores`` check, and every entry of
   ``prefix_family_parity`` (dense/moe/ssm/hybrid warm≡cold bitwise) must
   be true;
+* speculative-decoding invariants (when the fresh run carries the
+  ``speculative`` section): the best drafter row's tokens/s-per-candidate
+  must be >= ``--spec-floor`` (default 1.0x) times the non-speculative
+  path's — speculation must never cost throughput at its best operating
+  point — with a nonzero acceptance rate on that row (windows are
+  actually accepting drafts, not just paying verification), and
+  ``spec_parity`` must be true (every drafter row bitwise identical to
+  non-speculative serving — the exact-match verification contract);
 * with ``--attn BENCH_attn.json``, the paged-attention microbench
   invariants too: paged decode cost must scale with live tokens and beat
   full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
@@ -70,7 +78,8 @@ def _get(d: dict, dotted: str):
 def check(baseline: dict, fresh: dict, threshold: float,
           abs_threshold: float, paged_floor: float = 1.0,
           prefix_floor: float = 1.3,
-          prefix_hybrid_floor: float = 1.1) -> list[str]:
+          prefix_hybrid_floor: float = 1.1,
+          spec_floor: float = 1.0) -> list[str]:
     """Return a list of failure strings (empty = pass)."""
     fails = []
     metrics = {"speedup_tokens_per_s": threshold,
@@ -156,6 +165,26 @@ def check(baseline: dict, fresh: dict, threshold: float,
         if not ph.get("cold_warm_greedy_parity"):
             fails.append("hybrid cold/warm greedy parity broken: "
                          "snapshot-restored decode diverged from cold")
+    sp = _get(fresh, "speculative")
+    if sp is not None:
+        best = sp.get("best_drafter")
+        speedup = sp.get("best_speedup_vs_nonspec", 0.0)
+        acc = sp.get("best_acceptance_rate", 0.0)
+        print(f"[perf] speculative.best_speedup_vs_nonspec: {speedup} "
+              f"({best}, floor {spec_floor}, acceptance {acc})")
+        if speedup < spec_floor:
+            fails.append(f"best speculative drafter ({best}) speedup "
+                         f"{speedup} below the {spec_floor}x floor over "
+                         f"non-speculative decode")
+        if acc <= 0:
+            fails.append(f"best speculative drafter ({best}) accepted "
+                         f"zero draft tokens (verification running, "
+                         f"drafting not engaging)")
+        if not sp.get("spec_parity"):
+            bad = [n for n, d in sp.get("drafters", {}).items()
+                   if not d.get("parity")]
+            fails.append("speculative ≡ non-speculative bitwise parity "
+                         f"broken for drafters: {bad}")
     fp = _get(fresh, "prefix_family_parity")
     if fp is not None:
         print(f"[perf] prefix_family_parity: {fp}")
@@ -214,6 +243,10 @@ def main() -> int:
                          "shared-prefix workload (KV + state-snapshot "
                          "restore; structurally smaller win than the "
                          "attention-only row)")
+    ap.add_argument("--spec-floor", type=float, default=1.0,
+                    help="min tokens/s-per-candidate ratio of the best "
+                         "speculative drafter row over the "
+                         "non-speculative path")
     ap.add_argument("--attn", default=None,
                     help="fresh BENCH_attn.json to gate the paged "
                          "attention invariants on")
@@ -230,7 +263,7 @@ def main() -> int:
         fresh = json.load(f)
     fails = check(baseline, fresh, args.threshold, args.abs_threshold,
                   args.paged_floor, args.prefix_floor,
-                  args.prefix_hybrid_floor)
+                  args.prefix_hybrid_floor, args.spec_floor)
     if args.attn:
         with open(args.attn) as f:
             fails += check_attn(json.load(f), args.attn_floor,
