@@ -81,6 +81,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ArchConfig
+from repro.core import devices as devices_lib
 from repro.core.analog import AnalogConfig
 from repro.models import build
 from repro.serve.decode import generate
@@ -471,6 +472,133 @@ def speculative_bench(params, cfg, acfg, num_slots, prefill_chunk,
     }
 
 
+def drift_bench(cfg, params, labels, num_slots, prefill_chunk,
+                quick=False) -> dict:
+    """Drift-aware long-running-serve eval on the analog engine.
+
+    Serves one greedy workload from an analog deployment whose per-tile
+    device state has been **pre-aged** to each point of an
+    hours-deployed curve (``core.devices.advance``), with a small
+    per-step drift ``dt`` ticking during the run, and scores each arm
+    against a pristine (no device state) engine on the identical
+    requests by greedy **first-token match rate** and mean
+    **prefix agreement** (fraction of each completion before its first
+    divergence) — the ``int8_divergence_check`` metrics: cascade-free,
+    so they track weight corruption rather than the greedy butterfly
+    effect of chaotic toy-model continuations. Each hours point runs
+    twice:
+
+    * *no_recal* — the chip keeps serving as-programmed; tiles decay on
+      their lognormal-``nu`` trajectories and agreement falls with
+      hours deployed.
+    * *recal* — the engine's drift watchdog (tight cadence/threshold so
+      the CI-sized run trips it immediately) reprograms the tiles in
+      place mid-serve; agreement must recover to >= the no_recal arm
+      at the worst-aged point (``recal_recovers``, CI-gated together
+      with an absolute floor via ``--drift-floor``).
+
+    Also asserts the legacy path is untouched: an engine whose params
+    carry an all-zero device state (null sigmas/faults, drift clock off)
+    must emit **token-bitwise identical** outputs to the device-free
+    engine (``no_drift_parity`` — a hard CI invariant).
+
+    Faults are left at zero here: stuck columns and dead tiles are
+    permanent, so they would cap both arms identically and only blur the
+    recovery signal this section gates (the launcher's ``--fault-prob``
+    exercises fault telemetry end to end).
+    """
+    acfg = AnalogConfig(mode="analog", train_noise=False)
+    hours = (6.0, 168.0) if quick else (6.0, 48.0, 168.0)
+    rng = np.random.default_rng(13)
+    # burn-in batch (served first, unscored: the window the watchdog
+    # reprograms in) + scoring batch (the post-watchdog serving quality
+    # both arms are judged on — a recal mid-deployment only helps the
+    # traffic that arrives after it)
+    burn = [Request(uid=100 + i,
+                    prompt=rng.integers(0, cfg.vocab_size, 10
+                                        ).astype(np.int32),
+                    max_new=8, temperature=0.0) for i in range(4)]
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 10
+                                        ).astype(np.int32),
+                    max_new=8, temperature=0.0, seed=13 + i)
+            for i in range(12)]
+    max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
+                  for r in reqs + burn)
+    base = SchedulerConfig(num_slots=num_slots, max_len=max_len,
+                           prefill_chunk=prefill_chunk)
+
+    def serve(p, drift_dt=0.0, recal=False):
+        eng = ServeEngine(p, cfg, acfg, dataclasses.replace(
+            base, drift_dt=drift_dt, recalibrate=recal,
+            recal_interval=1, recal_threshold=0.05))
+        eng.run([dataclasses.replace(r) for r in burn])
+        res = eng.run([dataclasses.replace(r) for r in reqs])
+        return res, eng
+
+    ref, _ = serve(params)                    # pristine analog reference
+
+    def agreement(res):
+        # greedy + fixed budgets + no stop tokens -> equal lengths
+        first, lcp = [], []
+        for r in reqs:
+            a, b = np.asarray(ref[r.uid]), np.asarray(res[r.uid])
+            d = np.flatnonzero(a != b)
+            k = int(d[0]) if len(d) else len(a)
+            first.append(k >= 1)
+            lcp.append(k / len(a))
+        return float(np.mean(first)), float(np.mean(lcp))
+
+    # null device state (zero sigmas/faults, clock off) must be a no-op
+    null_params = devices_lib.attach_device_state(
+        params, labels, jax.random.PRNGKey(21),
+        devices_lib.DeviceConfig(sigma_gain=0.0, nu_median=0.0,
+                                 nu_sigma=0.0, sigma_offset=0.0))
+    null_res, _ = serve(null_params)
+    no_drift_parity = bool(all(
+        np.array_equal(null_res[r.uid], ref[r.uid]) for r in reqs))
+
+    dcfg = devices_lib.DeviceConfig(sigma_gain=0.02, nu_median=0.1,
+                                    nu_sigma=0.3)
+    dparams = devices_lib.attach_device_state(
+        params, labels, jax.random.PRNGKey(42), dcfg)
+    curve = []
+    for h in hours:
+        aged = devices_lib.advance(dparams, h)
+        nr_res, nr_eng = serve(aged, drift_dt=0.02)
+        rc_res, rc_eng = serve(aged, drift_dt=0.02, recal=True)
+        nr_first, nr_lcp = agreement(nr_res)
+        rc_first, rc_lcp = agreement(rc_res)
+        curve.append({
+            "hours_deployed": h,
+            "first_match_no_recal": round(nr_first, 3),
+            "first_match_recal": round(rc_first, 3),
+            "prefix_agree_no_recal": round(nr_lcp, 3),
+            "prefix_agree_recal": round(rc_lcp, 3),
+            "tile_scale_err_no_recal": round(nr_eng.tile_scale_err, 4),
+            "tile_scale_err_recal": round(rc_eng.tile_scale_err, 4),
+            "recal_count": int(rc_eng.recal_count),
+        })
+    worst = curve[-1]
+    return {
+        "workload": {"num_requests": len(reqs), "max_new": 8,
+                     "num_slots": num_slots, "temperature": 0.0,
+                     "drift_dt_per_step": 0.02},
+        "device": {"sigma_gain": dcfg.sigma_gain,
+                   "nu_median": dcfg.nu_median,
+                   "nu_sigma": dcfg.nu_sigma},
+        "no_drift_parity": no_drift_parity,
+        "hours": curve,
+        "recal_fired": bool(all(r["recal_count"] >= 1 for r in curve)),
+        "final_first_match_no_recal": worst["first_match_no_recal"],
+        "final_first_match_recal": worst["first_match_recal"],
+        "recal_recovers": bool(
+            worst["first_match_recal"] >= worst["first_match_no_recal"]
+            and worst["prefix_agree_recal"]
+            >= worst["prefix_agree_no_recal"]),
+    }
+
+
 def family_parity_check() -> dict:
     """warm≡cold bitwise greedy parity across all four engine families
     (dense KV sharing, moe no-drop, ssm snapshot-only, hybrid
@@ -590,6 +718,8 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
     family_parity = family_parity_check()
     spec = speculative_bench(params, cfg, acfg, num_slots, prefill_chunk,
                              include_int4=not quick)
+    drift = drift_bench(cfg, params, labels, num_slots, prefill_chunk,
+                        quick=quick)
 
     result = {
         "workload": {"num_requests": num_requests, "max_prompt": max_prompt,
@@ -621,6 +751,7 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
         "prefix_cache_hybrid": prefix_hybrid,
         "prefix_family_parity": family_parity,
         "speculative": spec,
+        "drift": drift,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -660,6 +791,13 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
             f"{d['acceptance_rate']} win={d['verify_windows']}]"
             for name, d in spec["drafters"].items()) +
         f" best={spec['best_drafter']} parity={spec['spec_parity']}")
+    common.bench_row(
+        "serve.drift", 0.0,
+        f"no_drift_parity={drift['no_drift_parity']} " + " ".join(
+            f"h{r['hours_deployed']:g}=[no_recal="
+            f"{r['first_match_no_recal']} recal={r['first_match_recal']} "
+            f"recals={r['recal_count']}]" for r in drift["hours"]) +
+        f" recal_recovers={drift['recal_recovers']}")
     kv = result["kv_cache"]
     common.bench_row(
         "serve.claims", 0.0,

@@ -38,6 +38,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import devices as devices_lib
 from repro.core import noise as noise_lib
 from repro.core import quant
 from repro.kernels import dispatch
@@ -281,7 +282,33 @@ def analog_linear(p: dict, x: jax.Array, cfg: AnalogConfig,
             w_noise = jax.lax.stop_gradient(w_noise)
         else:
             w_noise = jnp.zeros_like(wf)
-        if fused:
+        dev = p.get("device") if not ctx.training else None
+        if dev is not None:
+            # Per-tile device path (eval/serve only): drift/fault-corrupt
+            # the weights once at this boundary so the fused kernel and
+            # the unfused reference consume identical arrays. The ADC
+            # bound stays calibrated on the *pristine* weights — hardware
+            # ADC ranges are set at programming time and don't track
+            # drift (core.devices.corrupt_weights).
+            bound = jax.lax.stop_gradient(
+                kref.adc_bound(wf, beta, cfg.out_bound))
+            w_dev, col_off = devices_lib.corrupt_weights(wf, dev, bound)
+            w_dev = jax.lax.stop_gradient(w_dev)
+            col_off = jax.lax.stop_gradient(col_off)
+            if fused:
+                y = dispatch.analog_mvm(
+                    xf, w_dev + w_noise, beta, bound,
+                    in_bits=cfg.input_bits, out_bits=cfg.output_bits,
+                    col_off=col_off)
+            else:
+                if x_q is None:
+                    x_q = quant.input_quantize(xf, beta, cfg.input_bits)
+                y = noisy_matmul(x_q, w_dev, w_noise) + col_off
+                if cfg.output_quant:
+                    y = quant.output_quantize(
+                        y, bound, jnp.float32(cfg.output_bits))
+            adc_done = True
+        elif fused:
             bound = jax.lax.stop_gradient(
                 kref.adc_bound(wf, beta, cfg.out_bound))
             y = dispatch.fused_analog_mvm(
@@ -368,6 +395,61 @@ def perturb_analog_weights(params, labels, key: jax.Array, model: str,
             out.append(pert.reshape(leaf.shape))
         else:
             out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sample_noise_instances(params, labels, key: jax.Array, model: str):
+    """Sample one deployment's *unit* noise instance per analog weight.
+
+    One chip programming = one sampled noise instance, reused across every
+    eval batch (and, for the gaussian model, across every ``gamma`` sweep
+    point — the instance is a *unit* perturbation that
+    :func:`apply_noise_instances` scales by ``gamma``). Re-sampling per
+    eval call would change the experiment the paper specifies: Fig. 3
+    compares the *same* simulated chip at different noise magnitudes. Key
+    folding matches :func:`perturb_analog_weights` (same per-leaf and
+    per-layer keys). Returns a pytree shaped like ``params`` with zero
+    leaves at non-analog sites.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    lab_leaves = jax.tree_util.tree_leaves(labels)
+    assert len(leaves) == len(lab_leaves)
+    out = []
+    for i, (leaf, lab) in enumerate(zip(leaves, lab_leaves)):
+        if lab == "analog_weight" and model != "none":
+            k = jax.random.fold_in(key, i)
+            flat = leaf.reshape((-1,) + leaf.shape[-2:])
+            ks = jax.random.split(k, flat.shape[0])
+            inst = jax.vmap(
+                lambda w, kk: noise_lib.sample_noise_instance(kk, w, model)
+            )(flat, ks)
+            out.append(inst.reshape(leaf.shape))
+        else:
+            out.append(jnp.zeros_like(leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def apply_noise_instances(params, labels, instances, model: str,
+                          gamma: float = 0.0):
+    """Perturb analog weights with a pre-sampled deployment noise instance.
+
+    ``instances`` comes from :func:`sample_noise_instances` (same params /
+    labels). ``"hw"`` instances are absolute perturbations (``w + inst``);
+    ``"gaussian"`` instances are unit perturbations scaled by ``gamma``
+    (``w + gamma * inst``) — so a gamma sweep over one instance tree
+    compares the same simulated chip throughout. The same honest-config
+    rules as ``core.noise.apply_eval_noise`` apply.
+    """
+    if model == "none":
+        return params
+    noise_lib.validate_noise_config(model, gamma)
+    scale = gamma if model == "gaussian" else 1.0
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    lab_leaves = jax.tree_util.tree_leaves(labels)
+    inst_leaves = jax.tree_util.tree_leaves(instances)
+    assert len(leaves) == len(lab_leaves) == len(inst_leaves)
+    out = [leaf + scale * inst if lab == "analog_weight" else leaf
+           for leaf, lab, inst in zip(leaves, lab_leaves, inst_leaves)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -1,0 +1,328 @@
+"""Per-tile analog device state: programming variation, conductance drift,
+fault injection, and the in-engine recalibration contract.
+
+The eval-noise model (``core.noise``) perturbs weights once, globally, from a
+single ``(model, gamma)`` config. Real AIMC chips are tiled: a weight matrix
+is partitioned across crossbar tiles, each tile is programmed with its own
+conductance error, drifts on its own trajectory, and can fail outright. This
+module models that per-tile reality (Rasch et al., arXiv:2302.08469; Luquin
+et al., arXiv:2506.00004):
+
+* **Programming gain variation** — every tile carries a multiplicative gain
+  ``1 + sigma_gain * eps`` sampled once per programming (per deployment).
+* **Conductance drift** — ``G(t) = G(t_prog) * ((t - t_prog + t0)/t0)^-nu``
+  with a *lognormal* drift coefficient ``nu`` per tile, so tiles decay at
+  different rates and the matrix de-calibrates non-uniformly over hours of
+  deployment.
+* **Periphery offset drift** — a per-tile output-offset instance that is
+  zero at calibration time and grows log-time with deployment, summed over
+  a column's row-tiles into a per-column pre-ADC offset (fraction of the
+  ADC bound).
+* **Hard faults** — stuck-at-Gmin columns (read as 0), stuck-at-Gmax
+  columns (pinned at the column's conductance ceiling), and dead tiles
+  (whole tile reads 0). Faults are permanent: recalibration cannot repair
+  them, only re-zero what calibration can measure.
+
+State lives *inside the params pytree*: :func:`attach_device_state` attaches
+a ``"device"`` sub-dict to every analog linear site (the same idiom as
+``core.analog.pack_int4_weights``), with every leaf keeping the site's
+leading stack dims so ``lax.scan`` slices per-layer state automatically.
+Because params are a *dynamic* argument of every serving jit, advancing the
+clock or recalibrating never recompiles a step executable.
+
+The recalibration contract (see ``docs/noise.md``): :func:`recalibrate`
+models a chip-level reprogram-and-recalibrate cycle — it resamples the
+per-tile gain instances (fresh programming noise), resamples the offset
+instances, and resets ``t_prog`` to the current clock (drift and offset
+growth restart from zero). ``t``, ``nu``, ``dead`` and ``stuck`` are
+untouched: time doesn't rewind, drift exponents are device physics, and
+hard faults are permanent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Static per-deployment description of the tiled analog hardware.
+
+    Attributes:
+        tile_k: Crossbar tile height (input/row dimension) in weight
+            elements; a ``[K, N]`` matrix is partitioned into
+            ``ceil(K/tile_k) x ceil(N/tile_n)`` tiles.
+        tile_n: Crossbar tile width (output/column dimension).
+        sigma_gain: Std of the per-tile multiplicative programming gain
+            ``1 + sigma_gain * eps`` — tile-to-tile conductance-programming
+            variation, resampled by every (re)programming.
+        nu_median: Median of the lognormal per-tile drift coefficient
+            ``nu`` in ``G(t) = G(t_prog) * ((t - t_prog + t0)/t0)^-nu``
+            (PCM-typical ~0.05; Rasch et al. 2302.08469).
+        nu_sigma: Lognormal shape of ``nu`` (std of ``log nu``) — the
+            tile-to-tile drift-rate spread.
+        sigma_offset: Std of the per-tile output-offset instance, in units
+            of the column's ADC bound. The realized per-column offset is
+            ``sum_over_row_tiles(off) * log1p(hours_since_cal / t0)`` —
+            zero at calibration, growing log-time after it.
+        p_stuck_col: Per-column probability of a stuck fault; stuck
+            columns split evenly between stuck-at-Gmin (column reads 0)
+            and stuck-at-Gmax (column pinned at its pristine absmax).
+        p_dead_tile: Per-tile probability the whole tile reads 0.
+        t0: Drift reference time in deployment hours (the time unit of
+            ``advance``'s ``dt``).
+    """
+
+    tile_k: int = 256
+    tile_n: int = 256
+    sigma_gain: float = 0.02
+    nu_median: float = 0.05
+    nu_sigma: float = 0.3
+    sigma_offset: float = 0.0
+    p_stuck_col: float = 0.0
+    p_dead_tile: float = 0.0
+    t0: float = 1.0
+
+
+def validate_config(dcfg: DeviceConfig) -> None:
+    """Honest-config check: raise ``ValueError`` on physically-meaningless
+    settings instead of silently serving a placebo device model."""
+    if dcfg.tile_k < 1 or dcfg.tile_n < 1:
+        raise ValueError(f"tile dims must be >= 1, got "
+                         f"({dcfg.tile_k}, {dcfg.tile_n})")
+    for name in ("sigma_gain", "nu_median", "nu_sigma", "sigma_offset"):
+        if getattr(dcfg, name) < 0:
+            raise ValueError(f"{name} must be >= 0, got "
+                             f"{getattr(dcfg, name)!r}")
+    for name in ("p_stuck_col", "p_dead_tile"):
+        v = getattr(dcfg, name)
+        if not 0.0 <= v <= 1.0:
+            raise ValueError(f"{name} must be a probability in [0, 1], "
+                             f"got {v!r}")
+    if dcfg.t0 <= 0:
+        raise ValueError(f"t0 must be > 0 hours, got {dcfg.t0!r}")
+
+
+def _sample_site(key: jax.Array, w_shape: tuple, dcfg: DeviceConfig) -> dict:
+    """Sample one analog site's device sub-dict (leading stack dims kept)."""
+    lead, (kdim, n) = w_shape[:-2], w_shape[-2:]
+    tk = -(-kdim // dcfg.tile_k)
+    tn = -(-n // dcfg.tile_n)
+    tshape = lead + (tk, tn)
+    kg, kn, ko, kd, ks = jax.random.split(key, 5)
+    gain = 1.0 + dcfg.sigma_gain * jax.random.normal(kg, tshape, jnp.float32)
+    nu = dcfg.nu_median * jnp.exp(
+        dcfg.nu_sigma * jax.random.normal(kn, tshape, jnp.float32))
+    off = dcfg.sigma_offset * jax.random.normal(ko, tshape, jnp.float32)
+    dead = (jax.random.uniform(kd, tshape) < dcfg.p_dead_tile
+            ).astype(jnp.float32)
+    u = jax.random.uniform(ks, lead + (n,))
+    stuck = jnp.where(u < dcfg.p_stuck_col / 2.0, 1,
+                      jnp.where(u < dcfg.p_stuck_col, 2, 0)).astype(jnp.int32)
+    return {"gain": gain, "nu": nu, "off": off, "dead": dead, "stuck": stuck,
+            "t": jnp.zeros(lead, jnp.float32),
+            "t_prog": jnp.zeros(lead, jnp.float32),
+            "t0": jnp.full(lead, dcfg.t0, jnp.float32),
+            "sigma_gain": jnp.full(lead, dcfg.sigma_gain, jnp.float32),
+            "sigma_offset": jnp.full(lead, dcfg.sigma_offset, jnp.float32)}
+
+
+def attach_device_state(params, labels, key: jax.Array,
+                        dcfg: DeviceConfig = DeviceConfig()):
+    """Attach a seeded ``"device"`` sub-dict to every analog linear site.
+
+    One deployment = one call: the same ``key`` reproduces a bitwise-
+    identical device instance (chip programmings are a controlled
+    experiment variable, like ``perturb_analog_weights`` seeds). Must run
+    *after* ``perturb_analog_weights`` — that function asserts a
+    device-free leaf structure. Stacked scan weights ``[L, K, N]`` get
+    ``[L, ...]``-leading state leaves so ``lax.scan`` slices per-layer
+    state exactly like the packed-int4 sub-dicts.
+    """
+    validate_config(dcfg)
+    idx = [0]
+
+    def walk(p, lab):
+        if not isinstance(p, dict):
+            return p
+        out = {k: walk(p[k], lab[k]) for k in p}
+        if isinstance(lab, dict) and lab.get("kernel") == "analog_weight":
+            out["device"] = _sample_site(
+                jax.random.fold_in(key, idx[0]), p["kernel"].shape, dcfg)
+            idx[0] += 1
+        return out
+
+    return walk(params, labels)
+
+
+def has_device_state(params) -> bool:
+    """True when any analog site carries an attached ``"device"`` sub-dict."""
+    found = [False]
+
+    def walk(p):
+        if isinstance(p, dict):
+            if "device" in p:
+                found[0] = True
+            for v in p.values():
+                walk(v)
+        elif isinstance(p, (list, tuple)):
+            for v in p:
+                walk(v)
+
+    walk(params)
+    return found[0]
+
+
+def _map_device(params, fn):
+    """Rebuild ``params`` applying ``fn`` to every ``"device"`` sub-dict."""
+    if isinstance(params, dict):
+        return {k: (fn(v) if k == "device" and isinstance(v, dict)
+                    else _map_device(v, fn))
+                for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        return type(params)(_map_device(v, fn) for v in params)
+    return params
+
+
+def _collect_devices(params) -> list:
+    """Flat list of every ``"device"`` sub-dict in traversal order."""
+    out = []
+
+    def walk(p):
+        if isinstance(p, dict):
+            for k, v in p.items():
+                if k == "device" and isinstance(v, dict):
+                    out.append(v)
+                else:
+                    walk(v)
+        elif isinstance(p, (list, tuple)):
+            for v in p:
+                walk(v)
+
+    walk(params)
+    return out
+
+
+def advance(params, dt_hours: float):
+    """Advance every site's deployment clock by ``dt_hours`` (pure step).
+
+    Only the tiny ``t`` leaves change — params stay a dynamic jit argument,
+    so serving steps never recompile as the chip ages.
+    """
+    dt = jnp.float32(dt_hours)
+    return _map_device(params, lambda d: {**d, "t": d["t"] + dt})
+
+
+def recalibrate(params, key: jax.Array):
+    """One reprogram-and-recalibrate cycle (see module docstring).
+
+    Resamples per-tile gain and offset instances (fresh programming noise),
+    and resets ``t_prog`` to the current clock so drift and offset growth
+    restart from zero. Drift exponents and hard faults are untouched —
+    they are device physics, not calibration state.
+    """
+    idx = [0]
+
+    def recal(d):
+        kg, ko = jax.random.split(jax.random.fold_in(key, idx[0]))
+        idx[0] += 1
+        lead = d["t"].shape
+        sg = d["sigma_gain"].reshape(lead + (1, 1) if lead else ())
+        so = d["sigma_offset"].reshape(lead + (1, 1) if lead else ())
+        gain = 1.0 + sg * jax.random.normal(kg, d["gain"].shape, jnp.float32)
+        off = so * jax.random.normal(ko, d["off"].shape, jnp.float32)
+        return {**d, "gain": gain, "off": off,
+                "t_prog": jnp.broadcast_to(d["t"], d["t_prog"].shape)}
+
+    return _map_device(params, recal)
+
+
+def _tile_scale(d: dict) -> jax.Array:
+    """Per-tile effective conductance scale at the current clock."""
+    t, tp, t0 = d["t"], d["t_prog"], d["t0"]
+    age = (t - tp + t0) / t0
+    if jnp.ndim(d["t"]):                      # leading stack dims
+        age = age[..., None, None]
+    return d["gain"] * jnp.power(age, -d["nu"]) * (1.0 - d["dead"])
+
+
+def _expand_tiles(s: jax.Array, kdim: int, n: int) -> jax.Array:
+    """Expand a ``[.., TK, TN]`` tile grid to ``[.., K, N]`` elements.
+
+    Tiles are equal-span partitions ``ceil(dim / T)`` — self-consistent
+    with how :func:`_sample_site` counted them.
+    """
+    tk, tn = s.shape[-2], s.shape[-1]
+    rk, rn = -(-kdim // tk), -(-n // tn)
+    s = jnp.repeat(s, rk, axis=-2)[..., :kdim, :]
+    return jnp.repeat(s, rn, axis=-1)[..., :n]
+
+
+def corrupt_weights(w: jax.Array, dev: dict, bound: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Materialize the device state into ``(w_eff, col_off)``.
+
+    ``w`` is the pristine ``[K, N]`` weight slice the site would serve
+    (leading dims supported); ``bound`` its per-column ADC bound — computed
+    from the *pristine* weights, because the hardware ADC range is
+    calibrated at programming time and does not track drift. Returns the
+    per-tile-scaled, fault-masked effective weights and the per-column
+    absolute offset to add to the f32 accumulator *before* ADC
+    quantization. Both the fused kernel and the unfused reference consume
+    these arrays verbatim, so fused≡unfused parity is inherited, not
+    re-proven.
+    """
+    kdim, n = w.shape[-2], w.shape[-1]
+    w_eff = w * _expand_tiles(_tile_scale(dev), kdim, n)
+    colmax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)   # pristine ceiling
+    stuck = dev["stuck"][..., None, :] if dev["stuck"].ndim == w.ndim - 1 \
+        else dev["stuck"]
+    w_eff = jnp.where(stuck == 1, 0.0, w_eff)
+    w_eff = jnp.where(stuck == 2, colmax, w_eff)
+
+    t, tp, t0 = dev["t"], dev["t_prog"], dev["t0"]
+    growth = jnp.log1p(jnp.maximum(t - tp, 0.0) / t0)
+    if jnp.ndim(t):
+        growth = growth[..., None, None]
+    off_t = dev["off"] * growth                            # [.., TK, TN]
+    col_frac = jnp.sum(off_t, axis=-2)                     # [.., TN]
+    tn = dev["off"].shape[-1]
+    rn = -(-n // tn)
+    col_frac = jnp.repeat(col_frac, rn, axis=-1)[..., :n]
+    return w_eff, col_frac * bound
+
+
+def health(params) -> dict:
+    """Host-side per-tile health telemetry for the engine's drift watchdog.
+
+    Returns plain floats/ints: ``mean_scale_err`` (mean ``|scale - 1|``
+    over live tiles — the watchdog's trip signal), ``dead_tiles``,
+    ``stuck_cols``, ``tiles``, ``sites``, and ``hours_since_cal`` (max over
+    sites of ``t - t_prog``).
+    """
+    devs = _collect_devices(params)
+    if not devs:
+        return {"sites": 0, "tiles": 0, "dead_tiles": 0, "stuck_cols": 0,
+                "mean_scale_err": 0.0, "hours_since_cal": 0.0}
+    err_sum = 0.0
+    live_n = 0.0
+    tiles = dead = stuck = 0
+    hours = 0.0
+    for d in devs:
+        live = 1.0 - np.asarray(d["dead"])
+        scale = np.asarray(_tile_scale(d))
+        err_sum += float(np.sum(np.abs(scale - 1.0) * live))
+        live_n += float(np.sum(live))
+        tiles += int(np.asarray(d["dead"]).size)
+        dead += int(np.sum(np.asarray(d["dead"]) > 0))
+        stuck += int(np.sum(np.asarray(d["stuck"]) != 0))
+        hours = max(hours, float(np.max(np.asarray(d["t"])
+                                        - np.asarray(d["t_prog"]))))
+    return {"sites": len(devs), "tiles": tiles, "dead_tiles": dead,
+            "stuck_cols": stuck,
+            "mean_scale_err": err_sum / max(live_n, 1.0),
+            "hours_since_cal": hours}

@@ -68,17 +68,56 @@ def pcm_hermes_noise(key: jax.Array, w: jax.Array, axis: int = 0) -> jax.Array:
     return noise.astype(w.dtype)
 
 
+def validate_noise_config(model: str, gamma: float = 0.0) -> None:
+    """Honest-config check for eval-noise settings (no silent placebo).
+
+    ``gamma < 0`` is meaningless for every model, and ``model="gaussian"``
+    with ``gamma == 0`` would *look* like a noisy run while perturbing
+    nothing — both raise loudly instead of silently serving the wrong
+    experiment (the SNIPPETS "honest detector" idiom). Use
+    ``model="none"`` to request a noiseless run explicitly.
+    """
+    if model not in ("none", "hw", "gaussian"):
+        raise ValueError(f"unknown eval noise model: {model!r}")
+    if gamma < 0:
+        raise ValueError(f"eval noise gamma must be >= 0, got {gamma!r}")
+    if model == "gaussian" and gamma == 0:
+        raise ValueError(
+            "model='gaussian' with gamma == 0 is a placebo (no perturbation "
+            "would be applied); use model='none' for a noiseless run or set "
+            "gamma > 0")
+
+
 def apply_eval_noise(key: jax.Array, w: jax.Array, model: str, gamma: float = 0.0,
                      axis: int = 0) -> jax.Array:
     """Perturb weights for a noisy evaluation run.
 
     ``model``: ``"none"`` | ``"hw"`` (PCM Hermes) | ``"gaussian"`` (per-channel-max
-    additive with magnitude ``gamma``, the Fig.-3 sweep).
+    additive with magnitude ``gamma``, the Fig.-3 sweep). Misconfigurations
+    (``gamma < 0``, gaussian at ``gamma == 0``) raise — see
+    :func:`validate_noise_config`.
     """
+    validate_noise_config(model, gamma)
     if model == "none":
         return w
     if model == "hw":
         return w + pcm_hermes_noise(key, w, axis=axis)
+    return w + gaussian_weight_noise(key, w, gamma, axis=axis)
+
+
+def sample_noise_instance(key: jax.Array, w: jax.Array, model: str,
+                          axis: int = 0) -> jax.Array:
+    """Sample one deployment's *unit* noise instance for ``w``.
+
+    ``"hw"`` returns the absolute PCM perturbation; ``"gaussian"`` returns
+    the per-channel-max unit term (``channel_absmax * tau`` — the eq. (3)
+    noise at ``gamma = 1``) so callers scale a fixed instance by ``gamma``:
+    one chip programming reused across a whole magnitude sweep
+    (``core.analog.sample_noise_instances`` / ``apply_noise_instances``).
+    """
+    if model == "hw":
+        return pcm_hermes_noise(key, w, axis=axis)
     if model == "gaussian":
-        return w + gaussian_weight_noise(key, w, gamma, axis=axis)
-    raise ValueError(f"unknown eval noise model: {model!r}")
+        tau = jax.random.normal(key, w.shape, dtype=jnp.float32)
+        return (channel_absmax(w, axis=axis) * tau).astype(w.dtype)
+    raise ValueError(f"no noise instance for model {model!r}")

@@ -3,17 +3,25 @@
 Every noisy number in the paper is a mean ± std over 10 random *chip
 programmings* (weight perturbations); the harness reproduces that protocol:
 perturb analog weights once per seed → run the task suite → aggregate.
+
+One seed = one deployment = one sampled noise instance, reused across every
+eval batch/task of that seed. Sweeps that evaluate the same model at several
+noise magnitudes (Fig. 3) pass pre-sampled ``instances`` so every ``gamma``
+point perturbs the *same* simulated chips — re-sampling per call would
+change the experiment the paper specifies.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping
+from typing import Callable, Mapping, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core.analog import AnalogConfig, perturb_analog_weights
+from repro.core.analog import (AnalogConfig, apply_noise_instances,
+                               perturb_analog_weights,
+                               sample_noise_instances)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,17 +31,47 @@ class NoiseSpec:
     gamma: float = 0.0         # gaussian magnitude (fraction of channel max)
 
 
+def deployment_instances(params, labels, model: str, seeds: int = 1,
+                         base_seed: int = 0) -> list:
+    """Sample one unit noise-instance tree per deployment seed.
+
+    Uses the same per-seed keys as :func:`evaluate`
+    (``PRNGKey(base_seed + 1000 * s)``), so passing the result back as
+    ``evaluate(..., instances=...)`` reproduces the same simulated chips
+    across every call that shares ``(model, seeds, base_seed)``.
+    """
+    return [sample_noise_instances(
+        params, labels, jax.random.PRNGKey(base_seed + 1000 * s), model)
+        for s in range(seeds)]
+
+
 def evaluate(params, labels, cfg, acfg: AnalogConfig,
              tasks: Mapping[str, Callable], noise: NoiseSpec = NoiseSpec(),
-             seeds: int = 1, base_seed: int = 0) -> dict:
-    """Returns {task: {"mean": .., "std": .., "runs": [...]}} (+ "avg")."""
+             seeds: int = 1, base_seed: int = 0,
+             instances: Optional[Sequence] = None) -> dict:
+    """Returns {task: {"mean": .., "std": .., "runs": [...]}} (+ "avg").
+
+    ``instances``: optional pre-sampled deployment noise instances (one
+    tree per seed, from :func:`deployment_instances`) — the sweep-stable
+    path: every call perturbs the same chips, scaled by ``noise.gamma``.
+    Without it each seed samples its own instance from the seed key, which
+    is equivalent *within* one call but not pinned *across* calls.
+    """
     results = {name: [] for name in tasks}
     n = seeds if noise.model != "none" else 1
+    if instances is not None and len(instances) < n:
+        raise ValueError(f"need {n} deployment instances, got "
+                         f"{len(instances)}")
     for s in range(n):
         key = jax.random.PRNGKey(base_seed + 1000 * s)
-        p = (perturb_analog_weights(params, labels, key, noise.model,
-                                    noise.gamma)
-             if noise.model != "none" else params)
+        if noise.model == "none":
+            p = params
+        elif instances is not None:
+            p = apply_noise_instances(params, labels, instances[s],
+                                      noise.model, noise.gamma)
+        else:
+            p = perturb_analog_weights(params, labels, key, noise.model,
+                                       noise.gamma)
         for name, task in tasks.items():
             results[name].append(task(p, cfg, acfg))
     out = {name: {"mean": float(np.mean(v)), "std": float(np.std(v)),

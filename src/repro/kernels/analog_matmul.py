@@ -68,18 +68,60 @@ def _analog_matmul_kernel(beta_ref, x_ref, w_ref, bound_ref, o_ref, acc_ref,
         o_ref[...] = y_q.astype(o_ref.dtype)
 
 
+def _analog_matmul_off_kernel(beta_ref, x_ref, w_ref, bound_ref, off_ref,
+                              o_ref, acc_ref, *, in_bits: int, out_bits: int,
+                              k_steps: int):
+    """Tile body with a per-column pre-ADC offset (per-tile device state).
+
+    Identical to :func:`_analog_matmul_kernel` except the finish step adds
+    the (1, bn) offset vector to the f32 accumulator *before* ADC
+    quantization — the periphery-offset term of ``core.devices`` (drifted
+    per-tile output offsets summed per column). A separate body keeps the
+    offset-free path bitwise-unchanged.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qi = float(2 ** (in_bits - 1) - 1)
+    beta = jnp.maximum(beta_ref[0, 0].astype(jnp.float32), 1e-8)
+    x = x_ref[...].astype(jnp.float32)
+    x_q = (beta / qi) * jnp.round(jnp.clip(x, -beta, beta) * (qi / beta))
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_q, w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        qo = float(2 ** (out_bits - 1) - 1)
+        b = jnp.maximum(bound_ref[...].astype(jnp.float32), 1e-8)  # (1, bn)
+        y = acc_ref[...] + off_ref[...].astype(jnp.float32)
+        inv = (qo / b) * _TIE_BREAK
+        y_q = jnp.clip((b / qo) * jnp.round(y * inv), -b, b)
+        o_ref[...] = y_q.astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("in_bits", "out_bits", "bm", "bn", "bk", "interpret"))
 def analog_matmul(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
-                  bound: jax.Array, *, in_bits: int = 8, out_bits: int = 8,
+                  bound: jax.Array, col_off: jax.Array | None = None, *,
+                  in_bits: int = 8, out_bits: int = 8,
                   bm: int = 256, bn: int = 256, bk: int = 512,
                   interpret: bool = False) -> jax.Array:
     """Fused DAC-quant → MVM → ADC-quant (see module docstring).
 
     x [M, K], w_eff [K, N], beta scalar (static input range),
-    bound [N] per-column ADC bound. Returns y_q [M, N] in x.dtype.
-    Shapes are padded to block multiples internally.
+    bound [N] per-column ADC bound. ``col_off`` [N], when given, is a
+    per-column absolute offset added to the f32 accumulator before ADC
+    quantization (the drifted periphery-offset term of ``core.devices``);
+    ``None`` runs the original offset-free kernel body, bitwise-unchanged.
+    Returns y_q [M, N] in x.dtype. Shapes are padded to block multiples
+    internally.
     """
     m, kdim = x.shape
     k2, n = w_eff.shape
@@ -97,19 +139,29 @@ def analog_matmul(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
     k_steps = kp // bk_
     grid = (mp // bm_, np_ // bn_, k_steps)
 
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),        # beta (scalar)
+        pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),    # x
+        pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),    # w
+        pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),      # bound
+    ]
+    operands = [beta2, xp, wp, bp]
+    kern = _analog_matmul_kernel
+    if col_off is not None:
+        # padded columns get offset=0 (their output is sliced away anyway)
+        op = jnp.pad(col_off.reshape(1, -1), ((0, 0), (0, np_ - n)))
+        in_specs.append(pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)))
+        operands.append(op)
+        kern = _analog_matmul_off_kernel
+
     out = pl.pallas_call(
-        functools.partial(_analog_matmul_kernel, in_bits=in_bits,
+        functools.partial(kern, in_bits=in_bits,
                           out_bits=out_bits, k_steps=k_steps),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),        # beta (scalar)
-            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),    # x
-            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),    # w
-            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),      # bound
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],    # f32 accumulator
         interpret=interpret,
-    )(beta2, xp, wp, bp)
+    )(*operands)
     return out[:m, :n]

@@ -93,18 +93,21 @@ def flatten_batch(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
 
 def analog_mvm(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
                bound: jax.Array, *, in_bits: int = 8, out_bits: int = 8,
+               col_off: jax.Array | None = None,
                block_shape: tuple[int, int, int] | None = None) -> jax.Array:
     """Fused DAC-quant → MVM → ADC-quant over arbitrary leading batch dims.
 
     Always executes the Pallas kernel — compiled on TPU, ``interpret=True``
-    elsewhere. No autodiff rule; use :func:`fused_analog_mvm` on paths that
-    can be differentiated.
+    elsewhere. ``col_off`` [N] is the optional per-column pre-ADC offset of
+    the per-tile device path (``core.devices.corrupt_weights``). No
+    autodiff rule; use :func:`fused_analog_mvm` on paths that can be
+    differentiated.
     """
     x2, lead = flatten_batch(x)
     m, kdim = x2.shape
     n = w_eff.shape[-1]
     bm, bn, bk = block_shape or select_blocks(m, kdim, n)
-    y = analog_matmul(x2, w_eff, beta, bound, in_bits=in_bits,
+    y = analog_matmul(x2, w_eff, beta, bound, col_off, in_bits=in_bits,
                       out_bits=out_bits, bm=bm, bn=bn, bk=bk,
                       interpret=not on_tpu())
     return y.reshape(*lead, n)

@@ -46,14 +46,17 @@ def adc_bound(w_eff: jax.Array, beta: jax.Array, lam: float) -> jax.Array:
 
 
 def analog_matmul_ref(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
-                      bound: jax.Array, *, in_bits: int = 8,
-                      out_bits: int = 8) -> jax.Array:
+                      bound: jax.Array, col_off: jax.Array | None = None, *,
+                      in_bits: int = 8, out_bits: int = 8) -> jax.Array:
     """Oracle for the fused analog MVM.
 
     x       [M, K]   activations (any float dtype; computed in f32)
     w_eff   [K, N]   effective (already noise-perturbed) weights
     beta    scalar   static input range (eq. 1)
     bound   [N]      per-column ADC bound = lambda_adc * beta * max|W[:,i]| (eq. 2)
+    col_off [N]      optional per-column absolute offset added to the f32
+                     accumulator before ADC quant (the drifted periphery
+                     offset of ``core.devices``; ``None`` = no offset)
 
     Quantizers are formulated reciprocal-free — ``round(v * (q/range))``
     rather than ``round(v / scale)`` — matching ``core.quant`` and the fused
@@ -66,6 +69,8 @@ def analog_matmul_ref(x: jax.Array, w_eff: jax.Array, beta: jax.Array,
 
     y = jnp.matmul(x_q, w_eff.astype(jnp.float32),
                    preferred_element_type=jnp.float32)
+    if col_off is not None:
+        y = y + col_off.astype(jnp.float32)[None, :]
 
     qo = _qmax(out_bits)
     b = jnp.maximum(bound.astype(jnp.float32), 1e-8)[None, :]

@@ -31,8 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import devices as devices_lib
 from repro.core.analog import (AnalogConfig, pack_int4_weights,
                                perturb_analog_weights)
+from repro.core.noise import validate_noise_config
 from repro.models import build
 from repro.serve.decode import digital_int4_config, generate
 from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
@@ -140,7 +142,34 @@ def main():
                          "— segregates entries whose KV would differ for "
                          "reasons outside the token ids (deployment "
                          "config, tenancy)")
+    ap.add_argument("--noise-model", default="none",
+                    choices=["none", "hw", "gaussian"],
+                    help="extra eval-time weight perturbation on analog "
+                         "deployments: hw = PCM Hermes programming noise, "
+                         "gaussian = per-channel-max additive (set "
+                         "--noise-gamma > 0; gaussian at gamma 0 is a "
+                         "placebo and errors out)")
+    ap.add_argument("--noise-gamma", type=float, default=0.0,
+                    help="gaussian magnitude as a fraction of the "
+                         "per-channel max weight (--noise-model gaussian)")
+    ap.add_argument("--drift-hours", type=float, default=0.0,
+                    help="total deployment-hours of conductance drift "
+                         "spread (approximately) across the serve run: "
+                         "attaches per-tile device state to analog "
+                         "weights and ticks the engine's drift clock "
+                         "each worked step")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="let the drift watchdog reprogram analog tiles "
+                         "in place when per-tile scale error trips its "
+                         "threshold (needs --drift-hours > 0)")
+    ap.add_argument("--fault-prob", type=float, default=0.0,
+                    help="per-column stuck-fault / per-tile dead-tile "
+                         "probability of the attached device state "
+                         "(--drift-hours mode; faults are permanent — "
+                         "recalibration never clears them)")
     args = ap.parse_args()
+    # honest config: reject meaningless noise settings before any work
+    validate_noise_config(args.noise_model, args.noise_gamma)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -148,6 +177,18 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     cfg, params, labels = build(cfg, key)
     params, acfg = deploy_model(args, cfg, params, labels, key)
+    if args.noise_model != "none":
+        if acfg.mode == "analog":
+            params = perturb_analog_weights(
+                params, labels, jax.random.fold_in(key, 1),
+                args.noise_model, args.noise_gamma)
+            print(f"[serve] applied {args.noise_model} eval noise"
+                  + (f" (gamma={args.noise_gamma:g})"
+                     if args.noise_model == "gaussian" else ""))
+        else:
+            print(f"[serve] WARNING: --noise-model {args.noise_model} "
+                  "perturbs analog weights; inert for deploy="
+                  f"{args.deploy!r}")
     cache_dtype = jnp.bfloat16 if args.cache_dtype == "bf16" else jnp.float32
     if args.kv_bits:
         acfg = dataclasses.replace(acfg, kv_bits=args.kv_bits)
@@ -167,6 +208,9 @@ def main():
         if args.paged or args.kv_bits:
             print("[serve] --paged/--kv-bits are continuous-engine "
                   "options: ignored on the static path")
+        if args.drift_hours or args.recalibrate:
+            print("[serve] --drift-hours/--recalibrate are "
+                  "continuous-engine options: ignored on the static path")
         prompts = jax.random.randint(key, (args.num_requests, 4), 0,
                                      cfg.vocab_size)
         if cfg.family == "audio":
@@ -186,6 +230,24 @@ def main():
     chunk = args.prefill_chunk
     max_len = max(required_max_len(len(r.prompt), r.max_new, chunk)
                   for r in reqs)
+    drift_dt = 0.0
+    # step count is only estimable (admission interleaves with decode) —
+    # served hours are approximate; the engine reports the exact total
+    est_steps = max(1, sum(r.max_new for r in reqs) // args.num_slots
+                    + args.num_requests)
+    if args.drift_hours > 0:
+        if acfg.mode == "analog":
+            dcfg = devices_lib.DeviceConfig(p_stuck_col=args.fault_prob,
+                                            p_dead_tile=args.fault_prob)
+            params = devices_lib.attach_device_state(
+                params, labels, jax.random.fold_in(key, 2), dcfg)
+            drift_dt = args.drift_hours / est_steps
+            print(f"[serve] per-tile device state attached "
+                  f"(~{args.drift_hours:g}h drift over ~{est_steps} steps)")
+        else:
+            print("[serve] WARNING: --drift-hours needs an analog "
+                  f"deployment (deploy={args.deploy!r} has no crossbar "
+                  "tiles to age): drift clock inert")
     eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
         num_slots=args.num_slots, max_len=max_len, prefill_chunk=chunk,
         step_tokens=args.step_tokens, cache_dtype=cache_dtype,
@@ -193,17 +255,24 @@ def main():
         kv_blocks=args.kv_blocks, prefix_cache=args.prefix_cache,
         cache_salt=args.cache_salt, speculative=args.speculative,
         draft_k=args.draft_k, draft=args.draft,
-        draft_layers=args.draft_layers))
+        draft_layers=args.draft_layers,
+        drift_dt=drift_dt, recalibrate=args.recalibrate,
+        # watchdog cadence scaled to the workload so short demo runs
+        # still health-check a handful of times
+        recal_interval=max(1, est_steps // 8) if drift_dt else 25))
     # honest feature reporting: a requested-but-inert feature warns
     # loudly with the engine's recorded reason — never a silent placebo.
     # --prefix-cache defaults on, so its warning fires only when the
     # flag was explicitly requested on the command line.
     requested = {"paged": args.paged,
                  "prefix_cache": "--prefix-cache" in sys.argv,
-                 "speculative": args.speculative}
+                 "speculative": args.speculative,
+                 "drift": args.drift_hours > 0,
+                 "recalibrate": args.recalibrate}
     for feat, why in eng.gating_reasons.items():
         if requested.get(feat):
-            flag = "--" + feat.replace("_", "-")
+            flag = {"drift": "--drift-hours"}.get(
+                feat, "--" + feat.replace("_", "-"))
             print(f"[serve] WARNING: {flag} requested but inactive: {why}")
     t0 = time.perf_counter()
     results = eng.run(reqs)
@@ -231,6 +300,12 @@ def main():
         prefix += (f", speculative ({eng.scfg.draft} drafter, k="
                    f"{eng.scfg.draft_k}): {eng.spec_steps} verify windows, "
                    f"{eng.spec_acceptance:.0%} draft acceptance")
+    if eng.drift_enabled:
+        prefix += (f", drift: {eng.drift_hours:.1f}h deployed, "
+                   f"tile_err={eng.tile_scale_err:.3f}, "
+                   f"{eng.dead_tiles} dead tiles, {eng.stuck_cols} stuck "
+                   f"cols, {eng.recal_count} recals "
+                   f"({eng.watchdog_checks} watchdog checks)")
     print(f"[serve] continuous ({mode} kv, {args.cache_dtype}): {total} "
           f"tokens across {len(reqs)} "
           f"mixed-length requests in {dt:.2f}s ({total / dt:.1f} tok/s, "

@@ -85,6 +85,13 @@ class BestOfNConfig:
             ``"self"`` (target drafts for itself; acceptance 1.0,
             measurement baseline), or ``"ngram"`` (host prompt-lookup,
             no draft forward pass at all).
+        drift_dt: Deployment-hours of conductance drift per engine step
+            (0 = no drift clock). Needs per-tile device state on the
+            params (``core.devices.attach_device_state``) — gated off
+            with a ``gating_reasons`` entry otherwise.
+        recalibrate: Let the drift watchdog reprogram analog tiles in
+            place when per-tile scale error trips the threshold (see
+            ``SchedulerConfig``); candidates in flight keep serving.
     """
 
     temperature: float = 0.8
@@ -102,6 +109,8 @@ class BestOfNConfig:
     speculative: bool = False
     draft_k: int = 4
     draft: str = "int4"
+    drift_dt: float = 0.0
+    recalibrate: bool = False
 
 
 def sample_candidates(params, cfg, acfg: AnalogConfig, key,
@@ -159,7 +168,8 @@ def sample_candidates(params, cfg, acfg: AnalogConfig, key,
         kv_block_size=bs, kv_blocks=kv_blocks,
         state_snapshots=state_snaps,
         speculative=bcfg.speculative, draft_k=bcfg.draft_k,
-        draft=bcfg.draft)
+        draft=bcfg.draft,
+        drift_dt=bcfg.drift_dt, recalibrate=bcfg.recalibrate)
     eng = ServeEngine(params, cfg, acfg, scfg)
     reqs = [Request(uid=i, prompt=np.asarray(prompts[i // n], np.int32),
                     max_new=bcfg.max_new, temperature=bcfg.temperature,

@@ -128,6 +128,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import devices as devices_lib
 from repro.core.analog import AnalogConfig, AnalogCtx
 from repro.models import apply as model_apply
 from repro.models import transformer as T
@@ -250,6 +251,21 @@ class SchedulerConfig:
     ``gating_reasons["speculative"]`` entry; mixed admission steps stay
     non-speculative (windows resume once prefill drains).
 
+    ``drift_dt > 0`` activates the deployment clock for analog serving
+    with per-tile device state (``core.devices.attach_device_state``):
+    every engine step advances conductance drift by ``drift_dt``
+    deployment-hours — a pure update of the tiny device-state leaves, so
+    no step executable recompiles as the chip ages. ``recalibrate=True``
+    adds the drift watchdog: every ``recal_interval`` steps the engine
+    reads per-tile health host-side, and when the mean ``|tile scale -
+    1|`` over live tiles exceeds ``recal_threshold`` it reprograms in
+    place (``core.devices.recalibrate`` — fresh gain/offset instances,
+    drift clock restarted) *without* evicting the KV pool, the prefix
+    index, or any in-flight request: the step degrades gracefully
+    (slower) instead of serving silently-wrong logits. Telemetry:
+    ``drift_hours``, ``recal_count``, ``tile_scale_err``,
+    ``dead_tiles`` / ``stuck_cols``.
+
     When a requested feature cannot run on the engine's family/config
     combination, ``ServeEngine`` records why in ``gating_reasons`` —
     never a silent downgrade (``launch.serve`` surfaces the reasons).
@@ -271,6 +287,10 @@ class SchedulerConfig:
     draft_k: int = 4
     draft: str = "int4"
     draft_layers: int = 0
+    drift_dt: float = 0.0
+    recalibrate: bool = False
+    recal_interval: int = 25
+    recal_threshold: float = 0.1
 
 
 class _Slot:
@@ -880,6 +900,23 @@ class ServeEngine:
             self.draft_caches = T.init_caches(dcfg, b, scfg.max_len,
                                               scfg.cache_dtype,
                                               per_slot=True)
+        # conductance-drift deployment clock + recalibration watchdog
+        # (core.devices): both need per-tile device state on the params —
+        # a drift clock over pristine digital weights would age nothing
+        self._drift = scfg.drift_dt > 0 and devices_lib.has_device_state(
+            params)
+        if scfg.drift_dt > 0 and not self._drift:
+            self.gating_reasons["drift"] = (
+                "drift_dt > 0 but params carry no per-tile device state "
+                "(core.devices.attach_device_state) — the deployment "
+                "clock would advance nothing")
+        self._recal = bool(scfg.recalibrate) and self._drift
+        if scfg.recalibrate and not self._recal:
+            self.gating_reasons["recalibrate"] = (
+                "recalibration needs an active drift clock (drift_dt > 0 "
+                "and per-tile device state attached to the params)")
+        if self._recal and scfg.recal_interval < 1:
+            raise ValueError("recal_interval must be >= 1")
         # fail fast on unsupported families
         T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits,
                           state_snaps=self._snaps)
@@ -912,6 +949,24 @@ class ServeEngine:
         self.spec_steps = 0
         self.spec_proposed = 0
         self.spec_accepted = 0
+        # drift/recalibration telemetry: deployment hours accumulated,
+        # watchdog health reads, in-place reprogrammings and their cost.
+        # tile_scale_err mirrors the latest watchdog read (mean |scale-1|
+        # over live tiles); dead/stuck counts are permanent faults.
+        self.drift_hours = 0.0
+        self.recal_count = 0
+        self.recal_time = 0.0
+        self.watchdog_checks = 0
+        self.tile_scale_err = 0.0
+        self.dead_tiles = 0
+        self.stuck_cols = 0
+        self._steps_since_check = 0
+        self._recal_key = jax.random.PRNGKey(0x5ECA1)
+        if self._drift:
+            h = devices_lib.health(params)
+            self.tile_scale_err = h["mean_scale_err"]
+            self.dead_tiles = h["dead_tiles"]
+            self.stuck_cols = h["stuck_cols"]
         self.step_token_log: collections.deque[tuple[int, int]] = (
             collections.deque(maxlen=4096))
         self._admit_seq = 0
@@ -998,6 +1053,46 @@ class ServeEngine:
         else:
             return
         self.phase_time[kind] += time.perf_counter() - t0
+        # the chip only ages while it computes: idle iterations return
+        # above, before the deployment clock ticks
+        if self._drift:
+            self._advance_drift()
+
+    def _advance_drift(self) -> None:
+        """Tick the deployment clock; run the recalibration watchdog.
+
+        Advancing drift mutates only the tiny ``"device"`` subdicts of
+        ``self.params`` (``core.devices.advance``) — params are dynamic
+        arguments to every step jit, so neither aging nor an in-place
+        recalibration recompiles any executable, and the KV pool, prefix
+        index and in-flight requests keep serving across both. Every
+        ``recal_interval`` worked steps the watchdog reads per-tile
+        health host-side; when the mean ``|tile scale - 1|`` over live
+        tiles exceeds ``recal_threshold`` (and ``recalibrate=True``) the
+        analog tiles are reprogrammed in place: fresh gain/offset
+        instances, drift clock restarted at the current deployment time
+        — permanent faults (dead tiles, stuck columns) survive, as on a
+        real chip.
+        """
+        self.params = devices_lib.advance(self.params, self.scfg.drift_dt)
+        self.drift_hours += self.scfg.drift_dt
+        self._steps_since_check += 1
+        if self._steps_since_check < self.scfg.recal_interval:
+            return
+        self._steps_since_check = 0
+        h = devices_lib.health(self.params)
+        self.watchdog_checks += 1
+        self.tile_scale_err = h["mean_scale_err"]
+        self.dead_tiles = h["dead_tiles"]
+        self.stuck_cols = h["stuck_cols"]
+        if self._recal and self.tile_scale_err > self.scfg.recal_threshold:
+            t0 = time.perf_counter()
+            key = jax.random.fold_in(self._recal_key, self.recal_count)
+            self.params = devices_lib.recalibrate(self.params, key)
+            self.recal_count += 1
+            h = devices_lib.health(self.params)
+            self.tile_scale_err = h["mean_scale_err"]
+            self.recal_time += time.perf_counter() - t0
 
     def _blocks_needed(self, req: Request) -> int:
         """Worst-case pool blocks a request holds (padded prompt + budget)."""
@@ -1043,6 +1138,19 @@ class ServeEngine:
     def spec_acceptance(self) -> float:
         """Fraction of proposed draft tokens the target accepted."""
         return self.spec_accepted / max(1, self.spec_proposed)
+
+    @property
+    def drift_enabled(self) -> bool:
+        """True when the deployment clock advances conductance drift
+        each worked step (``drift_dt > 0`` with per-tile device state on
+        the params — see ``gating_reasons`` otherwise)."""
+        return self._drift
+
+    @property
+    def recal_enabled(self) -> bool:
+        """True when the drift watchdog may reprogram analog tiles in
+        place (``recalibrate=True`` on a drift-enabled engine)."""
+        return self._recal
 
     @property
     def step_budget(self) -> int:

@@ -46,6 +46,15 @@ regressed by more than ``--threshold`` (default 15%):
   actually accepting drafts, not just paying verification), and
   ``spec_parity`` must be true (every drafter row bitwise identical to
   non-speculative serving — the exact-match verification contract);
+* drift/recalibration invariants (when the fresh run carries the
+  ``drift`` section): ``no_drift_parity`` must be true (an all-zero
+  per-tile device state serves token-bitwise identically to the
+  device-free engine — the legacy path is untouched), ``recal_fired``
+  must be true (the drift watchdog actually reprogrammed tiles — the
+  recal row isn't a silently-identical copy of the no-recal row), the
+  recalibrated arm's first-token match at the worst-aged point must be
+  >= ``--drift-floor`` (default 0.7) and ``recal_recovers`` must hold
+  (recal arm >= no-recal arm on both agreement metrics);
 * with ``--attn BENCH_attn.json``, the paged-attention microbench
   invariants too: paged decode cost must scale with live tokens and beat
   full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
@@ -79,7 +88,8 @@ def check(baseline: dict, fresh: dict, threshold: float,
           abs_threshold: float, paged_floor: float = 1.0,
           prefix_floor: float = 1.3,
           prefix_hybrid_floor: float = 1.1,
-          spec_floor: float = 1.0) -> list[str]:
+          spec_floor: float = 1.0,
+          drift_floor: float = 0.7) -> list[str]:
     """Return a list of failure strings (empty = pass)."""
     fails = []
     metrics = {"speedup_tokens_per_s": threshold,
@@ -185,6 +195,27 @@ def check(baseline: dict, fresh: dict, threshold: float,
                    if not d.get("parity")]
             fails.append("speculative ≡ non-speculative bitwise parity "
                          f"broken for drafters: {bad}")
+    dr = _get(fresh, "drift")
+    if dr is not None:
+        rc = dr.get("final_first_match_recal", 0.0)
+        nr = dr.get("final_first_match_no_recal", 0.0)
+        print(f"[perf] drift.final_first_match: recal={rc} no_recal={nr} "
+              f"(floor {drift_floor}, recal_fired={dr.get('recal_fired')}, "
+              f"no_drift_parity={dr.get('no_drift_parity')})")
+        if not dr.get("no_drift_parity"):
+            fails.append("no-drift parity broken: an all-zero per-tile "
+                         "device state changed served tokens vs the "
+                         "device-free engine (legacy path not bitwise)")
+        if not dr.get("recal_fired"):
+            fails.append("drift watchdog never recalibrated on the "
+                         "drift-aware serve run (recal arm is a placebo)")
+        if rc < drift_floor:
+            fails.append(f"recalibrated serving agreement {rc} below the "
+                         f"{drift_floor} floor at the worst-aged point")
+        if not dr.get("recal_recovers"):
+            fails.append(f"recalibration failed to recover serving "
+                         f"agreement over the no-recal arm "
+                         f"(recal={rc}, no_recal={nr})")
     fp = _get(fresh, "prefix_family_parity")
     if fp is not None:
         print(f"[perf] prefix_family_parity: {fp}")
@@ -247,6 +278,10 @@ def main() -> int:
                     help="min tokens/s-per-candidate ratio of the best "
                          "speculative drafter row over the "
                          "non-speculative path")
+    ap.add_argument("--drift-floor", type=float, default=0.7,
+                    help="min first-token match rate (vs the pristine "
+                         "engine) of the recalibrated arm at the "
+                         "worst-aged point of the drift serve run")
     ap.add_argument("--attn", default=None,
                     help="fresh BENCH_attn.json to gate the paged "
                          "attention invariants on")
@@ -263,7 +298,8 @@ def main() -> int:
         fresh = json.load(f)
     fails = check(baseline, fresh, args.threshold, args.abs_threshold,
                   args.paged_floor, args.prefix_floor,
-                  args.prefix_hybrid_floor, args.spec_floor)
+                  args.prefix_hybrid_floor, args.spec_floor,
+                  args.drift_floor)
     if args.attn:
         with open(args.attn) as f:
             fails += check_attn(json.load(f), args.attn_floor,
