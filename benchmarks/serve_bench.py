@@ -60,6 +60,16 @@ rate, verify-window count, tokens/s-per-candidate and
 (``--spec-floor``) with nonzero acceptance, and every row must be
 bitwise identical to the non-speculative reference (``spec_parity``).
 
+The ``open_loop`` section replays the mixed workload as *arriving
+traffic* through the async frontend (``serve.frontend``) at 0.5x / 1x /
+2x the engine's calibrated capacity: per-row TTFT/TPOT percentiles,
+goodput under the calibrated SLO, shed counts against a bounded
+admission queue (the overload row must shed — explicitly, never
+silently: ``no_silent_drop`` asserts every arrival reached a terminal),
+and the ``max_sustainable_qps`` saturation summary. CI gates the
+no-silent-drop invariant, nonzero shedding under overload, saturation
+row presence, and the base-rate goodput ratio (``--slo-floor``).
+
 Both paths run once untimed (to compile every executable) and once timed.
 Emits ``BENCH_serve.json`` with useful-token throughput and p50/p99 request
 latency for both engines, the speedup, and the result of the scheduler's
@@ -72,6 +82,7 @@ start of the serving perf trajectory (ROADMAP: serve heavy mixed traffic).
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import json
 import time
@@ -83,8 +94,10 @@ from repro.configs import get_config
 from repro.configs.base import ArchConfig
 from repro.core import devices as devices_lib
 from repro.core.analog import AnalogConfig
+from repro.launch.serve import arrival_offsets, open_loop_run
 from repro.models import build
 from repro.serve.decode import generate
+from repro.serve.frontend import AsyncServeFrontend
 from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
                                    padded_prompt_len, required_max_len)
 
@@ -635,6 +648,112 @@ def family_parity_check() -> dict:
     return out
 
 
+def open_loop_bench(params, cfg, acfg, reqs, num_slots,
+                    prefill_chunk) -> dict:
+    """Open-loop QPS sweep through the async frontend (PR 9).
+
+    A closed-loop pass on the same paged geometry calibrates the
+    engine's **capacity** (requests/s it sustains with the queue always
+    full) and the **SLO** (that pass's p99 request latency — a latency
+    every request provably meets under full batch pressure). The same
+    workload is then replayed as *arriving traffic* at 0.5x / 1x / 2x
+    capacity via :class:`AsyncServeFrontend`; the overload row arrives
+    in bursts against a deliberately small admission queue, so shedding
+    is structural, not a race. Per row: TTFT/TPOT p50/p99, goodput
+    under the SLO (fraction of arrivals finishing inside it, and their
+    tokens/s), shed/timeout counts, and the **no-silent-drop** check —
+    ``finished + shed + timed_out + cancelled + errored == submitted``,
+    every arrival reaches an explicit terminal. The summary carries the
+    **saturation row**: ``max_sustainable_qps`` is the highest swept
+    rate served with zero shedding and goodput ratio >= 0.8. CI gates
+    (``check_perf_regression.py``): saturation row present, every row
+    no-silent-drop, the overload row sheds (nonzero), and the base-rate
+    goodput ratio clears ``--slo-floor``.
+    """
+    # capacity + SLO calibration (geometry matches the main paged rows,
+    # so every executable is already compiled)
+    c_wall, c_lats, c_tok, _ = run_continuous(
+        params, cfg, acfg, list(reqs), num_slots, prefill_chunk,
+        paged=True)
+    capacity_qps = len(reqs) / c_wall
+    slo_s = float(np.percentile(np.asarray(c_lats), 99))
+
+    max_len = max(required_max_len(len(r.prompt), r.max_new, prefill_chunk)
+                  for r in reqs)
+    rows = []
+    for mult in (0.5, 1.0, 2.0):
+        overload = mult >= 2.0
+        qps = capacity_qps * mult
+        # overload: burst arrivals against a small queue -> guaranteed
+        # overflow; sustainable rates get comfortable queue headroom
+        arrival = "burst" if overload else "poisson"
+        max_queue = max(2, num_slots // 4) if overload else 2 * num_slots
+        eng = ServeEngine(params, cfg, acfg, SchedulerConfig(
+            num_slots=num_slots, max_len=max_len,
+            prefill_chunk=prefill_chunk, paged=True,
+            max_queue=max_queue))
+        row_reqs = [dataclasses.replace(r) for r in reqs]
+        offsets = arrival_offsets(len(row_reqs), qps, arrival,
+                                  np.random.default_rng(17))
+        fe = AsyncServeFrontend(eng)
+
+        async def drive():
+            await fe.start()
+            try:
+                return await open_loop_run(fe, row_reqs, offsets)
+            finally:
+                await fe.stop()
+
+        records, wall = asyncio.run(drive())
+        ttfts = [r["ttft"] for r in records if r["ttft"] is not None]
+        tpots = [(r["latency"] - r["ttft"]) / (r["tokens"] - 1)
+                 for r in records
+                 if r["ttft"] is not None and r["tokens"] > 1]
+        good = [r for r in records
+                if r["status"] == "finished" and r["latency"] <= slo_s]
+        counts = {}
+        for r in records:
+            counts[r["status"]] = counts.get(r["status"], 0) + 1
+        accounted = sum(counts.get(s, 0) for s in
+                        ("finished", "shed", "timed_out", "cancelled",
+                         "errored"))
+
+        def pct(xs, q):
+            return (round(float(np.percentile(xs, q)) * 1e3, 1)
+                    if xs else None)
+
+        rows.append({
+            "offered_x_capacity": mult,
+            "qps": round(qps, 2),
+            "arrival": arrival,
+            "max_queue": max_queue,
+            "submitted": int(eng.submitted),
+            "outcomes": counts,
+            "shed": int(eng.shed_count),
+            "timed_out": int(eng.timeout_count),
+            "wall_s": round(wall, 3),
+            "ttft_p50_ms": pct(ttfts, 50), "ttft_p99_ms": pct(ttfts, 99),
+            "tpot_p50_ms": pct(tpots, 50), "tpot_p99_ms": pct(tpots, 99),
+            "goodput_ratio": round(len(good) / len(records), 3),
+            "goodput_tokens_per_s": round(
+                sum(r["tokens"] for r in good) / wall, 1),
+            "queue_high_water": int(eng.queue_high_water),
+            "overload": overload,
+            "no_silent_drop": bool(accounted == len(records)
+                                   == eng.submitted),
+        })
+    sustainable = [r["qps"] for r in rows
+                   if r["shed"] == 0 and r["goodput_ratio"] >= 0.8]
+    return {
+        "capacity_qps": round(capacity_qps, 2),
+        "slo_s": round(slo_s, 3),
+        "slo_source": "closed-loop p99 request latency",
+        "rows": rows,
+        "max_sustainable_qps": round(max(sustainable), 2) if sustainable
+        else 0.0,
+    }
+
+
 def parity_check(params, cfg, acfg, num_slots, prefill_chunk) -> bool:
     """Acceptance check: a request admitted mid-batch at step k produces
     exactly the tokens it produces running solo."""
@@ -720,6 +839,8 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                              include_int4=not quick)
     drift = drift_bench(cfg, params, labels, num_slots, prefill_chunk,
                         quick=quick)
+    open_loop = open_loop_bench(params, cfg, acfg, reqs, num_slots,
+                                prefill_chunk)
 
     result = {
         "workload": {"num_requests": num_requests, "max_prompt": max_prompt,
@@ -752,6 +873,7 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
         "prefix_family_parity": family_parity,
         "speculative": spec,
         "drift": drift,
+        "open_loop": open_loop,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -798,6 +920,16 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
             f"{r['first_match_no_recal']} recal={r['first_match_recal']} "
             f"recals={r['recal_count']}]" for r in drift["hours"]) +
         f" recal_recovers={drift['recal_recovers']}")
+    common.bench_row(
+        "serve.open_loop", 0.0,
+        f"capacity={open_loop['capacity_qps']}qps "
+        f"slo={open_loop['slo_s']}s " + " ".join(
+            f"{r['offered_x_capacity']}x=[goodput={r['goodput_ratio']} "
+            f"ttft_p50={r['ttft_p50_ms']}ms shed={r['shed']}]"
+            for r in open_loop["rows"]) +
+        f" max_sustainable={open_loop['max_sustainable_qps']}qps "
+        f"no_silent_drop="
+        f"{all(r['no_silent_drop'] for r in open_loop['rows'])}")
     kv = result["kv_cache"]
     common.bench_row(
         "serve.claims", 0.0,

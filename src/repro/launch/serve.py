@@ -17,12 +17,27 @@ in the per-run line.
     # Table-3 digital deployment on the packed-int4 serving kernel:
     PYTHONPATH=src python -m repro.launch.serve --arch phi-3-mini-4k \
         --reduced --deploy digital_int4 --num-requests 8
+
+Open-loop modes (PR 9, ``serve.frontend``): ``--qps`` replays the same
+synthetic workload as *arriving traffic* (``--arrival poisson|burst``)
+through the async frontend with per-request deadlines
+(``--request-timeout``/``--ttft-timeout``) and a bounded admission queue
+(``--max-queue`` — overflow is shed with an explicit reason, never
+dropped silently); ``--serve`` opens a minimal HTTP/1.1 front door
+(``POST /generate`` with a JSON body, ``GET /health`` for live engine
+counters) on ``--port`` until interrupted:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama-3.2-1b \
+        --reduced --paged --qps 4 --arrival poisson --max-queue 8 \
+        --request-timeout 30
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
+import json
 import sys
 import time
 
@@ -37,6 +52,7 @@ from repro.core.analog import (AnalogConfig, pack_int4_weights,
 from repro.core.noise import validate_noise_config
 from repro.models import build
 from repro.serve.decode import digital_int4_config, generate
+from repro.serve.frontend import AsyncServeFrontend, ShedError
 from repro.serve.scheduler import (Request, SchedulerConfig, ServeEngine,
                                    required_max_len)
 
@@ -72,6 +88,159 @@ def mixed_requests(args, cfg) -> list[Request]:
         reqs.append(Request(uid=i, prompt=prompt, max_new=max_new,
                             temperature=0.8, top_k=50, seed=args.seed + i))
     return reqs
+
+
+def arrival_offsets(n: int, qps: float, arrival: str,
+                    rng: np.random.Generator) -> np.ndarray:
+    """Arrival times (seconds from start) for ``n`` open-loop requests.
+
+    ``poisson``: i.i.d. exponential inter-arrival gaps at rate ``qps``.
+    ``burst``: groups of 4 arriving together, groups spaced so the
+    long-run rate is still ``qps`` — the adversarial shape for a bounded
+    queue (transient overload even when the mean rate is sustainable).
+    """
+    if arrival == "poisson":
+        return np.cumsum(rng.exponential(1.0 / qps, size=n))
+    group = 4
+    starts = np.arange(n) // group * (group / qps)
+    return starts + rng.uniform(0, 1e-3, size=n)
+
+
+def lat_stats(vals) -> str:
+    """``p50/p99`` milliseconds, or ``-/-`` when nothing completed."""
+    xs = [v for v in vals if v is not None]
+    if not xs:
+        return "-/-"
+    return (f"{np.percentile(xs, 50) * 1e3:.0f}/"
+            f"{np.percentile(xs, 99) * 1e3:.0f}ms")
+
+
+async def open_loop_run(frontend: AsyncServeFrontend, reqs, offsets):
+    """Replay ``reqs`` as open-loop traffic: submit each at its arrival
+    offset, collect every terminal result (shed ones included). Returns
+    ``(records, wall_seconds)`` where each record is a dict with status,
+    ttft, latency and token count."""
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    records: list[dict] = []
+
+    async def one(req, at):
+        await asyncio.sleep(max(0.0, at - (loop.time() - t0)))
+        try:
+            h = await frontend.submit(req)
+        except ShedError as e:
+            records.append(dict(uid=req.uid, status="shed", ttft=None,
+                                latency=0.0, tokens=0, reason=str(e)))
+            return
+        res = await h.result()
+        records.append(dict(uid=req.uid, status=res.status, ttft=res.ttft,
+                            latency=res.latency, tokens=len(res.tokens),
+                            reason=res.reason))
+
+    await asyncio.gather(*(one(r, a) for r, a in zip(reqs, offsets)))
+    return records, loop.time() - t0
+
+
+def lifecycle_report(eng: ServeEngine, records=None) -> str:
+    """The lifecycle tail of the serve report line: TTFT/TPOT
+    percentiles, shed/timeout/cancel counts, queue high-water mark."""
+    ttfts, tpots = [], []
+    for uid, first in eng.first_token_at.items():
+        sub = eng.submit_time.get(uid)
+        if sub is not None:
+            ttfts.append(first - sub)
+        done = eng.finished_at.get(uid)
+        n = len(eng.results.get(uid, ()))
+        if done is not None and n > 1:
+            tpots.append((done - first) / (n - 1))
+    return (f"TTFT p50/p99 {lat_stats(ttfts)}, "
+            f"TPOT p50/p99 {lat_stats(tpots)}, "
+            f"{eng.shed_count} shed, {eng.timeout_count} timed out, "
+            f"{eng.cancel_count} cancelled, {eng.fault_count} step faults, "
+            f"queue high-water {eng.queue_high_water}")
+
+
+async def http_serve(frontend: AsyncServeFrontend, args, vocab: int):
+    """Minimal hand-rolled HTTP/1.1 front door (stdlib only).
+
+    ``POST /generate`` with JSON ``{"prompt": [ids], "max_new": n,
+    "temperature": t, "ttft_deadline": s, "deadline": s}`` answers
+    ``{"uid", "status", "tokens", "reason", "ttft", "latency"}`` —
+    shed requests answer 503 with the engine's explicit reason.
+    ``GET /health`` reports live lifecycle counters. Serves until
+    cancelled (Ctrl-C)."""
+    uid_counter = iter(range(1 << 30))
+
+    async def handle(reader, writer):
+        try:
+            head = await reader.readuntil(b"\r\n\r\n")
+        except (asyncio.IncompleteReadError, asyncio.LimitOverrunError):
+            writer.close()
+            return
+        line = head.split(b"\r\n", 1)[0].decode("latin-1")
+        parts = line.split()
+        method, path = (parts + ["", ""])[:2]
+        clen = 0
+        for h in head.split(b"\r\n")[1:]:
+            if h.lower().startswith(b"content-length:"):
+                clen = int(h.split(b":", 1)[1])
+        body = await reader.readexactly(clen) if clen else b""
+
+        def respond(code, obj):
+            payload = json.dumps(obj).encode()
+            writer.write(
+                f"HTTP/1.1 {code}\r\nContent-Type: application/json\r\n"
+                f"Content-Length: {len(payload)}\r\n"
+                f"Connection: close\r\n\r\n".encode() + payload)
+
+        eng = frontend.engine
+        if method == "GET" and path == "/health":
+            respond("200 OK", dict(
+                active=eng.num_active, queued=eng.queue_depth,
+                submitted=eng.submitted, shed=eng.shed_count,
+                timed_out=eng.timeout_count, cancelled=eng.cancel_count,
+                step_faults=eng.fault_count,
+                queue_high_water=eng.queue_high_water))
+        elif method == "POST" and path == "/generate":
+            try:
+                spec = json.loads(body or b"{}")
+                prompt = np.asarray(spec["prompt"], np.int32) % vocab
+                req = Request(
+                    uid=next(uid_counter), prompt=prompt,
+                    max_new=int(spec.get("max_new", args.new_tokens)),
+                    temperature=float(spec.get("temperature", 0.8)),
+                    top_k=int(spec.get("top_k", 50)),
+                    seed=int(spec.get("seed", args.seed)),
+                    ttft_deadline=float(spec.get("ttft_deadline",
+                                                 args.ttft_timeout)),
+                    deadline=float(spec.get("deadline",
+                                            args.request_timeout)))
+            except (KeyError, TypeError, ValueError) as e:
+                respond("400 Bad Request", dict(error=str(e)))
+            else:
+                try:
+                    h = await frontend.submit(req)
+                except ShedError as e:
+                    respond("503 Service Unavailable",
+                            dict(uid=req.uid, status="shed",
+                                 reason=str(e)))
+                else:
+                    res = await h.result()
+                    respond("200 OK", dict(
+                        uid=res.uid, status=res.status,
+                        tokens=[int(t) for t in res.tokens],
+                        reason=res.reason, ttft=res.ttft,
+                        latency=res.latency))
+        else:
+            respond("404 Not Found", dict(error=f"no route {path}"))
+        await writer.drain()
+        writer.close()
+
+    server = await asyncio.start_server(handle, "127.0.0.1", args.port)
+    print(f"[serve] HTTP front door on http://127.0.0.1:{args.port} "
+          f"(POST /generate, GET /health); Ctrl-C to stop")
+    async with server:
+        await server.serve_forever()
 
 
 def main():
@@ -167,6 +336,35 @@ def main():
                          "probability of the attached device state "
                          "(--drift-hours mode; faults are permanent — "
                          "recalibration never clears them)")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop mode: replay the synthetic workload "
+                         "as arriving traffic at this rate through the "
+                         "async frontend (0 = closed-loop eng.run)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "burst"],
+                    help="open-loop arrival process: poisson = "
+                         "exponential gaps at --qps, burst = groups of 4 "
+                         "arriving together at the same long-run rate")
+    ap.add_argument("--request-timeout", type=float, default=0.0,
+                    help="end-to-end deadline per request in seconds "
+                         "(0 = none); overdue requests are retired as "
+                         "timed_out with their partial output")
+    ap.add_argument("--ttft-timeout", type=float, default=0.0,
+                    help="first-token deadline per request in seconds "
+                         "(0 = none); enforced while queued and during "
+                         "prefill")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue for open-loop modes "
+                         "(0 = unbounded); arrivals past the bound are "
+                         "shed with an explicit reason, never silently "
+                         "dropped")
+    ap.add_argument("--serve", action="store_true",
+                    help="open a minimal HTTP/1.1 front door on --port "
+                         "(POST /generate, GET /health) and serve until "
+                         "interrupted instead of replaying the synthetic "
+                         "workload")
+    ap.add_argument("--port", type=int, default=8321,
+                    help="TCP port for --serve")
     args = ap.parse_args()
     # honest config: reject meaningless noise settings before any work
     validate_noise_config(args.noise_model, args.noise_gamma)
@@ -226,7 +424,12 @@ def main():
               f"{jax.device_get(toks[0])[:8]}")
         return
 
+    open_loop = args.serve or args.qps > 0
     reqs = mixed_requests(args, cfg)
+    if open_loop and (args.request_timeout or args.ttft_timeout):
+        reqs = [dataclasses.replace(r, deadline=args.request_timeout,
+                                    ttft_deadline=args.ttft_timeout)
+                for r in reqs]
     chunk = args.prefill_chunk
     max_len = max(required_max_len(len(r.prompt), r.max_new, chunk)
                   for r in reqs)
@@ -259,7 +462,11 @@ def main():
         drift_dt=drift_dt, recalibrate=args.recalibrate,
         # watchdog cadence scaled to the workload so short demo runs
         # still health-check a handful of times
-        recal_interval=max(1, est_steps // 8) if drift_dt else 25))
+        recal_interval=max(1, est_steps // 8) if drift_dt else 25,
+        # open-loop modes bound the queue and survive step faults —
+        # a public front door must degrade, not die
+        max_queue=args.max_queue if open_loop else 0,
+        fault_tolerant=open_loop))
     # honest feature reporting: a requested-but-inert feature warns
     # loudly with the engine's recorded reason — never a silent placebo.
     # --prefix-cache defaults on, so its warning fires only when the
@@ -274,6 +481,47 @@ def main():
             flag = {"drift": "--drift-hours"}.get(
                 feat, "--" + feat.replace("_", "-"))
             print(f"[serve] WARNING: {flag} requested but inactive: {why}")
+    if args.serve:
+        fe = AsyncServeFrontend(eng)
+
+        async def door():
+            await fe.start()
+            try:
+                await http_serve(fe, args, cfg.vocab_size)
+            finally:
+                await fe.stop()
+
+        try:
+            asyncio.run(door())
+        except KeyboardInterrupt:
+            print(f"[serve] shutting down; {lifecycle_report(eng)}")
+        return
+
+    if args.qps > 0:
+        rng = np.random.default_rng(args.seed + 1)
+        offsets = arrival_offsets(len(reqs), args.qps, args.arrival, rng)
+        fe = AsyncServeFrontend(eng)
+
+        async def drive():
+            await fe.start()
+            try:
+                return await open_loop_run(fe, reqs, offsets)
+            finally:
+                await fe.stop()
+
+        records, wall = asyncio.run(drive())
+        by = {}
+        for r in records:
+            by[r["status"]] = by.get(r["status"], 0) + 1
+        total = sum(r["tokens"] for r in records)
+        # no-silent-drop accounting: every arrival reaches a terminal
+        assert len(records) == len(reqs) == eng.submitted
+        print(f"[serve] open-loop ({args.arrival} @ {args.qps:g} qps, "
+              f"{len(reqs)} arrivals): {total} tokens in {wall:.2f}s "
+              f"({total / wall:.1f} tok/s), outcomes {by}, "
+              f"{fe.steps} engine steps; {lifecycle_report(eng)}")
+        return
+
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt = time.perf_counter() - t0
@@ -312,8 +560,8 @@ def main():
           f"{eng.decode_steps} decode steps, {eng.mixed_steps} fused "
           f"mixed steps, {eng.decode_tokens_during_admission} decode "
           f"tokens emitted during admission, "
-          f"p50 latency {lats[len(lats) // 2] * 1e3:.0f}ms{prefix}); "
-          f"sample: {results[0][:8]}")
+          f"p50 latency {lats[len(lats) // 2] * 1e3:.0f}ms{prefix}; "
+          f"{lifecycle_report(eng)}); sample: {results[0][:8]}")
 
 
 if __name__ == "__main__":

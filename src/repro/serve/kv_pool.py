@@ -54,6 +54,23 @@ stores the tokens of one block; a state snapshot stores the *recurrent
 summary of the whole prefix* up to a block boundary, indexed under the
 same hash-chain key — so one snapshot hit replaces a whole chain walk.
 
+**Cancel-vs-rewind ordering contract** (PR 9). Speculative decoding
+dispatches a fused draft-and-verify window and only learns how many of
+the ``k`` draft tokens survived when the device result is read back; in
+between, the window's rows hold a *provisionally advanced* ``pos``
+cursor that the commit may rewind. Releasing a uid inside that span
+would recycle blocks the in-flight device step still scatter-writes —
+so the scheduler brackets every speculative dispatch with
+:meth:`_RefcountedPool.begin_window` / :meth:`_RefcountedPool.end_window`
+and ``release`` raises a clear ``ValueError`` (never a silent no-op or
+a deferred free) for any uid inside the open window. The ordering rule
+for callers is: **commit (or fault-reset) the in-flight step first,
+then cancel** — ``ServeEngine.cancel`` honors it by parking
+cancellations that target an in-window uid until ``step_commit`` closes
+the window, and the async frontend only issues cancels at step
+boundaries. The window is bracketing metadata only: it never changes
+what ``release`` frees, just *when* it is legal to call.
+
 Pure host-side Python (deque + dicts); the device only ever sees the
 block-table rows / snapshot slot ids this hands out and the COW copy
 pairs.
@@ -120,6 +137,9 @@ class _RefcountedPool:
         self._lru: collections.OrderedDict[int, None] = (
             collections.OrderedDict())
         self.evictions = 0
+        # uids with an in-flight speculative rewind window (see the
+        # cancel-vs-rewind ordering contract in the module docstring)
+        self._window: frozenset[int] = frozenset()
 
     # ------------------------------------------------------------------
     # accounting
@@ -151,11 +171,50 @@ class _RefcountedPool:
     # ownership
     # ------------------------------------------------------------------
 
+    def owns(self, uid: int) -> bool:
+        """True while request ``uid`` holds at least one slot — lets the
+        scheduler's retirement path release best-effort acquisitions
+        (state snapshots) without guessing whether any were captured."""
+        return uid in self._owned
+
+    def begin_window(self, uids: Iterable[int]) -> None:
+        """Open an in-flight speculative rewind window over ``uids``.
+
+        Between this call and :meth:`end_window`, the device step
+        dispatched for these requests may still rewind their cursors and
+        overwrite their private tails, so ``release`` refuses to recycle
+        their blocks (see the cancel-vs-rewind ordering contract in the
+        module docstring). Nesting is a bug: exactly one window may be
+        open at a time."""
+        if self._window:
+            raise ValueError(
+                f"rewind window already open for uids={sorted(self._window)}")
+        self._window = frozenset(uids)
+
+    def end_window(self) -> None:
+        """Close the in-flight rewind window (idempotent): the committed
+        step has been consumed, cursors are final, releases are legal
+        again."""
+        self._window = frozenset()
+
+    def in_window(self, uid: int) -> bool:
+        """True while ``uid`` is covered by the open rewind window."""
+        return uid in self._window
+
     def release(self, uid: int) -> None:
         """Drop request ``uid``'s references. Blocks whose refcount hits
         zero go to the LRU cache when content-indexed, to the free list
         otherwise. Unknown/double release is a clear error — refcounting
-        makes that failure mode likely enough to deserve naming."""
+        makes that failure mode likely enough to deserve naming — and so
+        is releasing a uid with an in-flight speculative rewind window
+        (the cancel-vs-rewind ordering contract: commit the pending step
+        first, then cancel)."""
+        if uid in self._window:
+            raise ValueError(
+                f"release of request uid={uid} with an in-flight "
+                f"speculative rewind window — the dispatched step may "
+                f"still rewind into its blocks; commit the pending step "
+                f"(ServeEngine.step_commit) before releasing")
         blocks = self._owned.pop(uid, None)
         if blocks is None:
             raise ValueError(

@@ -105,6 +105,25 @@ replaces it for serving:
   in ``tests/test_scheduler.py``; MoE capacity dropping is the one
   documented exception — token dropping is chunk-shape dependent).
 
+* **Request lifecycle for open-loop serving** (PR 9) — every request
+  moves through an explicit state machine ``queued → prefill → decode →
+  {finished, cancelled, timed_out, shed, errored}`` (``ServeEngine.status``),
+  with per-request TTFT and end-to-end deadlines enforced at step
+  boundaries, ``cancel(uid)`` retiring a slot at any stage (every KV
+  block, COW tail and snapshot ref released — pool conservation holds
+  under arbitrary interleavings), admission control that *sheds* with an
+  explicit reason when the bounded queue overflows (``try_submit`` — the
+  ``gating_reasons`` honesty idiom applied to load: never a silent drop
+  or hang), and a chaos hook + fault-tolerant step that turns an injected
+  or real step fault into per-request ``errored`` results plus a clean
+  device-state reset, so the engine keeps serving. The step itself splits
+  into ``step_begin`` (admission + async device dispatch) and
+  ``step_commit`` (readback + host bookkeeping) so the async frontend
+  (``serve.frontend``) can overlap host scheduling with the in-flight
+  device step; cancels arriving between the two are deferred to the
+  commit boundary (the cancel-vs-rewind ordering contract —
+  ``serve.kv_pool``).
+
 Works in every serving mode of ``AnalogConfig`` — ``off``, ``analog``
 (optionally after ``perturb_analog_weights``), ``rtn``, and packed-int4
 (``decode.digital_int4_config`` + ``core.analog.pack_int4_weights``).
@@ -161,6 +180,13 @@ class Request:
     decoded greedily before temperature sampling (RGS/SGS strategies of
     paper App. B.1). ``seed`` derives the request's private PRNG key —
     generation is deterministic per request, independent of batch-mates.
+
+    ``ttft_deadline`` / ``deadline`` (seconds since submission, 0 = none)
+    are the request's SLOs, enforced at step boundaries: a request whose
+    first token has not been sampled within ``ttft_deadline``, or that
+    has not finished within ``deadline``, is retired as ``timed_out``
+    (partial output preserved) and its blocks/snapshots released — a
+    stuck or oversized request can no longer degrade everyone behind it.
     """
 
     uid: int
@@ -172,6 +198,8 @@ class Request:
     greedy_first: int = 0
     stop_tokens: tuple = ()
     seed: int = 0
+    ttft_deadline: float = 0.0
+    deadline: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -266,6 +294,19 @@ class SchedulerConfig:
     ``drift_hours``, ``recal_count``, ``tile_scale_err``,
     ``dead_tiles`` / ``stuck_cols``.
 
+    ``max_queue`` bounds the admission queue (0 = unbounded, the
+    closed-loop default): ``try_submit`` *sheds* a request arriving at a
+    full queue with an explicit reason instead of queueing it into a
+    deadline it can never meet — open-loop admission control with
+    backpressure the caller can see. ``fault_tolerant=True`` (implied by
+    installing a chaos hook) wraps every step in fault recovery: an
+    exception raised mid-step retires all in-flight requests as
+    ``errored`` (partial outputs + the fault message in
+    ``ServeEngine.errors``), rebuilds the device-side caches and pools
+    (their contents are suspect after a mid-step fault), and keeps
+    serving the queue — a single bad step can no longer wedge the
+    engine. Off by default so programming errors in tests still raise.
+
     When a requested feature cannot run on the engine's family/config
     combination, ``ServeEngine`` records why in ``gating_reasons`` —
     never a silent downgrade (``launch.serve`` surfaces the reasons).
@@ -291,6 +332,8 @@ class SchedulerConfig:
     recalibrate: bool = False
     recal_interval: int = 25
     recal_threshold: float = 0.1
+    max_queue: int = 0
+    fault_tolerant: bool = False
 
 
 class _Slot:
@@ -788,7 +831,7 @@ class ServeEngine:
     def __init__(self, params, cfg, acfg: AnalogConfig,
                  scfg: SchedulerConfig = SchedulerConfig(), *,
                  draft_params=None, draft_cfg=None, draft_acfg=None,
-                 draft_fn=None):
+                 draft_fn=None, chaos_hook=None):
         """Allocate the slot caches and host-side request state.
 
         The ``draft_*`` keywords override ``scfg.draft``'s model drafter
@@ -797,6 +840,15 @@ class ServeEngine:
         [<=k] int32`` replaces model drafting entirely with a host
         callable over the request's (prompt + generated) token context,
         the hook the forced-accept/forced-reject parity tests use.
+
+        ``chaos_hook(point)`` is the fault-injection seam the chaos
+        tests drive: it is called at the named checkpoints of every step
+        — ``"alloc"`` (admission, before the allocator runs),
+        ``"dispatch"`` (before each step's jit dispatch), ``"health"``
+        (before the drift watchdog's health read) — and whatever it
+        raises becomes the injected fault. Installing a hook implies
+        ``fault_tolerant`` recovery (the point of chaos testing is
+        proving the degraded path, not crashing it).
         """
         if cfg.family in ("audio", "vlm"):
             raise NotImplementedError(
@@ -920,10 +972,41 @@ class ServeEngine:
         # fail fast on unsupported families
         T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits,
                           state_snaps=self._snaps)
+        self._n_state_snaps = state_snaps
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Optional[_Slot]] = [None] * b
         self.results: dict[int, np.ndarray] = {}
         self.finished_at: dict[int, float] = {}
+        # request lifecycle: per-uid state machine (queued → prefill →
+        # decode → {finished, cancelled, timed_out, shed, errored}),
+        # submit timestamps for deadline math, first-token timestamps
+        # for TTFT, and explicit reasons for every non-finished terminal
+        # state — the gating_reasons honesty idiom applied per request
+        self.status: dict[int, str] = {}
+        self.errors: dict[int, str] = {}
+        self.submit_time: dict[int, float] = {}
+        self.first_token_at: dict[int, float] = {}
+        # streaming seam: (kind, uid, payload) event log the async
+        # frontend drains after each commit — ("token", uid, tok) per
+        # sampled token, ("done", uid, status) at every terminal state
+        self.events: collections.deque[tuple] = collections.deque()
+        # lifecycle telemetry (launch.serve report line)
+        self.submitted = 0
+        self.shed_count = 0
+        self.timeout_count = 0
+        self.cancel_count = 0
+        self.fault_count = 0
+        self.health_faults = 0
+        self.step_faults: list[str] = []
+        self.queue_high_water = 0
+        # chaos/fault-tolerance seam (see __init__ docstring)
+        self.chaos_hook = chaos_hook
+        self._tolerant = bool(scfg.fault_tolerant) or chaos_hook is not None
+        # in-flight step record between step_begin and step_commit;
+        # cancels arriving in that span are deferred to the commit
+        # boundary (the cancel-vs-rewind ordering contract)
+        self._inflight: Optional[dict] = None
+        self._deferred_cancels: list[tuple[int, str, Optional[str]]] = []
         self.decode_steps = 0
         # wall-clock phase attribution + fused-admission telemetry
         # (benchmarks/serve_bench.py reports these per engine row;
@@ -1008,10 +1091,96 @@ class ServeEngine:
                 raise ValueError(
                     f"request {req.uid}: needs {nblk} KV blocks, pool has "
                     f"{self.pool.num_blocks} total")
+        self.submitted += 1
+        self.status[req.uid] = "queued"
+        self.submit_time[req.uid] = time.perf_counter()
         self.queue.append(req)
+        self.queue_high_water = max(self.queue_high_water, len(self.queue))
+
+    def try_submit(self, req: Request) -> Optional[str]:
+        """Admission-controlled submit: accept ``req`` (returns ``None``)
+        or *shed* it with an explicit reason string (returned, recorded
+        in ``errors[uid]``, status ``"shed"``).
+
+        Sheds when the bounded queue (``SchedulerConfig.max_queue``) is
+        full, or when the request can never fit this engine (the
+        conditions :meth:`submit` raises ``ValueError`` for) — open-loop
+        backpressure the caller can surface to the client instead of a
+        silent drop or an unbounded queue that hangs every deadline.
+        """
+        reason = None
+        mq = self.scfg.max_queue
+        if mq and len(self.queue) >= mq:
+            reason = (f"admission queue full ({len(self.queue)}/{mq}) — "
+                      f"engine saturated, retry later")
+        else:
+            try:
+                self.submit(req)
+                return None
+            except ValueError as e:
+                reason = str(e)
+        self.submitted += 1
+        self.shed_count += 1
+        self._finish_unadmitted(req.uid, "shed", reason)
+        return reason
+
+    def cancel(self, uid: int, *, status: str = "cancelled",
+               reason: Optional[str] = None) -> bool:
+        """Cancel request ``uid`` at whatever lifecycle stage it is in.
+
+        Queued requests leave the queue; an in-flight slot is retired
+        immediately — partial output preserved in ``results[uid]``,
+        every KV block, COW tail and state-snapshot ref released, the
+        slot's block tables re-pointed at the write sink. Returns True
+        when the request was live (queued or slotted), False when it was
+        already terminal or unknown — cancelling a finished request is
+        not an error, the finish simply won.
+
+        Called between :meth:`step_begin` and :meth:`step_commit` the
+        cancellation is *deferred* to the commit boundary: the in-flight
+        device step may still rewind into (speculative window) or
+        scatter-write through the slot's blocks, and its committed cache
+        pytree would clobber an eager sink-reset — the cancel-vs-rewind
+        ordering contract (``serve.kv_pool``).
+        """
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                if status == "cancelled":
+                    self.cancel_count += 1
+                self._finish_unadmitted(uid, status, reason)
+                return True
+        for b, s in enumerate(self.slots):
+            if s is not None and s.req.uid == uid:
+                if self._inflight is not None:
+                    self._deferred_cancels.append((uid, status, reason))
+                else:
+                    if status == "cancelled":
+                        self.cancel_count += 1
+                    self._retire_slot(b, status, reason)
+                return True
+        return False
 
     def step(self) -> None:
-        """One engine iteration: admit into free slots, then advance.
+        """One engine iteration: admit into free slots, then advance —
+        :meth:`step_begin` (dispatch) immediately followed by
+        :meth:`step_commit` (readback). The async frontend calls the two
+        halves itself to overlap host work with the in-flight device
+        step; everything else uses this closed-loop wrapper."""
+        pending = self.step_begin()
+        if pending is not None:
+            self.step_commit(pending)
+
+    def step_begin(self) -> Optional[dict]:
+        """First half of an engine iteration: enforce deadlines, admit
+        into free slots, and *dispatch* the step's fused device work
+        without reading it back.
+
+        JAX dispatch is asynchronous, so when this returns the device is
+        (logically) computing while the host is free — the seam the
+        async frontend's double-buffering exploits. Returns an opaque
+        pending record to hand to :meth:`step_commit`, or ``None`` when
+        the engine is idle. Exactly one step may be in flight.
 
         Admission only binds a slot and plans the prompt's chunks — the
         chunks themselves piggyback on subsequent fused steps, so decode
@@ -1023,19 +1192,89 @@ class ServeEngine:
         overtaken by smaller requests behind it, so no request can
         starve.
         """
-        for b in range(self.scfg.num_slots):
-            if self.slots[b] is None and self.queue:
+        if self._inflight is not None:
+            raise RuntimeError("step_begin with a step already in flight "
+                               "— commit it first (step_commit)")
+        try:
+            self._enforce_deadlines()
+            self._admit_loop()
+            pending = self._dispatch()
+        except Exception as e:                    # noqa: BLE001
+            if not self._tolerant:
+                raise
+            self._fault_reset(e)
+            return None
+        self._inflight = pending
+        return pending
+
+    def step_commit(self, pending: dict) -> None:
+        """Second half: read the dispatched step's results back and run
+        the host bookkeeping (token appends, phase flips, registration,
+        retirement), then apply any cancellations deferred while the
+        step was in flight, then tick the drift clock."""
+        if pending is not self._inflight:
+            raise RuntimeError("step_commit of a step that is not the "
+                               "one in flight")
+        try:
+            {"mixed": self._mixed_commit,
+             "spec": self._spec_commit,
+             "decode": self._decode_commit}[pending["op"]](pending)
+        except Exception as e:                    # noqa: BLE001
+            self._inflight = None
+            if not self._tolerant:
+                raise
+            self._fault_reset(e)
+            return
+        self._inflight = None
+        self.phase_time[pending["kind"]] += (time.perf_counter()
+                                             - pending["t0"])
+        for uid, status, reason in self._deferred_cancels:
+            for b, s in enumerate(self.slots):
+                if s is not None and s.req.uid == uid:
+                    if status == "cancelled":
+                        self.cancel_count += 1
+                    self._retire_slot(b, status, reason)
+                    break          # a finish during commit simply won
+        self._deferred_cancels.clear()
+        # the chip only ages while it computes: idle iterations never
+        # reach a commit, so the deployment clock ticks worked steps only
+        if self._drift:
+            self._advance_drift()
+
+    def _admit_loop(self) -> None:
+        """Admit queue heads into free slots (strict FIFO, allocator
+        backpressure); an allocator fault at admission sheds the head
+        with an explicit reason instead of failing the whole step."""
+        free = [b for b in range(self.scfg.num_slots)
+                if self.slots[b] is None]
+        while free and self.queue:
+            try:
+                self._chaos("alloc")
                 plan = self._plan_admission(self.queue[0])
-                if plan is None:
-                    break                      # out of blocks: head waits
-                self._admit_request(self.queue.popleft(), b, plan)
+            except Exception as e:                # noqa: BLE001
+                if not self._tolerant:
+                    raise
+                req = self.queue.popleft()
+                self.shed_count += 1
+                self._finish_unadmitted(
+                    req.uid, "shed",
+                    f"allocator fault at admission: "
+                    f"{type(e).__name__}: {e}")
+                continue
+            if plan is None:
+                break                          # out of blocks: head waits
+            self._admit_request(self.queue.popleft(), free.pop(0), plan)
+
+    def _dispatch(self) -> Optional[dict]:
+        """Dispatch the step kind the current slot mix calls for; returns
+        the pending record (``None`` = idle)."""
         decode_rows = [b for b, s in enumerate(self.slots)
                        if s is not None and not s.prefilling]
         prefill_rows = [b for b, s in enumerate(self.slots)
                         if s is not None and s.prefilling]
         t0 = time.perf_counter()
         if prefill_rows:
-            self._mixed_step(decode_rows, prefill_rows)
+            pending = self._mixed_dispatch(decode_rows, prefill_rows)
             kind = "mixed" if decode_rows else "prefill"
         elif decode_rows:
             # model drafters take the spec path even when the window
@@ -1046,17 +1285,151 @@ class ServeEngine:
             # they fall back to the cheaper multi-step decode block.
             if self._spec and (self.draft_caches is not None
                                or self._spec_k(decode_rows)):
-                self._spec_step(decode_rows)
+                pending = self._spec_dispatch(decode_rows)
             else:
-                self._decode_step(decode_rows)
+                pending = self._decode_dispatch(decode_rows)
             kind = "decode"
         else:
-            return
-        self.phase_time[kind] += time.perf_counter() - t0
-        # the chip only ages while it computes: idle iterations return
-        # above, before the deployment clock ticks
-        if self._drift:
-            self._advance_drift()
+            return None
+        pending["kind"], pending["t0"] = kind, t0
+        return pending
+
+    def _chaos(self, point: str) -> None:
+        """Fire the chaos hook at a named fault-injection checkpoint."""
+        if self.chaos_hook is not None:
+            self.chaos_hook(point)
+
+    def _enforce_deadlines(self) -> None:
+        """Retire every request past its TTFT or end-to-end deadline —
+        queued requests leave the queue, slotted requests release their
+        blocks/snapshots and keep their partial output. Runs at step
+        boundaries only (``step_begin``), so deadline enforcement never
+        races an in-flight dispatch."""
+        now = time.perf_counter()
+
+        def overdue(req, started):
+            born = self.submit_time.get(req.uid, now)
+            dl = min(req.ttft_deadline or float("inf"),
+                     req.deadline or float("inf")) if not started else (
+                         req.deadline or float("inf"))
+            return now - born > dl
+
+        stale = [r.uid for r in self.queue if overdue(r, False)]
+        for uid in stale:
+            self.timeout_count += 1
+            self.cancel(uid, status="timed_out",
+                        reason="deadline passed while queued")
+        for b, s in enumerate(self.slots):
+            if s is None:
+                continue
+            if s.count == 0 and overdue(s.req, False):
+                self.timeout_count += 1
+                self._retire_slot(b, "timed_out",
+                                  "TTFT deadline passed during prefill")
+            elif s.count > 0 and overdue(s.req, True):
+                self.timeout_count += 1
+                self._retire_slot(b, "timed_out",
+                                  "end-to-end deadline passed mid-decode")
+
+    def _finish_unadmitted(self, uid: int, status: str,
+                           reason: Optional[str]) -> None:
+        """Terminal bookkeeping for a request that never held a slot
+        (shed at submit, or cancelled/timed out while queued)."""
+        self.results[uid] = np.zeros(0, np.int32)
+        self.status[uid] = status
+        if reason is not None:
+            self.errors[uid] = reason
+        self.finished_at[uid] = time.perf_counter()
+        self.events.append(("done", uid, status))
+
+    def _retire_slot(self, b: int, status: str,
+                     reason: Optional[str] = None) -> None:
+        """Retire slot ``b`` into terminal ``status``: record its (full
+        or partial) output, release every pool reference it holds — KV
+        blocks, COW tail, un-registered in-flight state snapshots — and
+        point its block tables at the write sink so the freed row's
+        static-shape scatter-writes stay harmless. The single retirement
+        path for finish, cancel, timeout and deadline alike, so pool
+        conservation holds under any interleaving."""
+        slot = self.slots[b]
+        uid = slot.req.uid
+        self.results[uid] = np.array(slot.out, np.int32)
+        self.finished_at[uid] = time.perf_counter()
+        self.status[uid] = status
+        if reason is not None:
+            self.errors[uid] = reason
+        self.events.append(("done", uid, status))
+        self.slots[b] = None
+        self._dirty = True
+        if self.state_pool is not None and self.state_pool.owns(uid):
+            # snapshots captured mid-prefill and never registered (a
+            # cancelled/timed-out prefill): refs drop, unindexed slots
+            # go straight back to the free list
+            self.state_pool.release(uid)
+        if self.pool is not None:
+            # Drop the request's block references (indexed zero-ref
+            # blocks are retained in the pool's LRU for prefix reuse,
+            # the rest return to the free list) and point the slot's
+            # block tables at the reserved sink block: the retired
+            # row keeps executing its static-shape scatter-writes in
+            # subsequent decode blocks, and those must not land in
+            # blocks the allocator may hand to the next admission —
+            # or in retained cache blocks.
+            self.pool.release(uid)
+            zrow = jnp.zeros(self.caches_tbl_width, jnp.int32)
+            self.caches = _admit_jit(
+                self.caches, jnp.int32(b), jnp.int32(0), jnp.int32(0),
+                zrow, zrow, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                cfg=self.cfg, paged=self._paged,
+                kv_bits=self.acfg.kv_bits, snaps=self._snaps)
+
+    def _fault_reset(self, exc: BaseException) -> None:
+        """Degrade gracefully after a mid-step fault: every in-flight
+        request surfaces an explicit ``errored`` result (partial output
+        + the fault message), then the device-side state — caches,
+        pools, drafter caches, step mirrors — is rebuilt from scratch
+        (its contents are suspect after a fault mid-dispatch) and the
+        engine keeps serving the queue. Queued requests are untouched."""
+        msg = f"step fault: {type(exc).__name__}: {exc}"
+        self.step_faults.append(msg)
+        self.fault_count += 1
+        now = time.perf_counter()
+        for b, s in enumerate(self.slots):
+            if s is None:
+                continue
+            uid = s.req.uid
+            self.results[uid] = np.array(s.out, np.int32)
+            self.finished_at[uid] = now
+            self.status[uid] = "errored"
+            self.errors[uid] = msg
+            self.events.append(("done", uid, "errored"))
+            self.slots[b] = None
+        self._deferred_cancels.clear()
+        self._inflight = None
+        scfg = self.scfg
+        if self.pool is not None:
+            self.pool = KVPool(self.pool.num_blocks, scfg.kv_block_size,
+                               salt=scfg.cache_salt)
+        if self.state_pool is not None:
+            self.state_pool = StateSnapshotPool(
+                self.state_pool.num_blocks, scfg.kv_block_size,
+                salt=scfg.cache_salt)
+        self.caches = T.init_caches(
+            self.cfg, scfg.num_slots, scfg.max_len, scfg.cache_dtype,
+            per_slot=True, paged=self._paged,
+            kv_block_size=scfg.kv_block_size,
+            kv_blocks=scfg.kv_blocks or None,
+            kv_bits=self.acfg.kv_bits if self._paged else 0,
+            state_snaps=self._n_state_snaps)
+        if self.draft_caches is not None:
+            self.draft_caches = T.init_caches(
+                self.draft_cfg, scfg.num_slots, scfg.max_len,
+                scfg.cache_dtype, per_slot=True)
+        self._pos[:] = 0
+        self._start[:] = 0
+        self._last_tok[:] = 0
+        self._dev = {}
+        self._dirty = True
 
     def _advance_drift(self) -> None:
         """Tick the deployment clock; run the recalibration watchdog.
@@ -1080,7 +1453,23 @@ class ServeEngine:
         if self._steps_since_check < self.scfg.recal_interval:
             return
         self._steps_since_check = 0
-        h = devices_lib.health(self.params)
+        try:
+            self._chaos("health")
+            h = devices_lib.health(self.params)
+            if not np.isfinite(h["mean_scale_err"]):
+                raise ValueError(
+                    f"non-finite tile health read: {h['mean_scale_err']}")
+        except Exception as e:                    # noqa: BLE001
+            if not self._tolerant:
+                raise
+            # a corrupted health read must never drive the watchdog —
+            # skip this check (no recalibration on garbage), count the
+            # fault, keep serving; the next interval reads fresh
+            self.health_faults += 1
+            self.step_faults.append(
+                f"health-read fault (watchdog check skipped): "
+                f"{type(e).__name__}: {e}")
+            return
         self.watchdog_checks += 1
         self.tile_scale_err = h["mean_scale_err"]
         self.dead_tiles = h["dead_tiles"]
@@ -1112,6 +1501,20 @@ class ServeEngine:
     def num_active(self) -> int:
         """Slots currently holding a request (prefilling or decoding)."""
         return sum(s is not None for s in self.slots)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests accepted but not yet admitted to a slot."""
+        return len(self.queue)
+
+    def drain_events(self) -> list[tuple]:
+        """Pop and return every pending stream event — ``("token", uid,
+        tok)`` per sampled token, ``("done", uid, status)`` per terminal
+        transition, in order. The async frontend calls this after each
+        commit to feed per-request token streams."""
+        out = list(self.events)
+        self.events.clear()
+        return out
 
     @property
     def prefix_enabled(self) -> bool:
@@ -1293,6 +1696,7 @@ class ServeEngine:
         slot.blocks, slot.keys, slot.hit_full = blocks, plan["keys"], nhit
         slot.hit_snap = snap[0] if snap else 0
         self.slots[b] = slot
+        self.status[req.uid] = "prefill"
         self._admit_seq += 1
         self._dirty = True
 
@@ -1385,16 +1789,19 @@ class ServeEngine:
         """Keep the updated step state device-resident for the next step."""
         self._dev.update(toks=toks, off=off, counts=counts)
 
-    def _mixed_step(self, decode_rows: list[int],
-                    prefill_rows: list[int]) -> None:
+    def _mixed_dispatch(self, decode_rows: list[int],
+                        prefill_rows: list[int]) -> dict:
         """One fused step: a decode token for every decode-phase slot plus
         as many admitting slots' prefill chunks as the token budget allows
         (oldest admission first, floor of one chunk — see config). The
         chunk forward runs at the compact ``prefill_batch`` width; unused
         compact rows point at distinct filler slots with all-zero masks
-        (cache-transparent by the layers' fully-masked-row contract)."""
+        (cache-transparent by the layers' fully-masked-row contract).
+        Dispatch half: returns the pending record, device work in
+        flight."""
         if self._dirty:
             self._refresh_device_state()
+        self._chaos("dispatch")
         c, pbw = self.scfg.prefill_chunk, self.prefill_batch
         n_dec = len(decode_rows)
         n_pf = int(np.clip((self.step_budget - n_dec) // c, 1,
@@ -1433,12 +1840,21 @@ class ServeEngine:
             use_top_p=use_top_p, k=k, paged=self._paged,
             snaps=self._snaps)
         self._stash(toks, off, counts)
-
-        # host bookkeeping: chunk cursors, phase flips, decode tokens
         if k:
             self.mixed_steps += 1          # steps that fused both phases
         self.prefill_chunks += len(pf_rows)
         self.step_token_log.append((n_dec * k, len(pf_rows) * c))
+        return dict(op="mixed", dec_toks=dec_toks, first=first,
+                    pf_rows=pf_rows, decode_rows=decode_rows, k=k,
+                    n_dec=n_dec)
+
+    def _mixed_commit(self, p: dict) -> None:
+        """Commit half of the fused step: host bookkeeping — chunk
+        cursors, phase flips (block/snapshot registration + the sampled
+        first token), decode-token appends."""
+        c = self.scfg.prefill_chunk
+        pf_rows, k = p["pf_rows"], p["k"]
+        first = p["first"]
         first_host = None
         for i, b in enumerate(pf_rows):
             s = self.slots[b]
@@ -1474,8 +1890,9 @@ class ServeEngine:
                         cfg=self.draft_cfg, acfg=self.draft_acfg)
         if k:
             self.decode_steps += k
-            self.decode_tokens_during_admission += n_dec * k
-            self._consume_decode_tokens(np.asarray(dec_toks), decode_rows)
+            self.decode_tokens_during_admission += p["n_dec"] * k
+            self._consume_decode_tokens(np.asarray(p["dec_toks"]),
+                                        p["decode_rows"])
 
     def _spec_k(self, decode_rows: list[int]) -> int:
         """Window size of the next speculative step: ``draft_k`` clipped
@@ -1513,7 +1930,7 @@ class ServeEngine:
             drafts[:len(prop), b] = prop
         return drafts
 
-    def _spec_step(self, decode_rows: list[int]) -> None:
+    def _spec_dispatch(self, decode_rows: list[int]) -> dict:
         """One draft-and-verify window over all decode slots: propose
         ``k`` tokens per row, score all ``k+1`` positions in one fused
         target dispatch, emit each row's accepted prefix plus the bonus
@@ -1522,9 +1939,13 @@ class ServeEngine:
         tokens and budgets retire requests mid-window exactly as a
         decode block would (extra tokens are discarded); the pool's
         rewind-safety contract is checked live for every surviving
-        paged row."""
+        paged row. Dispatch half: opens the pool's rewind window over
+        the participating uids — releasing any of them before the
+        commit closes it is a pool-level error (cancel-vs-rewind
+        ordering contract)."""
         if self._dirty:
             self._refresh_device_state()
+        self._chaos("dispatch")
         k = self._spec_k(decode_rows)
         use_top_k, use_top_p = self._sample_flags()
         if self._draft_host:
@@ -1545,7 +1966,21 @@ class ServeEngine:
                 use_top_p=use_top_p, k=k, paged=self._paged,
                 snaps=self._snaps)
         self._stash(toks, off, counts)
-        target, n_emit = np.asarray(target), np.asarray(n_emit)
+        if self.pool is not None:
+            self.pool.begin_window(self.slots[b].req.uid
+                                   for b in decode_rows)
+        return dict(op="spec", target=target, n_emit=n_emit,
+                    decode_rows=decode_rows, k=k)
+
+    def _spec_commit(self, p: dict) -> None:
+        """Commit half of the speculative window: force the readback
+        (cursors are final), close the pool's rewind window, then append
+        each row's emitted tokens and check the rewind-safety
+        contract."""
+        decode_rows, k = p["decode_rows"], p["k"]
+        target, n_emit = np.asarray(p["target"]), np.asarray(p["n_emit"])
+        if self.pool is not None:
+            self.pool.end_window()
         if k:                     # a k=0 window is just a decode step
             self.spec_steps += 1
         self.decode_steps += 1
@@ -1565,12 +2000,14 @@ class ServeEngine:
                 self.pool.check_rewind(uid, int(self._pos[b]))
         self.step_token_log.append((emitted, 0))
 
-    def _decode_step(self, decode_rows: list[int]) -> None:
+    def _decode_dispatch(self, decode_rows: list[int]) -> dict:
         """One multi-step decode block over all slots (no admissions in
         flight): the largest power-of-two ``k <= decode_block`` that no
-        in-flight budget can overshoot, in a single dispatch."""
+        in-flight budget can overshoot, in a single dispatch. Dispatch
+        half: returns the pending record, device work in flight."""
         if self._dirty:
             self._refresh_device_state()
+        self._chaos("dispatch")
         live = [self.slots[b] for b in decode_rows]
         k = 1
         remaining = min(s.req.max_new - s.count for s in live)
@@ -1584,7 +2021,14 @@ class ServeEngine:
         self._stash(toks, off, counts)
         self.decode_steps += k
         self.step_token_log.append((len(decode_rows) * k, 0))
-        self._consume_decode_tokens(np.asarray(dec_toks), decode_rows)
+        return dict(op="decode", dec_toks=dec_toks,
+                    decode_rows=decode_rows)
+
+    def _decode_commit(self, p: dict) -> None:
+        """Commit half of the decode block: read the sampled tokens back
+        and append them to their requests."""
+        self._consume_decode_tokens(np.asarray(p["dec_toks"]),
+                                    p["decode_rows"])
 
     def _consume_decode_tokens(self, toks: np.ndarray,
                                decode_rows: list[int]) -> None:
@@ -1598,29 +2042,17 @@ class ServeEngine:
                     self._append_token(b, int(toks[i, b]))
 
     def _append_token(self, b: int, tok: int) -> None:
-        """Record one sampled token; finish the request on stop/budget."""
+        """Record one sampled token (stream event + TTFT timestamp on
+        the first); finish the request on stop/budget via the shared
+        retirement path."""
         slot = self.slots[b]
+        uid = slot.req.uid
         slot.out.append(tok)
         slot.count += 1
         self._last_tok[b] = tok
+        if slot.count == 1:
+            self.first_token_at[uid] = time.perf_counter()
+            self.status[uid] = "decode"
+        self.events.append(("token", uid, tok))
         if tok in slot.req.stop_tokens or slot.count >= slot.req.max_new:
-            self.results[slot.req.uid] = np.array(slot.out, np.int32)
-            self.finished_at[slot.req.uid] = time.perf_counter()
-            self.slots[b] = None
-            self._dirty = True
-            if self.pool is not None:
-                # Drop the request's block references (indexed zero-ref
-                # blocks are retained in the pool's LRU for prefix reuse,
-                # the rest return to the free list) and point the slot's
-                # block tables at the reserved sink block: the retired
-                # row keeps executing its static-shape scatter-writes in
-                # subsequent decode blocks, and those must not land in
-                # blocks the allocator may hand to the next admission —
-                # or in retained cache blocks.
-                self.pool.release(slot.req.uid)
-                zrow = jnp.zeros(self.caches_tbl_width, jnp.int32)
-                self.caches = _admit_jit(
-                    self.caches, jnp.int32(b), jnp.int32(0), jnp.int32(0),
-                    zrow, zrow, jnp.int32(0), jnp.int32(0), jnp.int32(0),
-                    cfg=self.cfg, paged=self._paged,
-                    kv_bits=self.acfg.kv_bits, snaps=self._snaps)
+            self._retire_slot(b, "finished")

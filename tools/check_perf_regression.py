@@ -55,6 +55,16 @@ regressed by more than ``--threshold`` (default 15%):
   recalibrated arm's first-token match at the worst-aged point must be
   >= ``--drift-floor`` (default 0.7) and ``recal_recovers`` must hold
   (recal arm >= no-recal arm on both agreement metrics);
+* open-loop lifecycle invariants (when the fresh run carries the
+  ``open_loop`` section): the QPS sweep must include its saturation
+  summary with a nonzero ``max_sustainable_qps`` (the engine sustains at
+  least its base rate), every row must satisfy **no-silent-drop**
+  (``finished + shed + timed_out + cancelled + errored == submitted`` —
+  every arrival reached an explicit terminal), the overload row must
+  report nonzero shedding against its bounded admission queue (load is
+  rejected explicitly, not absorbed into unbounded latency), and the
+  base-rate (0.5x capacity) row's goodput-under-SLO ratio must be >=
+  ``--slo-floor`` (default 0.5);
 * with ``--attn BENCH_attn.json``, the paged-attention microbench
   invariants too: paged decode cost must scale with live tokens and beat
   full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
@@ -89,7 +99,8 @@ def check(baseline: dict, fresh: dict, threshold: float,
           prefix_floor: float = 1.3,
           prefix_hybrid_floor: float = 1.1,
           spec_floor: float = 1.0,
-          drift_floor: float = 0.7) -> list[str]:
+          drift_floor: float = 0.7,
+          slo_floor: float = 0.5) -> list[str]:
     """Return a list of failure strings (empty = pass)."""
     fails = []
     metrics = {"speedup_tokens_per_s": threshold,
@@ -216,6 +227,41 @@ def check(baseline: dict, fresh: dict, threshold: float,
             fails.append(f"recalibration failed to recover serving "
                          f"agreement over the no-recal arm "
                          f"(recal={rc}, no_recal={nr})")
+    ol = _get(fresh, "open_loop")
+    if ol is not None:
+        rows = ol.get("rows", [])
+        base_row = rows[0] if rows else None
+        print(f"[perf] open_loop: capacity={ol.get('capacity_qps')}qps "
+              f"max_sustainable={ol.get('max_sustainable_qps')}qps "
+              f"rows={len(rows)}")
+        if "max_sustainable_qps" not in ol or not rows:
+            fails.append("open_loop section missing its saturation "
+                         "summary (max_sustainable_qps) or sweep rows")
+        elif ol["max_sustainable_qps"] <= 0:
+            fails.append("open_loop saturation row reports no "
+                         "sustainable rate: even the base-rate row shed "
+                         "or missed goodput (engine can't keep up with "
+                         "0.5x its own measured capacity)")
+        for r in rows:
+            if not r.get("no_silent_drop"):
+                fails.append(f"open_loop row {r.get('offered_x_capacity')}"
+                             f"x dropped arrivals silently: outcomes "
+                             f"{r.get('outcomes')} don't account for "
+                             f"{r.get('submitted')} submitted")
+        over = [r for r in rows if r.get("overload")]
+        if over and all(r.get("shed", 0) == 0 for r in over):
+            fails.append("overload row shed nothing against its bounded "
+                         "queue — admission control is not engaging "
+                         "(or the row no longer overloads the engine)")
+        if base_row is not None:
+            g = base_row.get("goodput_ratio", 0.0)
+            print(f"[perf] open_loop.base_goodput_ratio: {g} "
+                  f"(floor {slo_floor})")
+            if g < slo_floor:
+                fails.append(f"goodput under SLO at 0.5x capacity is {g}"
+                             f", below the {slo_floor} floor (requests "
+                             f"arriving at half the engine's measured "
+                             f"capacity should mostly finish in time)")
     fp = _get(fresh, "prefix_family_parity")
     if fp is not None:
         print(f"[perf] prefix_family_parity: {fp}")
@@ -282,6 +328,9 @@ def main() -> int:
                     help="min first-token match rate (vs the pristine "
                          "engine) of the recalibrated arm at the "
                          "worst-aged point of the drift serve run")
+    ap.add_argument("--slo-floor", type=float, default=0.5,
+                    help="min goodput-under-SLO ratio of the open-loop "
+                         "sweep's base-rate (0.5x capacity) row")
     ap.add_argument("--attn", default=None,
                     help="fresh BENCH_attn.json to gate the paged "
                          "attention invariants on")
@@ -299,7 +348,7 @@ def main() -> int:
     fails = check(baseline, fresh, args.threshold, args.abs_threshold,
                   args.paged_floor, args.prefix_floor,
                   args.prefix_hybrid_floor, args.spec_floor,
-                  args.drift_floor)
+                  args.drift_floor, args.slo_floor)
     if args.attn:
         with open(args.attn) as f:
             fails += check_attn(json.load(f), args.attn_floor,
