@@ -70,6 +70,14 @@ and the ``max_sustainable_qps`` saturation summary. CI gates the
 no-silent-drop invariant, nonzero shedding under overload, saturation
 row presence, and the base-rate goodput ratio (``--slo-floor``).
 
+The ``tensor_parallel`` section (docs/distributed.md) serves a greedy
+workload at tp=1 vs tp=2 over 8 forced host devices (subprocess): both
+tokens/s rows, the ratio (CI-gated >= ``--tp-floor`` — host devices are
+threads, so this is a no-pathology floor, not a speedup claim), the
+bitwise tp parity flag (hard invariant), and ``bytes_per_device`` rows
+showing the big configs (dbrx-132b / jamba-v0.1-52b / qwen2.5-32b) going
+from does-not-fit at tp=1 to fitting per device under sharding.
+
 Both paths run once untimed (to compile every executable) and once timed.
 Emits ``BENCH_serve.json`` with useful-token throughput and p50/p99 request
 latency for both engines, the speedup, and the result of the scheduler's
@@ -754,6 +762,121 @@ def open_loop_bench(params, cfg, acfg, reqs, num_slots,
     }
 
 
+_TP_PROG = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax
+from repro.configs.base import ArchConfig
+from repro.core.analog import AnalogConfig
+from repro.models import build
+from repro.serve.scheduler import Request, SchedulerConfig, ServeEngine
+
+d_model, num_layers = {d_model}, {num_layers}
+cfg = ArchConfig(name="serve-bench", family="dense", num_layers=num_layers,
+                 d_model=d_model, num_heads=8, num_kv_heads=4,
+                 d_ff=4 * d_model, vocab_size=2048, d_head=40,
+                 norm="rmsnorm", act="silu")
+cfg, params, labels = build(cfg, jax.random.PRNGKey(0))
+
+def mk(base):
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range({nreq}):
+        plen = int(rng.integers(4, 17))
+        reqs.append(Request(
+            uid=base + i,
+            prompt=rng.integers(0, 2048, plen).astype(np.int32),
+            max_new=16, temperature=0.0, seed=i))
+    return reqs
+
+def serve(tp):
+    scfg = SchedulerConfig(num_slots=8, max_len=48, prefill_chunk=16,
+                           paged=True, tp=tp)
+    eng = ServeEngine(params, cfg, AnalogConfig(mode="off"), scfg)
+    eng.run(mk(1000))                        # untimed: compiles the mesh
+    t0 = time.perf_counter()
+    out = eng.run(mk(0))
+    wall = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    outs = {{str(k): [int(x) for x in np.asarray(v)]
+             for k, v in out.items()}}
+    return toks / wall, outs, dict(eng.gating_reasons), eng.mesh is not None
+
+r1, o1, g1, m1 = serve(1)
+r2, o2, g2, m2 = serve(2)
+print(json.dumps({{
+    "devices": len(jax.devices()), "mesh_active": m2,
+    "tp1_tokens_per_s": round(r1, 2), "tp2_tokens_per_s": round(r2, 2),
+    "tp2_vs_tp1": round(r2 / r1, 3), "tp_parity": o1 == o2,
+    "tp2_gating": g2}}))
+"""
+
+
+def _tp_bytes_rows(tp: int = 4) -> list:
+    """Bytes-per-device rows for the big configs, priced by
+    ``tools/kv_memory_table`` (exact ``eval_shape`` weights under the real
+    serve spec table + paged-int8 KV + SSM recurrent state; the table
+    ``docs/distributed.md`` embeds)."""
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "kv_memory_table.py")
+    spec = importlib.util.spec_from_file_location("kv_memory_table", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    rows = []
+    for name in mod.TP_ARCHS:
+        cfg = get_config(name)
+        total, wdev = mod.weight_bytes(cfg, tp)
+        _, _, int8 = mod.bytes_per_slot(cfg, 4096, 16)
+        ssm = mod.ssm_state_bytes(cfg)
+        kv = cfg.num_kv_heads or 1
+        slot1 = int8 + ssm
+        slot_dev = (int8 // tp if kv % tp == 0 else int8) + (
+            ssm // tp if (not ssm or cfg.ssm_heads % tp == 0) else ssm)
+        budget = 80 * 2**30
+        rows.append({
+            "arch": cfg.name, "tp": tp,
+            "weights_gib_tp1": round(total / 2**30, 1),
+            "weights_gib_per_dev": round(wdev / 2**30, 1),
+            "slot_mib_tp1": round(slot1 / 2**20, 1),
+            "slot_mib_per_dev": round(slot_dev / 2**20, 1),
+            "fits_80gib_tp1": bool(total + 8 * slot1 <= budget),
+            "fits_80gib": bool(wdev + 8 * slot_dev <= budget),
+        })
+    return rows
+
+
+def tp_bench(quick=False) -> dict:
+    """Tensor-parallel scaling row: tp=1 vs tp=2 closed-loop tokens/s on
+    8 forced host devices (subprocess — jax locks the device count at
+    init), bitwise tp parity, and the bytes-per-device fit rows.
+
+    CPU caveat: host "devices" are threads on the same cores, so tp=2
+    adds collective overhead without adding FLOPs — the gate is a
+    not-pathologically-slower floor (``--tp-floor``), not a speedup
+    claim; the fit rows carry the capacity win."""
+    import os
+    import subprocess
+    import sys
+    d_model, num_layers, nreq = (192, 4, 10) if quick else (320, 6, 16)
+    prog = _TP_PROG.format(d_model=d_model, num_layers=num_layers,
+                           nreq=nreq)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH"), "src") if p)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        rec = {"error": out.stderr[-2000:]}
+    else:
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+    rec["bytes_per_device"] = _tp_bytes_rows()
+    return rec
+
+
 def parity_check(params, cfg, acfg, num_slots, prefill_chunk) -> bool:
     """Acceptance check: a request admitted mid-batch at step k produces
     exactly the tokens it produces running solo."""
@@ -841,6 +964,7 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
                         quick=quick)
     open_loop = open_loop_bench(params, cfg, acfg, reqs, num_slots,
                                 prefill_chunk)
+    tp = tp_bench(quick=quick)
 
     result = {
         "workload": {"num_requests": num_requests, "max_prompt": max_prompt,
@@ -874,6 +998,7 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
         "speculative": spec,
         "drift": drift,
         "open_loop": open_loop,
+        "tensor_parallel": tp,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -930,6 +1055,17 @@ def run(num_requests=24, max_prompt=32, max_new=48, num_slots=8,
         f" max_sustainable={open_loop['max_sustainable_qps']}qps "
         f"no_silent_drop="
         f"{all(r['no_silent_drop'] for r in open_loop['rows'])}")
+    if "error" not in tp:
+        common.bench_row(
+            "serve.tensor_parallel", 0.0,
+            f"tp1_tok_s={tp['tp1_tokens_per_s']} "
+            f"tp2_tok_s={tp['tp2_tokens_per_s']} "
+            f"ratio={tp['tp2_vs_tp1']} parity={tp['tp_parity']} "
+            f"mesh={tp['mesh_active']} " + " ".join(
+                f"{r['arch']}=[{r['weights_gib_tp1']}GiB→"
+                f"{r['weights_gib_per_dev']}GiB/dev "
+                f"fits={r['fits_80gib_tp1']}→{r['fits_80gib']}]"
+                for r in tp["bytes_per_device"]))
     kv = result["kv_cache"]
     common.bench_row(
         "serve.claims", 0.0,

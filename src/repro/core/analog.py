@@ -453,7 +453,7 @@ def apply_noise_instances(params, labels, instances, model: str,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def pack_int4_weights(params, labels, bits: int = 4):
+def pack_int4_weights(params, labels=None, bits: int = 4):
     """Serving-side transform: precompute the packed-int4 carriers.
 
     Walks every analog linear site and attaches an ``"int4"`` sub-dict —
@@ -464,6 +464,13 @@ def pack_int4_weights(params, labels, bits: int = 4):
     these directly, so serving never re-quantizes or re-packs per call and
     decode reads weights at int4 bandwidth. Sites with odd N (unpackable)
     are left untouched and fall back to on-the-fly packing.
+
+    With ``labels=None`` the analog sites are detected structurally: a dict
+    holding both ``"kernel"`` and ``"input_range"`` is an analog linear
+    (digital linears like the MoE router carry a bare kernel and are
+    skipped). This serves pytrees whose label tree is unavailable — e.g.
+    the scheduler's layer-truncated drafter params, where slicing the
+    stacked blocks would otherwise require slicing the labels in lockstep.
 
     Stacked scan weights [L, K, N] keep their leading dims (packed arrays
     stack the same way, so ``lax.scan`` slices them per layer as usual).
@@ -488,9 +495,13 @@ def pack_int4_weights(params, labels, bits: int = 4):
     def walk(p, lab):
         if not isinstance(p, dict):
             return p
-        out = {k: walk(p[k], lab[k]) for k in p}
-        if (isinstance(lab, dict) and lab.get("kernel") == "analog_weight"
-                and p["kernel"].shape[-1] % 2 == 0):
+        out = {k: walk(p[k], lab[k] if lab is not None else None) for k in p}
+        if lab is not None:
+            is_site = (isinstance(lab, dict)
+                       and lab.get("kernel") == "analog_weight")
+        else:
+            is_site = "kernel" in p and "input_range" in p
+        if is_site and p["kernel"].shape[-1] % 2 == 0:
             out["int4"] = pack_site(p["kernel"])
         return out
 

@@ -25,6 +25,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -63,6 +64,21 @@ def default_rules(mesh: Mesh, *, batch_shardable: bool = True,
         "kv_seq": ("data",) if seq_shard_kv else None,
         "kv_seq_model": "model",
         "zero": "data",
+        # activation *outputs* at reduction boundaries (attention out
+        # before o-proj, post-activation MLP hidden before down-proj, MoE
+        # expert outputs before the combine, SSM head/conv state). Under
+        # training rules these stay sharded like their inputs ("model");
+        # serve_rules maps them to None instead, forcing an all-gather so
+        # no cross-shard reduction ever happens (the bitwise-TP contract).
+        "attn_out": "model",
+        "mlp_act": "model",
+        "moe_out": "model",
+        "ssm_heads": "model",
+        "ssm_conv": "model",
+        # serve-only gather points (after mamba in_proj, on the final
+        # logits, at mamba layer ends): disabled outright in training so
+        # those jaxprs carry no new constraints at all
+        "serve_act": "skip",
     }
     return rules
 
@@ -166,6 +182,50 @@ _PARAM_RULES = {
     ("projector", "kernel"): (None, None),
 }
 
+#: Serve-mode variant of :data:`_PARAM_RULES`, selected when the active
+#: rules carry the ``"__serve_params__"`` marker (see :func:`serve_rules`).
+#: Every matmul weight is *column-parallel* — sharded on its OUTPUT dim —
+#: so each shard computes full contractions over replicated inputs and no
+#: floating-point reduction ever spans shards; combined with the forced
+#: activation gathers of :func:`serve_rules` this makes tensor-parallel
+#: decode bitwise identical to single-device decode (docs/distributed.md).
+#: Projections back to d_model (o / down / out_proj) therefore shard on
+#: d_model rather than row-parallel + psum: a psum reassociates the FP sum
+#: and would break the bitwise gate. Everything not listed — norms, biases,
+#: router, conv/gate_norm, embedding table, int4 carriers, input ranges —
+#: falls through to P() and replicates. The embedding table is replicated
+#: deliberately: a vocab-sharded gather lowers to a masked one-hot psum
+#: with a -0.0 bitwise edge case.
+_SERVE_PARAM_RULES = {
+    ("qkv", "kernel"): (None, "heads"),
+    ("q", "kernel"): (None, "heads"),
+    ("k", "kernel"): (None, "heads"),
+    ("v", "kernel"): (None, "heads"),
+    ("o", "kernel"): (None, "heads"),        # column on d_model
+    ("gate_up", "kernel"): (None, "mlp"),
+    ("up", "kernel"): (None, "mlp"),
+    ("down", "kernel"): (None, "mlp"),       # column on d_model
+    ("M:gate_up", "kernel"): ("experts", None, None),
+    ("M:down", "kernel"): ("experts", None, None),
+    ("in_proj", "kernel"): (None, "mlp"),
+    ("out_proj", "kernel"): (None, "mlp"),   # column on d_model
+    ("lm_head", "kernel"): (None, "vocab"),
+    # per-tile device state (core.devices) shards with its owning weight:
+    # the tile-grid column dim [.., TK, TN] rides the same mesh axis as
+    # the kernel's output dim, stuck columns [.., N] likewise; MoE expert
+    # grids shard on the expert dim like their kernels
+    ("device", "gain"): (None, "mlp"),
+    ("device", "nu"): (None, "mlp"),
+    ("device", "off"): (None, "mlp"),
+    ("device", "dead"): (None, "mlp"),
+    ("device", "stuck"): ("mlp",),
+    ("M:device", "gain"): ("experts", None, None),
+    ("M:device", "nu"): ("experts", None, None),
+    ("M:device", "off"): ("experts", None, None),
+    ("M:device", "dead"): ("experts", None, None),
+    ("M:device", "stuck"): ("experts", None),
+}
+
 
 def param_spec_tree(params) -> Any:
     """PartitionSpec pytree for a model/optimizer param tree."""
@@ -186,20 +246,23 @@ def param_spec_tree(params) -> Any:
 
 def _leaf_spec(site, leaf, value, in_moe) -> P:
     """PartitionSpec for one named parameter leaf (site-based rules)."""
+    rules = _active()["rules"]
+    table = (_SERVE_PARAM_RULES if rules.get("__serve_params__")
+             else _PARAM_RULES)
     key = None
     if site is not None:
         prefixed = (f"M:{site}", leaf) if in_moe else None
-        if prefixed in _PARAM_RULES:
+        if prefixed in table:
             key = prefixed
-        elif (site, leaf) in _PARAM_RULES:
+        elif (site, leaf) in table:
             key = (site, leaf)
-    if key is None and (leaf, None) in _PARAM_RULES:
+    if key is None and (leaf, None) in table:
         key = (leaf, None)
-    if key is None and (site, None) in _PARAM_RULES:
+    if key is None and (site, None) in table:
         key = (site, None)
     if key is None:
         return P()                       # norms, scalars, input ranges
-    logical = _PARAM_RULES[key]
+    logical = table[key]
     ndim = value.ndim if hasattr(value, "ndim") else len(value.shape)
     pad = (None,) * (ndim - len(logical))
     ctx = _active()
@@ -259,12 +322,17 @@ def batch_spec_for(shape: tuple) -> P:
 
 def cache_spec_tree(caches) -> Any:
     """Decode-cache specs: KV [B, T, KV, hd] → (batch, kv_seq, heads, None);
-    SSM state [B, H, N, P] → (batch, heads, None, None); conv [B, W-1, C] →
-    (batch, None, mlp). Leading stacked-layer dims unsharded."""
+    paged pools kp/vp [.., P, bs, KV, hd] → heads on KV (their int8 scale
+    siblings ks/vs likewise); SSM state [B, H, N, P] → (batch, ssm_heads,
+    None, None); conv [B, W-1, C] → (batch, None, ssm_conv). Leading
+    stacked-layer dims unsharded; block tables / cursors / snapshot pools
+    fall through to P() (replicated — they are tiny and shard-agnostic,
+    see serve.kv_pool)."""
     ctx = _active()
     rules = ctx["rules"]
 
     mesh = ctx["mesh"]
+    hsize = _axis_size(mesh, rules.get("heads"))
 
     def leaf(path, x):
         name = str(getattr(path[-1], "key", ""))
@@ -275,16 +343,30 @@ def cache_spec_tree(caches) -> Any:
             # dim over "model" (kv=8/40 archs on a 16-way model axis — the
             # cache would otherwise replicate 16x and blow HBM). Softmax
             # over the sharded T axis lowers to cheap scalar all-reduces.
+            # (serve_rules maps kv_seq_model to None: the fallback would
+            # partial-sum the softmax and break the bitwise-TP contract.)
             kv_heads = x.shape[-2]
-            if kv_heads % _axis_size(mesh, rules.get("heads")) == 0:
+            if kv_heads % hsize == 0:
                 logical = ("batch", "kv_seq", "heads", None)
             else:
                 logical = ("batch", "kv_seq_model", None, None)
+        elif name in ("kp", "vp"):
+            # paged pool [.., pool, bs, KV, hd]: every shard holds
+            # kv_heads/tp heads of EVERY physical block, so the host-side
+            # block table / refcounts / prefix index stay shard-agnostic
+            logical = (("heads", None) if x.shape[-2] % hsize == 0
+                       else (None, None))
+        elif name in ("ks", "vs"):
+            # int8-pool scales [.., pool, bs, KV]: heads on the last dim
+            logical = (("heads",) if x.shape[-1] % hsize == 0
+                       else (None,))
         elif name == "ssm":
-            # [.., B, H, N, P] slot-major SSM state (batch leads, heads next)
-            logical = ("batch", "heads", None, None)
+            # [.., B, H, N, P] slot-major SSM state (batch leads, heads
+            # next). "ssm_heads" == "heads" under training rules; serve
+            # rules replicate it (mamba internals compute replicated)
+            logical = ("batch", "ssm_heads", None, None)
         elif name == "conv":
-            logical = ("batch", None, "mlp")
+            logical = ("batch", None, "ssm_conv")
         else:
             return P()
         pad = (None,) * (nd - len(logical))
@@ -294,3 +376,113 @@ def cache_spec_tree(caches) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
     return jax.tree_util.tree_unflatten(
         treedef, [leaf(p, x) for p, x in flat])
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel serving (ServeEngine, launch.serve --tp N)
+# ---------------------------------------------------------------------------
+# Serving shards *within* one replica: a (1, tp) mesh whose "model" axis
+# carries every weight's output dim while serve_rules forces activations
+# replicated at every reduction boundary. The resulting computation contains
+# no cross-shard floating-point reduction — all GSPMD-inserted collectives
+# are arithmetic-free data movement — so tensor-parallel greedy decode is
+# bitwise identical to single-device decode (the TP parity contract,
+# docs/distributed.md; tested in tests/test_tp_serve.py).
+
+def serve_mesh(tp: int) -> Mesh:
+    """A ``(1, tp)`` ("data", "model") mesh over the first ``tp`` devices."""
+    devs = np.asarray(jax.devices()[:tp]).reshape(1, tp)
+    return Mesh(devs, ("data", "model"))
+
+
+def serve_rules(mesh: Mesh) -> dict[str, Any]:
+    """Logical-axis rules for bitwise-parity tensor-parallel serving.
+
+    Weight axes (heads/mlp/vocab/experts) shard over "model"; every
+    activation-output axis (attn_out/mlp_act/moe_out/serve_act/ssm_*) maps
+    to None — :func:`shard_hint` then *forces* replication, inserting the
+    all-gather that keeps the next contraction local to each shard. The
+    ``"__serve_params__"`` marker switches :func:`param_spec_tree` onto
+    the column-parallel :data:`_SERVE_PARAM_RULES` table.
+    """
+    del mesh                # rules are mesh-independent; keep the signature
+    return {
+        "batch": None,
+        "seq": None,
+        "kv_seq": None,
+        "kv_seq_model": None,        # never shard cache T: softmax psum
+        "heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "moe_buf": "model",
+        "attn_out": None,
+        "mlp_act": None,
+        "moe_out": None,
+        "serve_act": None,
+        "ssm_heads": None,
+        "ssm_conv": None,
+        "embed": None,
+        "zero": None,
+        "__serve_params__": True,
+    }
+
+
+def serve_ctx(mesh: Optional[Mesh]):
+    """Context manager activating serve-mode sharding (no-op for tp=1).
+
+    The serving step jits take the mesh as a static argument and trace
+    their bodies under this context, so every :func:`shard_hint` in the
+    model resolves against :func:`serve_rules` — one executable per mesh.
+    """
+    if mesh is None:
+        return contextlib.nullcontext()
+    return activate(mesh, serve_rules(mesh))
+
+
+def shard_params_for_serve(mesh: Mesh, params):
+    """Commit a param tree to the serve mesh (column-parallel weights)."""
+    with activate(mesh, serve_rules(mesh)):
+        return jax.device_put(params, named(param_spec_tree(params)))
+
+
+def shard_caches_for_serve(mesh: Mesh, caches):
+    """Commit a cache tree to the serve mesh (per-shard KV heads)."""
+    with activate(mesh, serve_rules(mesh)):
+        return jax.device_put(caches, named(cache_spec_tree(caches)))
+
+
+def serve_tp_unsupported(cfg, acfg, tp: int) -> Optional[str]:
+    """Why ``tp``-way tensor parallelism cannot serve this config, or None.
+
+    The honest-gating seam for ``ServeEngine``: a reason string here
+    becomes ``gating_reasons["tensor_parallel"]`` and the engine falls
+    back to tp=1 — never a silent downgrade, never a wrong answer.
+    """
+    if tp <= 1:
+        return None
+    n = len(jax.devices())
+    if n < tp:
+        return (f"tp={tp} needs {tp} devices, runtime has {n} "
+                "(XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "provides host devices for CPU testing)")
+    if getattr(acfg, "use_pallas", False):
+        return ("Pallas kernels are single-device (pallas_call does not "
+                "partition under GSPMD without shard_map wiring) — serve "
+                "with use_pallas=False under tensor parallelism")
+    from repro.kernels import dispatch    # lazy: kernels never import us
+    if not dispatch.partition_safe():
+        return ("the default attention dispatch routes to pallas_call "
+                "kernels on this backend, which GSPMD cannot partition "
+                "without shard_map wiring — tensor-parallel serving runs "
+                "on the reference impls (CPU/GPU backends)")
+    if cfg.family in ("dense", "moe", "hybrid"):
+        kv = getattr(cfg, "num_kv_heads", 0) or cfg.num_heads
+        if cfg.num_heads % tp:
+            return (f"num_heads={cfg.num_heads} is not divisible by "
+                    f"tp={tp} — attention heads cannot split evenly")
+        if kv % tp:
+            return (f"num_kv_heads={kv} is not divisible by tp={tp} — "
+                    "the per-shard KV pool cannot split the head dim "
+                    "evenly")
+    return None

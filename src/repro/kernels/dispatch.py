@@ -56,6 +56,25 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def partition_safe() -> bool:
+    """True when the *default* dispatch routes may run inside a
+    GSPMD-partitioned jit (tensor-parallel serving).
+
+    Off-TPU the default attention impls are the pure ``jnp``/``lax``
+    reference paths, which the partitioner splits like any other jaxpr.
+    On TPU the defaults are ``pallas_call`` kernels — opaque to GSPMD,
+    which would fall back to replicating their operands per device —
+    so tensor-parallel serving requires ``shard_map`` wiring that does
+    not exist yet. ``distributed.sharding.serve_tp_unsupported`` gates
+    on this (the honest-gating seam): TP engines on TPU fall back to
+    tp=1 with an explicit reason rather than silently serving at
+    replicated-kernel speed. The fused/packed MVM paths are gated
+    separately via ``AnalogConfig.use_pallas``, which routes through
+    ``pallas_call`` on every backend (interpret mode off-TPU).
+    """
+    return not on_tpu()
+
+
 def use_fused(cfg) -> bool:
     """True when ``analog_linear`` should route through the fused tile op.
 

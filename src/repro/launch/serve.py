@@ -306,6 +306,14 @@ def main():
                     help="truncate the model drafter to its first N "
                          "transformer blocks (0 = full depth; layer-skip "
                          "self-speculation)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards: serve over a (1, N) "
+                         "device mesh with column-parallel weights and a "
+                         "per-shard KV-head split of the paged pool; "
+                         "greedy decode stays bitwise identical to tp=1 "
+                         "(docs/distributed.md; on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to provide the devices)")
     ap.add_argument("--cache-salt", type=int, default=0,
                     help="salt folded into every prefix-cache block key "
                          "— segregates entries whose KV would differ for "
@@ -466,7 +474,7 @@ def main():
         # open-loop modes bound the queue and survive step faults —
         # a public front door must degrade, not die
         max_queue=args.max_queue if open_loop else 0,
-        fault_tolerant=open_loop))
+        fault_tolerant=open_loop, tp=args.tp))
     # honest feature reporting: a requested-but-inert feature warns
     # loudly with the engine's recorded reason — never a silent placebo.
     # --prefix-cache defaults on, so its warning fires only when the
@@ -475,12 +483,18 @@ def main():
                  "prefix_cache": "--prefix-cache" in sys.argv,
                  "speculative": args.speculative,
                  "drift": args.drift_hours > 0,
-                 "recalibrate": args.recalibrate}
+                 "recalibrate": args.recalibrate,
+                 "tensor_parallel": args.tp > 1}
     for feat, why in eng.gating_reasons.items():
         if requested.get(feat):
-            flag = {"drift": "--drift-hours"}.get(
+            flag = {"drift": "--drift-hours",
+                    "tensor_parallel": "--tp"}.get(
                 feat, "--" + feat.replace("_", "-"))
             print(f"[serve] WARNING: {flag} requested but inactive: {why}")
+    if eng.mesh is not None:
+        print(f"[serve] tensor parallel: tp={args.tp} over "
+              f"{[d.id for d in eng.mesh.devices.flat]} "
+              f"(column-parallel weights, kv_heads/{args.tp} per shard)")
     if args.serve:
         fe = AsyncServeFrontend(eng)
 

@@ -312,7 +312,9 @@ def attention(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
             new_cache = None
 
     out = out.reshape(*x.shape[:-1], cfg.num_heads * cfg.head_dim)
-    out = shard_hint(out, "batch", "seq", "heads")
+    # "attn_out" == "heads" under training rules; serve rules replicate it
+    # here so the o-projection contracts locally on every shard (bitwise TP)
+    out = shard_hint(out, "batch", "seq", "attn_out")
     y, st_o = analog_linear(p["o"], out, acfg, ctx)
     return y, {**stats_in, "o": st_o}, new_cache
 
@@ -469,11 +471,11 @@ def mlp(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx):
         gu, st1 = analog_linear(p["gate_up"], x, acfg, ctx)
         gate, up = jnp.split(gu, 2, axis=-1)
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
-        h = shard_hint(h, "batch", "seq", "mlp")
+        h = shard_hint(h, "batch", "seq", "mlp_act")
         y, st2 = analog_linear(p["down"], h, acfg, ctx)
         return y, {"gate_up": st1, "down": st2}
     h, st1 = analog_linear(p["up"], x, acfg, ctx)
     h = shard_hint(jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype),
-                   "batch", "seq", "mlp")
+                   "batch", "seq", "mlp_act")
     y, st2 = analog_linear(p["down"], h, acfg, ctx)
     return y, {"up": st1, "down": st2}

@@ -104,6 +104,11 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     g, n = cfg.ssm_groups, cfg.ssm_state
 
     zxbcdt, st_in = analog_linear(p["in_proj"], x, acfg, ctx)
+    # serve-only gather ("skip" in training): under tensor parallelism the
+    # in_proj output is collected here and every mamba internal (conv, SSD
+    # recurrence, gated norm — all digital, reduction-heavy, and tiny next
+    # to the projections) computes replicated, keeping TP bitwise
+    zxbcdt = shard_hint(zxbcdt, "batch", "seq", "serve_act")
     z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
 
     if seq_mask is not None:
@@ -119,7 +124,7 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
         dt = dt * seq_mask[..., None].astype(dt.dtype)
     a = -jnp.exp(p["a_log"])                                      # [H]
     xh = shard_hint(xs.reshape(bsz, s, heads, pdim),
-                    "batch", "seq", "heads", None)
+                    "batch", "seq", "ssm_heads", None)
     bg = b.reshape(bsz, s, g, n)
     cg = c.reshape(bsz, s, g, n)
 
@@ -163,7 +168,7 @@ def mamba(p: dict, x: jax.Array, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
     y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(bsz, s, d_inner).astype(x.dtype)
     y = shard_hint(_gated_rmsnorm(y, z, p["gate_norm"]),
-                   "batch", "seq", "mlp")
+                   "batch", "seq", "mlp_act")
     out, st_out = analog_linear(p["out_proj"], y, acfg, ctx)
     return out, {"in_proj": st_in, "out_proj": st_out}, new_cache
 

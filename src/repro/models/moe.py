@@ -104,7 +104,10 @@ def _route_one_sequence(x, p, cfg, acfg, ctx, capacity):
 
     y_buf, (st1, st2) = jax.vmap(expert_fwd)(
         p["gate_up"]["kernel"], p["down"]["kernel"], buf_in)
-    y_buf = shard_hint(y_buf, "moe_buf", None, None)
+    # "moe_out" == "moe_buf" under training rules; serve rules replicate
+    # the expert outputs here so the combine below (gather + scatter +
+    # weighted sum over k, in expert order) runs locally on every shard
+    y_buf = shard_hint(y_buf, "moe_out", None, None)
 
     # ---- combine ------------------------------------------------------------
     y_buf = jnp.pad(y_buf, ((0, 0), (0, 1), (0, 0)))             # drop slot = 0

@@ -122,6 +122,10 @@ def apply_mamba_layer(p, x, cfg, acfg, ctx, cache, ffn_kind: str,
                              cfg, acfg, ctx, ffn_kind)
         x = x + h
         stats["ffn"] = st_f
+    # serve-only gather ("skip" in training), mirroring the attn layer's
+    # "embed" hint: out_proj's column-parallel output must be whole before
+    # the next layer's norm reduces over d_model (bitwise-TP contract)
+    x = shard_hint(x, "batch", "seq", "serve_act")
     return x, stats, new_cache
 
 
@@ -402,6 +406,10 @@ def apply_lm_head(params, cfg, acfg: AnalogConfig, ctx: AnalogCtx,
         logits, st = analog_linear(params["lm_head"], x, acfg, ctx)
         stats["lm_head"] = st
         logits = logits[..., :cfg.vocab_size]
+    # serve-only gather ("skip" in training; no-op on audio's 4-D logits):
+    # a vocab-sharded lm_head output is collected before sampling so the
+    # softmax/top-k reductions run locally on every shard (bitwise TP)
+    logits = shard_hint(logits, "batch", "seq", "serve_act")
     return logits.astype(jnp.float32), stats
 
 

@@ -71,6 +71,17 @@ the window, and the async frontend only issues cancels at step
 boundaries. The window is bracketing metadata only: it never changes
 what ``release`` frees, just *when* it is legal to call.
 
+**Shard-agnostic under tensor parallelism** (PR 10). The allocator,
+refcounts, radix index, LRU and snapshot pools are *physical-block-id*
+bookkeeping and never inspect KV content — so when the engine serves
+tensor-parallel (``SchedulerConfig.tp > 1``) nothing here changes:
+the pool's device arrays shard on their ``kv_heads`` dim (every shard
+holds ``kv_heads/tp`` heads of **every** physical block —
+``distributed.sharding.cache_spec_tree``), which keeps one global block
+id space. A block-table row, refcount, chain key or snapshot slot id
+means the same thing on every shard, and admission/retirement/COW run
+exactly once per request regardless of ``tp``.
+
 Pure host-side Python (deque + dicts); the device only ever sees the
 block-table rows / snapshot slot ids this hands out and the COW copy
 pairs.

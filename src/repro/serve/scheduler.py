@@ -148,10 +148,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import devices as devices_lib
-from repro.core.analog import AnalogConfig, AnalogCtx
+from repro.core.analog import AnalogConfig, AnalogCtx, pack_int4_weights
+from repro.distributed import sharding
 from repro.models import apply as model_apply
 from repro.models import transformer as T
-from repro.serve.decode import serve_step
+from repro.serve.decode import digital_int4_config, serve_step
 from repro.serve.kv_pool import SINK_BLOCK, KVPool, StateSnapshotPool
 from repro.serve.sampling import sample_logits_batched, speculative_verify
 
@@ -294,6 +295,20 @@ class SchedulerConfig:
     ``drift_hours``, ``recal_count``, ``tile_scale_err``,
     ``dead_tiles`` / ``stuck_cols``.
 
+    ``tp > 1`` serves tensor-parallel over a ``(1, tp)`` device mesh
+    (``distributed.sharding.serve_mesh``): every weight shards
+    column-parallel on its output dim, the paged KV pool splits its
+    ``kv_heads`` across shards (each shard holds ``kv_heads/tp`` heads
+    of *every* physical block, so the host-side allocator, block tables,
+    prefix index and snapshot pools stay shard-agnostic), and the step
+    jits trace under :func:`distributed.sharding.serve_ctx` — activation
+    gathers at every reduction boundary keep each contraction local to
+    one shard, making tensor-parallel greedy decode **bitwise
+    identical** to single-device decode (the TP parity contract,
+    ``docs/distributed.md``). Configs that cannot shard (heads not
+    divisible by ``tp``, Pallas-fused serving, too few devices) fall
+    back to tp=1 with ``gating_reasons["tensor_parallel"]``.
+
     ``max_queue`` bounds the admission queue (0 = unbounded, the
     closed-loop default): ``try_submit`` *sheds* a request arriving at a
     full queue with an explicit reason instead of queueing it into a
@@ -334,6 +349,7 @@ class SchedulerConfig:
     recal_threshold: float = 0.1
     max_queue: int = 0
     fault_tolerant: bool = False
+    tp: int = 1
 
 
 class _Slot:
@@ -520,22 +536,28 @@ def _decode_scan(params, caches, toks, off, active, keys, counts, temp,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
-                                             "use_top_p", "k"),
+                                             "use_top_p", "k", "mesh"),
                    donate_argnums=_donate(1))
 def _step_jit(params, caches, toks, off, active, keys, counts, temp, topk,
-              topp, gfirst, *, cfg, acfg, use_top_k, use_top_p, k):
+              topp, gfirst, *, cfg, acfg, use_top_k, use_top_p, k,
+              mesh=None):
     """Pure-decode engine step: one dispatch per ``k``-step decode block,
     amortizing dispatch exactly like the static ``generate`` scan does —
     while slots still recycle at block boundaries. Specialized per
     (use_top_k, use_top_p) so the full-vocab sorts drop out of the step
     when no in-flight request filters (see ``sampling`` module), and per
-    block length ``k`` (powers of two). Returns the updated device-resident
-    step state alongside the sampled tokens: (tokens [k, B], last toks,
-    off, counts, caches).
+    block length ``k`` (powers of two). ``mesh`` (static, hashable) is
+    the engine's tensor-parallel serve mesh: the body traces under
+    ``sharding.serve_ctx`` so every model ``shard_hint`` resolves to the
+    bitwise-parity serve rules — one executable per mesh, and tp=1
+    engines (``mesh=None``) keep their unconstrained jaxprs. Returns the
+    updated device-resident step state alongside the sampled tokens:
+    (tokens [k, B], last toks, off, counts, caches).
     """
-    return _decode_scan(params, caches, toks, off, active, keys, counts,
-                        temp, topk, topp, gfirst, cfg, acfg, use_top_k,
-                        use_top_p, k)
+    with sharding.serve_ctx(mesh):
+        return _decode_scan(params, caches, toks, off, active, keys,
+                            counts, temp, topk, topp, gfirst, cfg, acfg,
+                            use_top_k, use_top_p, k)
 
 
 def _gather_rows(caches, idx, axes):
@@ -561,12 +583,12 @@ def _scatter_rows(caches, sub, idx, axes):
 
 @functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
                                              "use_top_p", "k", "paged",
-                                             "snaps"),
+                                             "snaps", "mesh"),
                    donate_argnums=_donate(1))
 def _mixed_step_jit(params, caches, toks, off, active, keys, counts, temp,
                     topk, topp, gfirst, pf_idx, pf_toks, pf_mask, pf_off, *,
                     cfg, acfg, use_top_k, use_top_p, k, paged,
-                    snaps=False):
+                    snaps=False, mesh=None):
     """Fused mixed prefill/decode step: one dispatch advances the decode
     slots *and* a compact batched prefill chunk of the admitting slots.
 
@@ -591,24 +613,25 @@ def _mixed_step_jit(params, caches, toks, off, active, keys, counts, temp,
     Returns (decode tokens [k, B], first-token samples [prefill_batch],
     last toks, off, counts, caches).
     """
-    dec_out, toks, off, counts, caches = _decode_scan(
-        params, caches, toks, off, active, keys, counts, temp, topk, topp,
-        gfirst, cfg, acfg, use_top_k, use_top_p, k)
+    with sharding.serve_ctx(mesh):
+        dec_out, toks, off, counts, caches = _decode_scan(
+            params, caches, toks, off, active, keys, counts, temp, topk,
+            topp, gfirst, cfg, acfg, use_top_k, use_top_p, k)
 
-    axes, _ = T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits,
-                                state_snaps=snaps)
-    sub = _gather_rows(caches, pf_idx, axes)
-    ctx = AnalogCtx(key=None, training=False)
-    logits, _, sub = model_apply(params, cfg, acfg, ctx,
-                                 {"tokens": pf_toks}, caches=sub,
-                                 pos_offset=pf_off[:, None],
-                                 seq_mask=pf_mask, last_only=True)
-    caches = _scatter_rows(caches, sub, pf_idx, axes)
-    first = _sample_tokens(logits[:, -1], keys[pf_idx],
-                           jnp.zeros_like(pf_idx), temp[pf_idx],
-                           topk[pf_idx], topp[pf_idx], gfirst[pf_idx],
-                           use_top_k, use_top_p)
-    return dec_out, first, toks, off, counts, caches
+        axes, _ = T.cache_slot_spec(cfg, paged=paged, kv_bits=acfg.kv_bits,
+                                    state_snaps=snaps)
+        sub = _gather_rows(caches, pf_idx, axes)
+        ctx = AnalogCtx(key=None, training=False)
+        logits, _, sub = model_apply(params, cfg, acfg, ctx,
+                                     {"tokens": pf_toks}, caches=sub,
+                                     pos_offset=pf_off[:, None],
+                                     seq_mask=pf_mask, last_only=True)
+        caches = _scatter_rows(caches, sub, pf_idx, axes)
+        first = _sample_tokens(logits[:, -1], keys[pf_idx],
+                               jnp.zeros_like(pf_idx), temp[pf_idx],
+                               topk[pf_idx], topp[pf_idx], gfirst[pf_idx],
+                               use_top_k, use_top_p)
+        return dec_out, first, toks, off, counts, caches
 
 
 def _rewind_pos(caches, delta, cfg, paged, kv_bits, snaps):
@@ -678,12 +701,12 @@ def _verify_and_commit(params, caches, toks, drafts, off, active, keys,
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "acfg", "dcfg", "dacfg",
                                     "use_top_k", "use_top_p", "k", "paged",
-                                    "snaps"),
+                                    "snaps", "mesh"),
                    donate_argnums=_donate(2, 3))
 def _spec_step_jit(params, draft_params, caches, draft_caches, toks, off,
                    active, keys, counts, temp, topk, topp, gfirst, *, cfg,
                    acfg, dcfg, dacfg, use_top_k, use_top_p, k, paged,
-                   snaps=False):
+                   snaps=False, mesh=None):
     """Model-drafter speculative step: ``k+1`` drafter decode steps in a
     ``lax.scan`` (on the drafter's private contiguous slot cache), then
     the fused verify window — one dispatch per engine step.
@@ -709,21 +732,26 @@ def _spec_step_jit(params, draft_params, caches, draft_caches, toks, off,
                              gfirst, use_top_k, use_top_p)
         return (new, dcaches), new
 
-    (_, draft_caches), drafts = jax.lax.scan(
-        body, (toks, draft_caches), jnp.arange(k + 1, dtype=jnp.int32))
-    target, n_emit, delta, toks, off, counts, caches = _verify_and_commit(
-        params, caches, toks, drafts[:k], off, active, keys, counts, temp,
-        topk, topp, gfirst, cfg, acfg, use_top_k, use_top_p, paged, snaps)
-    draft_caches = _rewind_pos(draft_caches, delta, dcfg, False, 0, False)
-    return target, n_emit, toks, off, counts, caches, draft_caches
+    with sharding.serve_ctx(mesh):
+        (_, draft_caches), drafts = jax.lax.scan(
+            body, (toks, draft_caches), jnp.arange(k + 1, dtype=jnp.int32))
+        target, n_emit, delta, toks, off, counts, caches = (
+            _verify_and_commit(
+                params, caches, toks, drafts[:k], off, active, keys,
+                counts, temp, topk, topp, gfirst, cfg, acfg, use_top_k,
+                use_top_p, paged, snaps))
+        draft_caches = _rewind_pos(draft_caches, delta, dcfg, False, 0,
+                                   False)
+        return target, n_emit, toks, off, counts, caches, draft_caches
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "acfg", "use_top_k",
-                                             "use_top_p", "paged", "snaps"),
+                                             "use_top_p", "paged", "snaps",
+                                             "mesh"),
                    donate_argnums=_donate(1))
 def _spec_verify_jit(params, caches, toks, off, active, keys, counts, temp,
                      topk, topp, gfirst, drafts, *, cfg, acfg, use_top_k,
-                     use_top_p, paged, snaps=False):
+                     use_top_p, paged, snaps=False, mesh=None):
     """Host-drafter speculative step: verify externally proposed drafts
     ``[k, B]`` (prompt-lookup n-grams, or a test-injected ``draft_fn``).
     No draft model, no draft cache — proposals cost nothing on device
@@ -731,32 +759,36 @@ def _spec_verify_jit(params, caches, toks, off, active, keys, counts, temp,
     verification keeps the bitwise-parity guarantee for *any* proposal
     source: a draft either equals the token the non-speculative loop
     would have drawn or is rejected."""
-    target, n_emit, _, toks, off, counts, caches = _verify_and_commit(
-        params, caches, toks, drafts, off, active, keys, counts, temp,
-        topk, topp, gfirst, cfg, acfg, use_top_k, use_top_p, paged, snaps)
-    return target, n_emit, toks, off, counts, caches
+    with sharding.serve_ctx(mesh):
+        target, n_emit, _, toks, off, counts, caches = _verify_and_commit(
+            params, caches, toks, drafts, off, active, keys, counts, temp,
+            topk, topp, gfirst, cfg, acfg, use_top_k, use_top_p, paged,
+            snaps)
+        return target, n_emit, toks, off, counts, caches
 
 
-@functools.partial(jax.jit, static_argnames=("dcfg", "dacfg"),
+@functools.partial(jax.jit, static_argnames=("dcfg", "dacfg", "mesh"),
                    donate_argnums=_donate(1))
 def _draft_step_jit(draft_params, draft_caches, toks, off, active, *,
-                    dcfg, dacfg):
+                    dcfg, dacfg, mesh=None):
     """Advance the model drafter's cache by the one decode token a mixed
     step consumed (logits discarded). Mixed admission steps decode
     non-speculatively, so without this catch-up the draft cache would
     silently fall behind the target across every admission window —
     drafts would still verify safely (exact-match), but acceptance would
     collapse for the rest of each affected request."""
-    _, draft_caches = serve_step(draft_params, dcfg, dacfg, toks[:, None],
-                                 draft_caches, off[:, None],
-                                 seq_mask=active[:, None])
-    return draft_caches
+    with sharding.serve_ctx(mesh):
+        _, draft_caches = serve_step(draft_params, dcfg, dacfg,
+                                     toks[:, None], draft_caches,
+                                     off[:, None],
+                                     seq_mask=active[:, None])
+        return draft_caches
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "acfg"),
+@functools.partial(jax.jit, static_argnames=("cfg", "acfg", "mesh"),
                    donate_argnums=_donate(1))
 def _draft_prefill_jit(params, caches, slot, toks, mask, npad, *, cfg,
-                       acfg):
+                       acfg, mesh=None):
     """Reset draft-cache slot ``slot`` and prefill the full padded prompt
     ``toks [1, padded]`` in one dispatch (at the prefill→decode flip).
 
@@ -781,15 +813,16 @@ def _draft_prefill_jit(params, caches, slot, toks, mask, npad, *, cfg,
                 out[name] = reset(c[name], ax[name], kind[name])
         return out
 
-    caches = rec(caches, axes, kinds)
-    idx = slot[None]
-    sub = _gather_rows(caches, idx, axes)
-    ctx = AnalogCtx(key=None, training=False)
-    _, _, sub = model_apply(params, cfg, acfg, ctx, {"tokens": toks},
-                            caches=sub,
-                            pos_offset=jnp.reshape(-npad, (1, 1)),
-                            seq_mask=mask, last_only=True)
-    return _scatter_rows(caches, sub, idx, axes)
+    with sharding.serve_ctx(mesh):
+        caches = rec(caches, axes, kinds)
+        idx = slot[None]
+        sub = _gather_rows(caches, idx, axes)
+        ctx = AnalogCtx(key=None, training=False)
+        _, _, sub = model_apply(params, cfg, acfg, ctx, {"tokens": toks},
+                                caches=sub,
+                                pos_offset=jnp.reshape(-npad, (1, 1)),
+                                seq_mask=mask, last_only=True)
+        return _scatter_rows(caches, sub, idx, axes)
 
 
 def _ngram_propose(ctx: np.ndarray, k: int, max_n: int = 3) -> np.ndarray:
@@ -866,6 +899,17 @@ class ServeEngine:
         # this family/config combination is recorded with its reason,
         # never silently downgraded (``launch.serve`` prints these)
         self.gating_reasons: dict[str, str] = {}
+        # tensor-parallel serving: a (1, tp) mesh every step jit traces
+        # against (static arg) with the bitwise-parity serve rules —
+        # sharding.serve_ctx. Resolved before drafter construction so
+        # the drafter can gate its packed-int4 path on it.
+        self.mesh = None
+        if scfg.tp > 1:
+            reason = sharding.serve_tp_unsupported(cfg, acfg, scfg.tp)
+            if reason is not None:
+                self.gating_reasons["tensor_parallel"] = reason
+            else:
+                self.mesh = sharding.serve_mesh(scfg.tp)
         if scfg.paged and not paged:
             self.gating_reasons["paged"] = (
                 "attention-free ssm stacks have no KV to page (per-slot "
@@ -928,13 +972,30 @@ class ServeEngine:
                 dcfg = dataclasses.replace(
                     cfg, num_layers=min(scfg.draft_layers, cfg.num_layers))
             dacfg = draft_acfg
+            pack_draft = False
             if dacfg is None:
                 if scfg.draft == "self" or acfg.int4_serve:
                     dacfg = acfg      # int4-served target: drafter == it
-                else:
+                elif self.mesh is None:
                     # the digital int4 deployment of the same weights
-                    # (decode.digital_int4_config numerics), unfused so
-                    # no packed carriers are needed
+                    # (decode.digital_int4_config numerics) served from
+                    # the packed kernel: the carriers are precomputed
+                    # once below, so the k-step draft scan reads weights
+                    # at int4 bandwidth instead of quantizing+packing
+                    # every projection every step
+                    dacfg = digital_int4_config(
+                        dataclasses.replace(acfg, weight_bits=4))
+                    pack_draft = True
+                else:
+                    # the packed kernel is a pallas_call — single-device
+                    # under GSPMD — so the tensor-parallel drafter keeps
+                    # the unfused RTN-W4 path (identical numerics, the
+                    # weights just read at full precision)
+                    self.gating_reasons["draft_packed_int4"] = (
+                        "the packed-int4 draft kernel does not partition "
+                        "under tensor parallelism (pallas_call without "
+                        "shard_map wiring) — drafting runs the unfused "
+                        "rtn-w4 path instead")
                     dacfg = dataclasses.replace(acfg, mode="rtn",
                                                 weight_bits=4)
             # the drafter cache is contiguous per-slot — never paged
@@ -947,11 +1008,33 @@ class ServeEngine:
                     dparams = dict(params)
                     dparams["blocks"] = jax.tree.map(
                         lambda t: t[:dcfg.num_layers], params["blocks"])
+            if pack_draft:
+                # precompute the packed-int4 carriers ONCE, after the
+                # layer-skip slice (structural walk — the sliced tree has
+                # no label pytree); tests gate this with a bitwise
+                # packed-vs-unpacked drafter-parity assertion
+                dparams = pack_int4_weights(dparams)
             self.draft_params, self.draft_cfg = dparams, dcfg
             self.draft_acfg = dacfg
             self.draft_caches = T.init_caches(dcfg, b, scfg.max_len,
                                               scfg.cache_dtype,
                                               per_slot=True)
+        # commit params and caches to the serve mesh: column-parallel
+        # weights, per-shard KV heads (every shard holds kv_heads/tp
+        # heads of every pool block — the host-side allocator, block
+        # tables and prefix index stay shard-agnostic). The drafter's
+        # params/caches shard with the same rules.
+        if self.mesh is not None:
+            self.params = sharding.shard_params_for_serve(self.mesh,
+                                                          self.params)
+            self.caches = sharding.shard_caches_for_serve(self.mesh,
+                                                          self.caches)
+            if self.draft_params is not None:
+                self.draft_params = sharding.shard_params_for_serve(
+                    self.mesh, self.draft_params)
+            if self.draft_caches is not None:
+                self.draft_caches = sharding.shard_caches_for_serve(
+                    self.mesh, self.draft_caches)
         # conductance-drift deployment clock + recalibration watchdog
         # (core.devices): both need per-tile device state on the params —
         # a drift clock over pristine digital weights would age nothing
@@ -1425,6 +1508,14 @@ class ServeEngine:
             self.draft_caches = T.init_caches(
                 self.draft_cfg, scfg.num_slots, scfg.max_len,
                 scfg.cache_dtype, per_slot=True)
+        if self.mesh is not None:
+            # the rebuilt caches are fresh single-device arrays — commit
+            # them back to the serve mesh before the next sharded step
+            self.caches = sharding.shard_caches_for_serve(self.mesh,
+                                                          self.caches)
+            if self.draft_caches is not None:
+                self.draft_caches = sharding.shard_caches_for_serve(
+                    self.mesh, self.draft_caches)
         self._pos[:] = 0
         self._start[:] = 0
         self._last_tok[:] = 0
@@ -1478,6 +1569,12 @@ class ServeEngine:
             t0 = time.perf_counter()
             key = jax.random.fold_in(self._recal_key, self.recal_count)
             self.params = devices_lib.recalibrate(self.params, key)
+            if self.mesh is not None:
+                # recalibration programs fresh gain/offset leaves on the
+                # host device — re-commit them to the serve mesh so the
+                # per-tile state keeps sharding with its owning weight
+                self.params = sharding.shard_params_for_serve(self.mesh,
+                                                              self.params)
             self.recal_count += 1
             h = devices_lib.health(self.params)
             self.tile_scale_err = h["mean_scale_err"]
@@ -1829,7 +1926,8 @@ class ServeEngine:
             d = self._dev
             self.draft_caches = _draft_step_jit(
                 self.draft_params, self.draft_caches, d["toks"], d["off"],
-                d["active"], dcfg=self.draft_cfg, dacfg=self.draft_acfg)
+                d["active"], dcfg=self.draft_cfg, dacfg=self.draft_acfg,
+                mesh=self.mesh)
 
         use_top_k, use_top_p = self._sample_flags()
         dec_toks, first, toks, off, counts, self.caches = _mixed_step_jit(
@@ -1838,7 +1936,7 @@ class ServeEngine:
             pf_mask=jnp.asarray(pf_mask), pf_off=jnp.asarray(pf_off),
             cfg=self.cfg, acfg=self.acfg, use_top_k=use_top_k,
             use_top_p=use_top_p, k=k, paged=self._paged,
-            snaps=self._snaps)
+            snaps=self._snaps, mesh=self.mesh)
         self._stash(toks, off, counts)
         if k:
             self.mixed_steps += 1          # steps that fused both phases
@@ -1887,7 +1985,8 @@ class ServeEngine:
                         self.draft_params, self.draft_caches,
                         jnp.int32(b), jnp.asarray(s.toks[None]),
                         jnp.asarray(s.mask[None]), jnp.int32(s.npad),
-                        cfg=self.draft_cfg, acfg=self.draft_acfg)
+                        cfg=self.draft_cfg, acfg=self.draft_acfg,
+                        mesh=self.mesh)
         if k:
             self.decode_steps += k
             self.decode_tokens_during_admission += p["n_dec"] * k
@@ -1955,7 +2054,8 @@ class ServeEngine:
                     self.params, self.caches, *self._decode_args(),
                     jnp.asarray(drafts), cfg=self.cfg, acfg=self.acfg,
                     use_top_k=use_top_k, use_top_p=use_top_p,
-                    paged=self._paged, snaps=self._snaps))
+                    paged=self._paged, snaps=self._snaps,
+                    mesh=self.mesh))
         else:
             (target, n_emit, toks, off, counts, self.caches,
              self.draft_caches) = _spec_step_jit(
@@ -1964,7 +2064,7 @@ class ServeEngine:
                 cfg=self.cfg, acfg=self.acfg, dcfg=self.draft_cfg,
                 dacfg=self.draft_acfg, use_top_k=use_top_k,
                 use_top_p=use_top_p, k=k, paged=self._paged,
-                snaps=self._snaps)
+                snaps=self._snaps, mesh=self.mesh)
         self._stash(toks, off, counts)
         if self.pool is not None:
             self.pool.begin_window(self.slots[b].req.uid
@@ -2017,7 +2117,8 @@ class ServeEngine:
         dec_toks, toks, off, counts, self.caches = _step_jit(
             self.params, self.caches, *self._decode_args(),
             cfg=self.cfg, acfg=self.acfg,
-            use_top_k=use_top_k, use_top_p=use_top_p, k=k)
+            use_top_k=use_top_k, use_top_p=use_top_p, k=k,
+            mesh=self.mesh)
         self._stash(toks, off, counts)
         self.decode_steps += k
         self.step_token_log.append((len(decode_rows) * k, 0))

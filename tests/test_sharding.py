@@ -81,6 +81,96 @@ def test_shard_hint_noop_without_context():
     assert y is x
 
 
+def test_serve_param_specs_column_parallel():
+    """Serve table (``serve_rules``): every kernel shards its OUTPUT dim
+    on "model" (column-parallel — no FP contraction ever spans shards);
+    the router, input ranges, and the embedding table replicate; MoE
+    experts shard on the expert dim."""
+    mesh = make_abstract_mesh((1, 2), ("data", "model"))
+    params = {
+        "blocks": {
+            "attn": {"qkv": {"kernel": jnp.zeros((4, 8, 16)),
+                             "input_range": jnp.zeros((4, 1))},
+                     "o": {"kernel": jnp.zeros((4, 16, 8))}},
+            "ffn": {"router": {"kernel": jnp.zeros((4, 8, 4))},
+                    "gate_up": {"kernel": jnp.zeros((4, 2, 8, 32)),
+                                "input_range": jnp.zeros((4, 1))},
+                    "down": {"kernel": jnp.zeros((4, 2, 16, 8))}}},
+        "embed": {"tokens": jnp.zeros((256, 8))},
+        "lm_head": {"kernel": jnp.zeros((8, 256))},
+    }
+    with shd.activate(mesh, shd.serve_rules(mesh)):
+        specs = shd.param_spec_tree(params)
+    assert specs["blocks"]["attn"]["qkv"]["kernel"] == P(None, None, "model")
+    # column-parallel o (train shards its INPUT): output dim on "model"
+    assert specs["blocks"]["attn"]["o"]["kernel"] == P(None, None, "model")
+    assert specs["blocks"]["attn"]["qkv"]["input_range"] == P()
+    # MoE: expert-parallel kernels, replicated router (it feeds top-k)
+    assert specs["blocks"]["ffn"]["gate_up"]["kernel"] == \
+        P(None, "model", None, None)
+    assert specs["blocks"]["ffn"]["down"]["kernel"] == \
+        P(None, "model", None, None)
+    assert specs["blocks"]["ffn"]["router"]["kernel"] == P()
+    # embedding replicates (one-hot gather stays local); LM head is
+    # vocab-column-parallel
+    assert specs["embed"]["tokens"] == P()
+    assert specs["lm_head"]["kernel"] == P(None, "model")
+
+
+def test_serve_param_specs_moe_real_config():
+    """The serve table resolves on a REAL reduced MoE param tree (dbrx)
+    with no exceptions and shards every analog kernel's output dim."""
+    import dataclasses as dc
+
+    from repro.models import build
+    cfg = get_config("dbrx-132b").reduce()
+    cfg = dc.replace(cfg, capacity_factor=float(cfg.num_experts))
+    cfg, params, labels = build(cfg, jax.random.PRNGKey(0))
+    mesh = make_abstract_mesh((1, 2), ("data", "model"))
+    with shd.activate(mesh, shd.serve_rules(mesh)):
+        specs = shd.param_spec_tree(params)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    sharded = [p for p, s in flat if "model" in tuple(s)]
+    assert sharded, "no leaf sharded on the serve mesh"
+    for path, spec in flat:
+        keys = [str(getattr(k, "key", "")) for k in path]
+        if keys[-1] in ("scale", "bias") or "norm" in " ".join(keys):
+            assert spec == P(), (keys, spec)
+
+
+def test_cache_spec_tree_paged_and_snapshot_layouts():
+    """Paged pools shard kv_heads per device; non-divisible head counts,
+    block tables, cursors, and snapshot pools replicate. Under serve
+    rules SSM/conv state replicates (mamba computes replicated); under
+    training rules it shards heads/channels."""
+    mesh = make_abstract_mesh((1, 2), ("data", "model"))
+    caches = {
+        "kp": jnp.zeros((8, 16, 4, 16), jnp.int8),   # pool,bs,KV,hd
+        "vp": jnp.zeros((8, 16, 3, 16), jnp.int8),   # KV=3: not divisible
+        "ks": jnp.zeros((8, 16, 4)),
+        "k": jnp.zeros((2, 10, 4, 16)),
+        "ssm": jnp.zeros((2, 4, 8, 16)),
+        "conv": jnp.zeros((2, 3, 8)),
+        "block_tbl": jnp.zeros((2, 4), jnp.int32),
+        "snap_pool": jnp.zeros((4, 8, 16)),
+    }
+    with shd.activate(mesh, shd.serve_rules(mesh)):
+        specs = shd.cache_spec_tree(caches)
+    assert specs["kp"] == P(None, None, "model", None)
+    assert tuple(specs["vp"]) == (None,) * 4   # honest fallback: replicate
+    assert specs["ks"] == P(None, None, "model")
+    assert specs["k"] == P(None, None, "model", None)
+    # serve rules replicate SSM internals (bitwise-parity contract)
+    assert not any(tuple(specs["ssm"]))
+    assert not any(tuple(specs["conv"]))
+    assert specs["block_tbl"] == P()   # host-side, shard-agnostic
+    assert specs["snap_pool"] == P()   # snapshot pool rides along whole
+    with shd.activate(mesh, shd.default_rules(mesh)):
+        tspecs = shd.cache_spec_tree(caches)
+    assert tspecs["ssm"][1] == "model"
+    assert tspecs["conv"][2] == "model"
+
+
 def test_shrink_batch_plan():
     from repro.distributed.elastic import shrink_batch_plan
     assert shrink_batch_plan(256, 16, 8) == (32, 1)

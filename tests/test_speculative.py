@@ -370,3 +370,45 @@ def test_rewind_contract_under_pool_churn(seed):
         pool.release(uid)
         invariants()
     assert pool.num_live == 0
+
+
+# ---------------------------------------------------------------------------
+# packed-int4 drafter (PR 10 satellite): the once-at-construction packed
+# carriers must be a pure bandwidth optimization — bitwise-identical
+# drafts, hence bitwise-identical outputs AND acceptance counters
+# ---------------------------------------------------------------------------
+
+def _has_int4_carriers(tree):
+    """True if any params subtree carries a packed ``int4`` site."""
+    if not isinstance(tree, dict):
+        return False
+    return "int4" in tree or any(_has_int4_carriers(v)
+                                 for v in tree.values())
+
+
+def test_draft_packed_int4_bitwise_parity():
+    """The default drafter (packed-int4 carriers precomputed once at
+    engine construction) draws exactly the tokens of the unfused RTN-W4
+    drafter: same outputs, same accepted-token count — the gate that
+    lets the packed kernel ship as a perf-only change."""
+    cfg, params, labels = _build("granite-3-8b")
+    acfg = AnalogConfig(mode="off")
+    scfg = _scfg(paged=True, speculative=True, draft_k=3)
+    reqs = _reqs(cfg, temperature=0.0, max_new=8)
+
+    packed = ServeEngine(params, cfg, acfg, scfg)
+    assert _has_int4_carriers(packed.draft_params), \
+        "packed drafter carriers missing — satellite regressed to " \
+        "quantize-per-step"
+    out_p = packed.run(list(reqs))
+
+    unfused = ServeEngine(params, cfg, acfg, scfg,
+                          draft_acfg=dataclasses.replace(
+                              acfg, mode="rtn", weight_bits=4))
+    assert not _has_int4_carriers(unfused.draft_params)
+    out_u = unfused.run(list(reqs))
+
+    for uid in out_p:
+        assert np.array_equal(out_p[uid], out_u[uid]), uid
+    assert packed.spec_accepted == unfused.spec_accepted
+    assert packed.spec_proposed == unfused.spec_proposed

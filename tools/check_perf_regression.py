@@ -65,6 +65,15 @@ regressed by more than ``--threshold`` (default 15%):
   rejected explicitly, not absorbed into unbounded latency), and the
   base-rate (0.5x capacity) row's goodput-under-SLO ratio must be >=
   ``--slo-floor`` (default 0.5);
+* tensor-parallel invariants (when the fresh run carries the
+  ``tensor_parallel`` section, docs/distributed.md): the tp=2 host-device
+  run must be bitwise identical to tp=1 (``tp_parity`` — the hard
+  contract), the tp=2 mesh must actually be active (not silently gated
+  back to tp=1), tp=2 tokens/s must be >= ``--tp-floor`` (default 0.6)
+  times tp=1 — host "devices" are threads on the same cores, so the
+  floor catches pathological collective overhead rather than claiming a
+  speedup — and the ``bytes_per_device`` rows must show at least one big
+  config going from does-not-fit at tp=1 to fitting per device;
 * with ``--attn BENCH_attn.json``, the paged-attention microbench
   invariants too: paged decode cost must scale with live tokens and beat
   full-buffer scoring by >= ``--attn-floor`` (default 1.5x) at <= 25%
@@ -100,7 +109,8 @@ def check(baseline: dict, fresh: dict, threshold: float,
           prefix_hybrid_floor: float = 1.1,
           spec_floor: float = 1.0,
           drift_floor: float = 0.7,
-          slo_floor: float = 0.5) -> list[str]:
+          slo_floor: float = 0.5,
+          tp_floor: float = 0.6) -> list[str]:
     """Return a list of failure strings (empty = pass)."""
     fails = []
     metrics = {"speedup_tokens_per_s": threshold,
@@ -262,6 +272,38 @@ def check(baseline: dict, fresh: dict, threshold: float,
                              f", below the {slo_floor} floor (requests "
                              f"arriving at half the engine's measured "
                              f"capacity should mostly finish in time)")
+    tp = _get(fresh, "tensor_parallel")
+    if tp is not None:
+        ratio = tp.get("tp2_vs_tp1", 0.0)
+        print(f"[perf] tensor_parallel.tp2_vs_tp1: {ratio} "
+              f"(floor {tp_floor}, parity={tp.get('tp_parity')}, "
+              f"mesh={tp.get('mesh_active')})")
+        if "error" in tp:
+            fails.append(f"tensor_parallel bench failed to run: "
+                         f"{tp['error'][:500]}")
+        else:
+            if not tp.get("tp_parity"):
+                fails.append("tensor-parallel bitwise parity broken: "
+                             "tp=2 greedy decode diverged from tp=1")
+            if not tp.get("mesh_active"):
+                fails.append("tp=2 bench silently gated back to tp=1 "
+                             f"(gating: {tp.get('tp2_gating')})")
+            if ratio < tp_floor:
+                fails.append(f"tp=2 throughput ratio {ratio} below the "
+                             f"{tp_floor} floor over tp=1 (pathological "
+                             f"collective overhead)")
+        rows = tp.get("bytes_per_device", [])
+        unlocked = [r["arch"] for r in rows
+                    if not r.get("fits_80gib_tp1") and r.get("fits_80gib")]
+        print(f"[perf] tensor_parallel.bytes_per_device: "
+              f"{len(rows)} rows, newly fitting: {unlocked}")
+        if not rows:
+            fails.append("tensor_parallel section missing its "
+                         "bytes_per_device rows")
+        elif not unlocked:
+            fails.append("no big config goes from does-not-fit at tp=1 "
+                         "to fitting per device — the capacity story "
+                         "regressed")
     fp = _get(fresh, "prefix_family_parity")
     if fp is not None:
         print(f"[perf] prefix_family_parity: {fp}")
@@ -331,6 +373,10 @@ def main() -> int:
     ap.add_argument("--slo-floor", type=float, default=0.5,
                     help="min goodput-under-SLO ratio of the open-loop "
                          "sweep's base-rate (0.5x capacity) row")
+    ap.add_argument("--tp-floor", type=float, default=0.6,
+                    help="min tp=2 / tp=1 tokens/s ratio on the "
+                         "host-device mesh (a no-pathology floor: host "
+                         "devices are threads, not extra FLOPs)")
     ap.add_argument("--attn", default=None,
                     help="fresh BENCH_attn.json to gate the paged "
                          "attention invariants on")
@@ -348,7 +394,7 @@ def main() -> int:
     fails = check(baseline, fresh, args.threshold, args.abs_threshold,
                   args.paged_floor, args.prefix_floor,
                   args.prefix_hybrid_floor, args.spec_floor,
-                  args.drift_floor, args.slo_floor)
+                  args.drift_floor, args.slo_floor, args.tp_floor)
     if args.attn:
         with open(args.attn) as f:
             fails += check_attn(json.load(f), args.attn_floor,
